@@ -1,0 +1,24 @@
+"""Shared benchmark utilities: timing + CSV emission."""
+import time
+from typing import Callable
+
+import jax
+
+
+def time_jitted(fn: Callable, *args, iters: int = 10, warmup: int = 2):
+    """Median wall time of a jitted callable (seconds)."""
+    for _ in range(warmup):
+        out = fn(*args)
+        jax.block_until_ready(out)
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        jax.block_until_ready(out)
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return times[len(times) // 2]
+
+
+def emit(name: str, us_per_call: float, derived: str = "") -> None:
+    print(f"{name},{us_per_call:.1f},{derived}")

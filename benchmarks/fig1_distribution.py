@@ -1,0 +1,27 @@
+"""Fig. 1 reproduction: per-model weight-quantization distribution.
+
+The paper's Figure 1 shows what fraction of each LLM's weights sit in each
+BFP variant under llama.cpp's mixed quantization. We reproduce it from our
+policy presets over the actual tensor shapes of the three paper models."""
+from repro.configs.base import get_arch
+from repro.core import policy as POL
+from benchmarks.common import emit
+from benchmarks.shapes import model_matmuls
+
+
+def run() -> None:
+    for arch, polname in [("gpt2-paper", "paper_gpt2_mix"),
+                          ("tinyllama-1.1b", "paper_llama_mix"),
+                          ("mobilellama-1.4b", "paper_llama_mix")]:
+        cfg = get_arch(arch)
+        mms = model_matmuls(cfg, include_embedding=True)
+        pol = POL.get_policy(polname)
+        summ = POL.summarize(pol, mms)
+        total = sum(summ["params"].values())
+        dist = {k: 100.0 * v / total for k, v in summ["params"].items()}
+        derived = " ".join(f"{k}={v:.1f}%" for k, v in sorted(dist.items()))
+        emit(f"fig1_distribution_{arch}", 0.0, derived)
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,57 @@
+"""Kernel microbenchmark: fused BFP matmul roofline terms per
+(variant x shape), plus interpret-mode correctness spot check and measured
+CPU wall time of the XLA dataflow."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.formats import get_format
+from repro.core.quantize import quantize
+from repro.kernels import ops, ref
+from repro.kernels.bfp_matmul import bfp_matmul_pallas
+from benchmarks.common import emit, time_jitted
+
+PEAK = 197e12
+HBM = 819e9
+
+SHAPES = [
+    ("decode", 8, 2048, 8192),
+    ("prefill", 2048, 2048, 8192),
+    ("train_fwd", 8192, 8192, 29568),
+]
+
+
+def run() -> None:
+    for v in ("q2_k", "q3_k", "q4_k", "q6_k"):
+        fmt = get_format(v)
+        for name, M, K, N in SHAPES:
+            flops = 2 * M * K * N
+            w_bytes = fmt.nbytes(K, N)
+            io = M * K * 2 + M * N * 4
+            t_c = flops / PEAK
+            t_m = (w_bytes + io) / HBM
+            t_m_bf16 = (K * N * 2 + io) / HBM
+            bound = "compute" if t_c > t_m else "memory"
+            emit(f"kernel_{v}_{name}", max(t_c, t_m) * 1e6,
+                 f"v5e_{bound}-bound mem_vs_bf16={t_m_bf16/t_m:.2f}x "
+                 f"ai={flops/(w_bytes+io):.0f}")
+
+    # correctness spot check (interpret kernel vs oracle) + CPU wall time
+    M, K, N = 16, 1024, 512
+    x = jax.random.normal(jax.random.PRNGKey(0), (M, K))
+    w = jax.random.normal(jax.random.PRNGKey(1), (K, N)) * 0.1
+    for v in ("q2_k", "q3_k"):
+        t = quantize(v, w)
+        o_ref = np.asarray(ref.matmul_ref(x, t))
+        o_pal = np.asarray(bfp_matmul_pallas(
+            x, t, interpret=True, compute_dtype=jnp.float32,
+            out_dtype=jnp.float32, block_m=16, block_n=128, block_k=256))
+        err = np.abs(o_pal - o_ref).max() / (np.abs(o_ref).max() + 1e-9)
+        f = jax.jit(lambda xx, tt: ops.bfp_matmul(xx, tt, impl="xla"))
+        wall = time_jitted(f, x, t)
+        emit(f"kernel_validate_{v}", wall * 1e6,
+             f"pallas_vs_ref_rel_err={err:.2e}")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,31 @@
+"""Table II analogue: the paper reports FPGA resource utilization (BRAM/
+DSP/FF/LUT). The TPU kernel's equivalents are VMEM tile footprint, grid
+occupancy, and arithmetic intensity per variant."""
+import jax.numpy as jnp
+
+from repro.core.formats import get_format, WEIGHT_VARIANTS
+from repro.kernels.bfp_matmul import vmem_bytes
+from benchmarks.common import emit
+
+BM, BN, BK = 128, 256, 512
+VMEM_LIMIT = 16 * 2**20          # v5e per-core VMEM
+
+
+def run() -> None:
+    for v in WEIGHT_VARIANTS:
+        fmt = get_format(v)
+        b = vmem_bytes(v, BM, BN, BK)
+        # arithmetic intensity of the fused kernel: flops per HBM byte
+        flops = 2 * BM * BN * BK
+        hbm = (b["x_tile"] + b["w_packed_tile"]
+               + BM * BN * 4 / (1))           # out written once per tile
+        emit(f"table2_kernel_{v}", 0.0,
+             f"vmem_tile={b['total']/2**10:.0f}KiB "
+             f"({100*b['total']/VMEM_LIMIT:.1f}% of VMEM) "
+             f"packed_w={b['w_packed_tile']/2**10:.0f}KiB "
+             f"bits/w={fmt.bits_per_weight} "
+             f"arith_intensity={flops/hbm:.0f}flops/B")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,39 @@
+"""Table III reproduction: per-model Q2_K/Q3_K MatMul layer counts,
+parameter counts and quantized model sizes vs the paper's numbers."""
+from repro.configs.base import get_arch
+from repro.core import policy as POL
+from benchmarks.common import emit
+from benchmarks.shapes import model_matmuls
+
+PAPER = {  # arch: (q2 layers, q3 layers, params, size MB)
+    "gpt2-paper": (25, 24, 163e6, 77),
+    "tinyllama-1.1b": (45, 110, 1.1e9, 460),
+    "mobilellama-1.4b": (49, 120, 1.4e9, 560),
+}
+
+
+def run() -> None:
+    for arch, (q2, q3, nparams, size_mb) in PAPER.items():
+        cfg = get_arch(arch)
+        pol = POL.get_policy("paper_gpt2_mix" if arch == "gpt2-paper"
+                             else "paper_llama_mix")
+        mms = model_matmuls(cfg)
+        summ = POL.summarize(pol, mms)
+        emb = [("wte", cfg.d_model, cfg.vocab_size)]
+        extra = ([("wpe", cfg.max_position * cfg.d_model)]
+                 if cfg.pos_emb == "learned" else [])
+        summ_sz = POL.summarize(pol, mms + emb, extra_f16=extra)
+        got_mb = summ_sz["size_bytes_gguf"] / 1e6
+        got_mb_ours = summ_sz["size_bytes"] / 1e6
+        total_params = sum(summ_sz["params"].values()) + sum(
+            n for _, n in extra)
+        emit(f"table3_{arch}", 0.0,
+             f"q2_layers={summ['counts'].get('q2_k', 0)}/{q2} "
+             f"q3_layers={summ['counts'].get('q3_k', 0)}/{q3} "
+             f"params={total_params/1e6:.0f}M/{nparams/1e6:.0f}M "
+             f"size={got_mb:.0f}MB/{size_mb}MB(paper) "
+             f"size_soa={got_mb_ours:.0f}MB")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,88 @@
+"""Table IV analogue: end-to-end inference speedup of the fused BFP path
+over the dequantize-materialize baseline.
+
+The paper compares Arm-NEON CPU execution of BFP models against its FPGA
+accelerator (1.17/1.51/1.53x; avg 1.4x). The TPU analogue compares, per
+paper model, decode-phase roofline step time with:
+
+  baseline  -- XLA dequantize-then-matmul dataflow: HBM moves the packed
+               weights AND the materialized bf16 weights (write + read)
+  f-bfq     -- fused Pallas kernel dataflow: HBM moves packed weights only
+
+both at the paper's serving shape (batch 1, short prompt). Decode is
+memory-bound, so the ratio of weight-traffic bytes is the speedup. We also
+report *measured CPU wall-clock* of both XLA paths (fp32 materialized vs
+bf16 fused-cast) on a small matmul slice for a ground-truth direction.
+"""
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import get_arch
+from repro.core import policy as POL
+from repro.core.quantize import quantize, dequantize
+from benchmarks.common import emit, time_jitted
+from benchmarks.shapes import model_matmuls
+
+PAPER_TOKS = {  # model: (paper CPU tok/s, paper FBFQ tok/s, paper speedup)
+    "gpt2-paper": (8.31, 12.18, 1.17),
+    "tinyllama-1.1b": (0.69, 1.44, 1.51),   # paper lists MobileLLaMA here
+    "mobilellama-1.4b": (0.86, 1.82, 1.53),
+}
+
+HBM_BW = 819e9
+
+
+def weight_traffic(cfg, polname):
+    pol = POL.get_policy(polname)
+    packed = 0.0
+    bf16 = 0.0
+    for path, K, N in model_matmuls(cfg, include_embedding=False):
+        v = pol.variant_for(path, K, N)
+        bits = 16 if v is None else POL.F.get_format(v).bits_per_weight
+        packed += K * N * bits / 8.0
+        bf16 += K * N * 2.0
+    return packed, bf16
+
+
+def run() -> None:
+    for arch, (cpu_tps, fbfq_tps, paper_sp) in PAPER_TOKS.items():
+        cfg = get_arch(arch)
+        polname = ("paper_gpt2_mix" if arch == "gpt2-paper"
+                   else "paper_llama_mix")
+        packed, bf16 = weight_traffic(cfg, polname)
+        # decode step weight traffic (batch small: weights dominate)
+        t_fused = packed / HBM_BW
+        t_baseline = (packed + 2 * bf16) / HBM_BW   # write + read bf16
+        speedup = t_baseline / t_fused
+        tok_s_fused = 1.0 / t_fused
+        tok_s_base = 1.0 / t_baseline
+        emit(f"table4_{arch}", t_fused * 1e6,
+             f"v5e_decode_tok/s base={tok_s_base:.0f} fbfq={tok_s_fused:.0f} "
+             f"speedup={speedup:.2f}x "
+             f"(paper: {cpu_tps}->{fbfq_tps} = {paper_sp}x)")
+
+    # measured CPU wall-clock direction check on one layer-sized matmul
+    K, N, M = 2048, 8192, 8
+    w = jax.random.normal(jax.random.PRNGKey(0), (K, N)) * 0.1
+    t = quantize("q3_k", w)
+    x = jax.random.normal(jax.random.PRNGKey(1), (M, K))
+
+    @jax.jit
+    def baseline(x, t):
+        wf = dequantize(t, dtype=jnp.float32)    # materialize fp32
+        return x @ wf
+
+    @jax.jit
+    def fused(x, t):
+        wb = dequantize(t, dtype=jnp.bfloat16)   # fused-cast dataflow
+        return (x.astype(jnp.bfloat16) @ wb).astype(jnp.float32)
+
+    tb = time_jitted(baseline, x, t)
+    tf = time_jitted(fused, x, t)
+    emit("table4_cpu_wallclock_matmul", tf * 1e6,
+         f"baseline_us={tb*1e6:.0f} fused_us={tf*1e6:.0f} "
+         f"speedup={tb/tf:.2f}x (CPU direction check)")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,30 @@
+"""Explore mixed-quantization policies: quality-vs-size tradeoff across the
+BFP variant ladder (paper Fig. 1 motivation + future-work variants).
+
+  PYTHONPATH=src python examples/mixed_quant_policy.py
+"""
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import get_arch
+from repro.core.policy import get_policy, pure
+from repro.core.qlinear import quantize_params, quantized_param_bytes
+from repro.models import transformer as T
+
+cfg = get_arch("llama3.2-1b", reduced=True)
+params = T.init_params(cfg, jax.random.PRNGKey(0))
+toks = jax.random.randint(jax.random.PRNGKey(1), (2, 32), 0,
+                          cfg.vocab_size)
+logits_fp, _, _ = T.forward_seq(params, cfg, tokens=toks)
+p_fp = jax.nn.softmax(logits_fp, axis=-1)
+
+print(f"{'policy':24s} {'MiB':>8s} {'KL(fp||q)':>10s}")
+for pol in (pure("q2_k"), pure("q3_k"), pure("q4_k"), pure("q6_k"),
+            get_policy("paper_llama_mix"), get_policy("extended_mix")):
+    qp, _ = quantize_params(params, pol)
+    sizes = quantized_param_bytes(qp)
+    logits_q, _, _ = T.forward_seq(qp, cfg, tokens=toks)
+    logp_q = jax.nn.log_softmax(logits_q, axis=-1)
+    kl = float(jnp.sum(p_fp * (jnp.log(p_fp + 1e-9) - logp_q), axis=-1)
+               .mean())
+    print(f"{pol.name:24s} {sizes['total']/2**20:8.1f} {kl:10.4f}")

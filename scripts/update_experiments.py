@@ -1,0 +1,46 @@
+#!/usr/bin/env python
+"""Regenerate the generated tables inside EXPERIMENTS.md from results/*.
+
+  PYTHONPATH=src python scripts/update_experiments.py
+"""
+import json
+import os
+import re
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.launch.summarize import load, dryrun_table, roofline_table  # noqa
+
+ROOT = os.path.join(os.path.dirname(__file__), "..")
+
+
+def replace_block(text: str, marker: str, content: str) -> str:
+    """Replace '<!-- marker -->' (and any previously generated block that
+    follows it up to the next '## ' or '### ' heading) with content."""
+    pat = re.compile(rf"(<!-- {marker} -->)(.*?)(?=\n##|\n###|\Z)",
+                     re.DOTALL)
+    return pat.sub(lambda m: f"<!-- {marker} -->\n{content}\n", text)
+
+
+def main() -> None:
+    path = os.path.join(ROOT, "EXPERIMENTS.md")
+    text = open(path).read()
+
+    single = os.path.join(ROOT, "results", "dryrun_single")
+    multi = os.path.join(ROOT, "results", "dryrun_multi")
+    recs = []
+    if os.path.isdir(single):
+        recs += load(single)
+    if os.path.isdir(multi):
+        recs += load(multi)
+    if recs:
+        text = replace_block(text, "DRYRUN_TABLE", dryrun_table(recs))
+        text = replace_block(text, "ROOFLINE_TABLE", roofline_table(recs))
+
+    open(path, "w").write(text)
+    print(f"updated {path} with {len(recs)} records")
+
+
+if __name__ == "__main__":
+    main()

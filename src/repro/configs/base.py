@@ -1,0 +1,184 @@
+"""Model/config system: architecture descriptors, input shapes, registry.
+
+Every assigned architecture is a ``ModelConfig`` built by its module in
+``repro/configs/<arch>.py`` and registered under its ``--arch`` id. Each
+arch also provides ``reduced()`` (a same-family tiny config for CPU smoke
+tests) and shares the global SHAPES table (the assigned input-shape set).
+"""
+from __future__ import annotations
+
+import dataclasses
+import importlib
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                     # dense | moe | ssm | hybrid | vlm | audio | gpt2
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    d_head: int = 0                 # 0 -> d_model // n_heads
+
+    # attention
+    rope_theta: float = 1e6
+    qk_norm: bool = False
+    sliding_window: Optional[int] = None
+    pos_emb: str = "rope"           # rope | mrope | sincos | learned
+    mrope_sections: Tuple[int, int, int] = (16, 24, 24)
+    attn_logit_softcap: Optional[float] = None
+
+    # block structure
+    norm_type: str = "rmsnorm"      # rmsnorm | layernorm
+    act: str = "swiglu"             # swiglu | gelu
+    norm_eps: float = 1e-5
+    tie_embeddings: bool = False
+    fused_qkv: bool = False         # gpt2-style c_attn
+
+    # MoE
+    n_experts: int = 0
+    n_experts_active: int = 0
+    moe_d_ff: int = 0
+    capacity_factor: float = 1.25
+
+    # SSM (mamba2 / zamba2)
+    ssm_state: int = 0
+    ssm_head_dim: int = 64
+    ssm_expand: int = 2
+    ssm_chunk: int = 128
+    ssm_conv_width: int = 4
+    ssm_groups: int = 1
+
+    # hybrid: shared attention block applied every k SSM layers (zamba2)
+    hybrid_attn_every: int = 0
+    hybrid_attn_d_ff: int = 0
+
+    # frontend
+    embed_input: bool = True        # False: input_specs provides embeddings
+    max_position: int = 1 << 20
+
+    # runtime knobs
+    dtype: str = "bfloat16"
+    attn_impl: str = "auto"         # naive | blockwise | auto
+    attn_q_chunk: int = 1024
+    attn_kv_chunk: int = 1024
+    kernel_impl: str = "auto"       # pallas | xla | auto (see kernels/ops.py)
+    remat: bool = True
+    scan_unroll: bool = False       # unroll layer scans (cost probes)
+    ssd_unroll: bool = True         # also unroll SSD chunk scans when
+                                    # scan_unroll (probes disable + correct
+                                    # analytically: compile-time bound)
+    loss_chunk: int = 2048          # tokens/chunk for vocab-sharded CE; 0=off
+    kv_cache_quant: bool = False    # int8 KV cache (per-token-head scales)
+    # sub-quadratic attention available? (gates the long_500k cell)
+    subquadratic: bool = False
+
+    def __post_init__(self):
+        if self.d_head == 0 and self.n_heads:
+            object.__setattr__(self, "d_head", self.d_model // self.n_heads)
+
+    @property
+    def is_attention_free(self) -> bool:
+        return self.family == "ssm"
+
+    def replace(self, **kw) -> "ModelConfig":
+        return dataclasses.replace(self, **kw)
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeConfig:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str                       # train | prefill | decode
+
+
+SHAPES: Dict[str, ShapeConfig] = {
+    "train_4k": ShapeConfig("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeConfig("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeConfig("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeConfig("long_500k", 524288, 1, "decode"),
+}
+
+ARCH_IDS = (
+    "qwen2-vl-72b", "llama3.2-1b", "qwen3-1.7b", "phi3-mini-3.8b",
+    "h2o-danube-1.8b", "granite-moe-3b-a800m", "olmoe-1b-7b",
+    "musicgen-large", "zamba2-1.2b", "mamba2-2.7b",
+    # the paper's own evaluation models (Table III/IV)
+    "gpt2-paper", "tinyllama-1.1b", "mobilellama-1.4b",
+)
+
+_MODULE_FOR = {i: i.replace("-", "_").replace(".", "_") for i in ARCH_IDS}
+_REGISTRY: Dict[str, "ArchSpec"] = {}
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchSpec:
+    config: ModelConfig
+    reduced: ModelConfig            # CPU smoke-test config, same family
+
+
+def register(arch_id: str, config: ModelConfig, reduced: ModelConfig):
+    _REGISTRY[arch_id] = ArchSpec(config, reduced)
+
+
+def get_arch(arch_id: str, reduced: bool = False) -> ModelConfig:
+    if arch_id not in _REGISTRY:
+        mod = _MODULE_FOR.get(arch_id)
+        if mod is None:
+            raise KeyError(f"unknown arch {arch_id!r}; known: {ARCH_IDS}")
+        importlib.import_module(f"repro.configs.{mod}")
+    spec = _REGISTRY[arch_id]
+    return spec.reduced if reduced else spec.config
+
+
+def shape_applicable(cfg: ModelConfig, shape: ShapeConfig) -> Tuple[bool, str]:
+    """Whether an (arch x shape) cell runs; see DESIGN.md §4."""
+    if shape.name == "long_500k" and not cfg.subquadratic:
+        return False, ("pure full-attention arch: 524k-token decode needs "
+                       "sub-quadratic attention (skip per DESIGN.md §4)")
+    return True, ""
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig,
+                cache_len: Optional[int] = None) -> Dict[str, jax.ShapeDtypeStruct]:
+    """ShapeDtypeStruct stand-ins for every model input of this cell.
+
+    Modality frontends ([vlm]/[audio]) are stubs: precomputed patch/frame
+    embeddings replace the token ids, per the assignment brief.
+    """
+    B, S = shape.global_batch, shape.seq_len
+    dt = jnp.dtype(cfg.dtype)
+    specs: Dict[str, jax.ShapeDtypeStruct] = {}
+    if shape.kind == "train":
+        if cfg.embed_input:
+            specs["tokens"] = jax.ShapeDtypeStruct((B, S), jnp.int32)
+        else:
+            specs["embeds"] = jax.ShapeDtypeStruct((B, S, cfg.d_model), dt)
+        specs["labels"] = jax.ShapeDtypeStruct((B, S), jnp.int32)
+        if cfg.pos_emb == "mrope":
+            specs["positions"] = jax.ShapeDtypeStruct((3, B, S), jnp.int32)
+    elif shape.kind == "prefill":
+        if cfg.embed_input:
+            specs["tokens"] = jax.ShapeDtypeStruct((B, S), jnp.int32)
+        else:
+            specs["embeds"] = jax.ShapeDtypeStruct((B, S, cfg.d_model), dt)
+        if cfg.pos_emb == "mrope":
+            specs["positions"] = jax.ShapeDtypeStruct((3, B, S), jnp.int32)
+    elif shape.kind == "decode":
+        # one new token against a cache of seq_len
+        if cfg.embed_input:
+            specs["tokens"] = jax.ShapeDtypeStruct((B,), jnp.int32)
+        else:
+            specs["embeds"] = jax.ShapeDtypeStruct((B, cfg.d_model), dt)
+        specs["position"] = jax.ShapeDtypeStruct((B,), jnp.int32)
+    else:
+        raise ValueError(shape.kind)
+    return specs

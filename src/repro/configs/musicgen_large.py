@@ -1,0 +1,26 @@
+"""musicgen-large [audio]: 48L d=2048 32H (kv=32) d_ff=8192 vocab=2048.
+
+Decoder-only transformer over EnCodec tokens [arXiv:2306.05284]. The
+EnCodec frontend is a stub per the assignment: ``input_specs`` provides
+precomputed frame embeddings (B, S, d); the backbone is a LayerNorm/GELU
+decoder with sinusoidal positions and a 2048-way codec head."""
+from repro.configs.base import ModelConfig, register
+
+CONFIG = ModelConfig(
+    name="musicgen-large", family="audio",
+    n_layers=48, d_model=2048, n_heads=32, n_kv_heads=32,
+    d_ff=8192, vocab_size=2048,
+    norm_type="layernorm", act="gelu", pos_emb="sincos",
+    embed_input=False,          # stub frame embeddings
+    subquadratic=False,
+)
+
+REDUCED = ModelConfig(
+    name="musicgen-large-reduced", family="audio",
+    n_layers=2, d_model=256, n_heads=4, n_kv_heads=4,
+    d_ff=512, vocab_size=256,
+    norm_type="layernorm", act="gelu", pos_emb="sincos",
+    embed_input=False, attn_impl="naive", remat=False,
+)
+
+register("musicgen-large", CONFIG, REDUCED)

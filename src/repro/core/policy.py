@@ -1,0 +1,154 @@
+"""Per-tensor mixed-quantization policies (the paper's Fig. 1 motivation).
+
+llama.cpp quantizes models with *mixed* BFP variants across tensors -- every
+model in the paper contains both Q2_K and Q3_K MatMul layers (Table III).
+A ``QuantPolicy`` is an ordered list of (glob-ish pattern -> variant) rules
+applied to parameter paths (e.g. ``layers/attn/wv``); first match wins.
+
+Presets below reproduce the paper's Table III layer counts exactly and its
+model sizes to within ~2% (validated in benchmarks/table3 + tests):
+
+  GPT2        25x Q2_K, 24x Q3_K,  163M params,  77 MB
+  TinyLlama   45x Q2_K, 110x Q3_K, 1.1B params, 460 MB
+  MobileLLaMA 49x Q2_K, 120x Q3_K, 1.4B params, 560 MB
+"""
+from __future__ import annotations
+
+import dataclasses
+import fnmatch
+from typing import List, Optional, Sequence, Tuple
+
+from repro.core import formats as F
+
+# tensors smaller than this along K (or 1-D tensors) stay unquantized,
+# mirroring llama.cpp (norm weights / biases / tiny projections stay f32)
+MIN_QUANT_K = 256
+MIN_QUANT_N = 32
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantPolicy:
+    name: str
+    rules: Tuple[Tuple[str, str], ...]   # (pattern, variant|"none")
+    default: str = "q3_k"
+
+    def variant_for(self, path: str, K: int, N: int) -> Optional[str]:
+        """Variant for parameter at `path` with logical shape (K, N); None
+        means keep unquantized."""
+        if K < MIN_QUANT_K and K % 32 != 0:
+            return None
+        if N < MIN_QUANT_N:
+            return None
+        chosen = self.default
+        for pat, variant in self.rules:
+            if fnmatch.fnmatch(path, pat):
+                chosen = variant
+                break
+        if chosen == "none":
+            return None
+        return F.pick_fallback(chosen, K)
+
+
+def make_policy(name: str, rules: Sequence[Tuple[str, str]],
+                default: str = "q3_k") -> QuantPolicy:
+    return QuantPolicy(name, tuple(rules), default)
+
+
+def pure(variant: str) -> QuantPolicy:
+    """Everything at one variant (embeddings/head included)."""
+    return QuantPolicy(f"pure_{variant}", (), default=variant)
+
+
+# --------------------------------------------------------------------------
+# Paper-model presets (Table III reproduction).
+#
+# llama-family (TinyLlama / MobileLLaMA): per block 7 matmuls
+#   {wq, wk, wv, wo, w_gate, w_up, w_down} + lm_head:
+#   Q2_K on {wk, wv, lm_head} -> 2*L + 1 layers; Q3_K on the other 5 -> 5*L.
+#   token embedding Q2_K (not a MatMul layer; uncounted, as in the paper).
+# --------------------------------------------------------------------------
+
+PAPER_LLAMA_MIX = make_policy("paper_llama_mix", (
+    ("*attn/wk", "q2_k"),
+    ("*attn/wv", "q2_k"),
+    ("*lm_head*", "q2_k"),
+    ("*embed*", "q2_k"),
+), default="q3_k")
+
+# GPT2: per block 4 matmuls {c_attn, c_proj, mlp_fc, mlp_proj} + lm_head:
+#   Q2_K on {c_attn, mlp_fc, lm_head} -> 2*L + 1; Q3_K on the rest -> 2*L.
+#   wte at Q6_K, wpe kept fp16 (llama.cpp keeps it high precision).
+PAPER_GPT2_MIX = make_policy("paper_gpt2_mix", (
+    ("*attn/c_attn", "q2_k"),
+    ("*mlp/c_fc", "q2_k"),
+    ("*lm_head*", "q2_k"),
+    ("*wte*", "q6_k"),
+    ("*wpe*", "none"),
+), default="q3_k")
+
+# Default serving policy for the assigned architectures: the paper's two
+# native variants, distributed llama.cpp-style (K/V low-bit, rest Q3_K).
+DEFAULT_SERVE_MIX = make_policy("default_serve_mix", (
+    ("*attn/wk", "q2_k"),
+    ("*attn/wv", "q2_k"),
+    ("*lm_head*", "q2_k"),
+    ("*embed*", "q2_k"),
+    # SSM internals: conv/dt/A/D tensors are tiny -> unquantized
+    ("*ssm/dt*", "none"),
+    ("*ssm/A*", "none"),
+    ("*ssm/D*", "none"),
+    ("*conv*", "none"),
+    ("*norm*", "none"),
+), default="q3_k")
+
+# Beyond-paper policy exercising the extended variant set (paper future work)
+EXTENDED_MIX = make_policy("extended_mix", (
+    ("*attn/wv", "q4_k"),
+    ("*mlp/w_down", "q4_k"),
+    ("*lm_head*", "q6_k"),
+    ("*embed*", "q4_k"),
+    ("*norm*", "none"),
+), default="q3_k")
+
+POLICIES = {
+    p.name: p for p in (
+        PAPER_LLAMA_MIX, PAPER_GPT2_MIX, DEFAULT_SERVE_MIX, EXTENDED_MIX,
+        pure("q2_k"), pure("q3_k"), pure("q4_k"), pure("q6_k"))
+}
+
+
+def get_policy(name: str) -> QuantPolicy:
+    return POLICIES[name]
+
+
+# --------------------------------------------------------------------------
+# accounting helpers (Fig. 1 / Table III reproduction)
+# --------------------------------------------------------------------------
+
+def summarize(policy: QuantPolicy,
+              matmuls: Sequence[Tuple[str, int, int]],
+              extra_f16: Sequence[Tuple[str, int]] = ()):
+    """Given MatMul tensors [(path, K, N)] and non-matmul fp16 tensors
+    [(path, numel)], return per-variant layer counts, parameter counts and
+    total size in bytes (both our-layout and gguf-faithful bits).
+    """
+    counts, params = {}, {}
+    size_ours = 0.0
+    size_gguf = 0.0
+    for path, K, N in matmuls:
+        v = policy.variant_for(path, K, N)
+        key = v or "f16"
+        counts[key] = counts.get(key, 0) + 1
+        params[key] = params.get(key, 0) + K * N
+        if v is None:
+            size_ours += K * N * 2
+            size_gguf += K * N * 2
+        else:
+            fmt = F.get_format(v)
+            size_ours += K * N * fmt.bits_per_weight / 8.0
+            size_gguf += K * N * fmt.bits_per_weight_gguf / 8.0
+    for path, numel in extra_f16:
+        size_ours += numel * 2
+        size_gguf += numel * 2
+    return dict(counts=counts, params=params,
+                size_bytes=int(size_ours), size_bytes_gguf=int(size_gguf))

@@ -1,0 +1,141 @@
+"""Serve-time parameter quantization: bf16/f32 params -> packed QTensors.
+
+``quantize_params`` walks the parameter pytree, asks the ``QuantPolicy``
+for each matmul weight's variant (mixed per-layer/per-tensor -- the paper's
+deployment reality), and packs it. Stacked leading dims (scan layers,
+experts) are handled by vmapping the quantizer, except MoE expert stacks
+which pack along E*K into a single QTensor so the expert einsum can
+dequantize once (see models/moe.py).
+
+This module is the software analogue of the paper's F-BFQ *driver*
+configuration step: it decides, per tensor, which mode (weight_type
+register) the DSBP will run in.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import quantize as Q
+from repro.core.policy import QuantPolicy
+
+# parameter-path fragments that are never quantized at serve time
+_NEVER = ("ln", "norm", "wpe", "b_", "bias", "router", "conv", "A_log", "D",
+          "dt_bias", "pos", "wte")
+
+
+def _is_quantizable_path(path: str) -> bool:
+    parts = path.split("/")
+    leaf = parts[-1]
+    for frag in _NEVER:
+        if leaf == frag or leaf.startswith(frag):
+            return False
+    if any(p.startswith("ln") or p == "norm" for p in parts[:-1]):
+        return False
+    return True
+
+
+def _flatten_paths(tree, prefix=""):
+    out = []
+    if isinstance(tree, dict):
+        for k in sorted(tree):
+            out.extend(_flatten_paths(tree[k], f"{prefix}{k}/"))
+    else:
+        out.append((prefix[:-1], tree))
+    return out
+
+
+def quantize_params(params: Dict[str, Any], policy: QuantPolicy,
+                    expert_stack_paths: Tuple[str, ...] = ("moe/w_",)):
+    """Returns (qparams, report). report: path -> variant|None."""
+    report: Dict[str, Optional[str]] = {}
+
+    def walk(node, prefix=""):
+        if isinstance(node, dict):
+            return {k: walk(v, f"{prefix}{k}/") for k, v in node.items()}
+        path = prefix[:-1]
+        arr = node
+        if arr.ndim < 2 or not _is_quantizable_path(path):
+            report[path] = None
+            return arr
+        K, N = arr.shape[-2], arr.shape[-1]
+        is_expert = any(f in path for f in expert_stack_paths)
+        variant = policy.variant_for(path, K, N)
+        if variant is None:
+            report[path] = None
+            return arr
+        report[path] = variant
+        qfn = Q._QUANTIZE[variant]
+        if arr.ndim == 2:
+            return qfn(arr)
+        if is_expert and arr.ndim >= 3:
+            # pack experts along E*K: (L, E, K, N) -> per-layer (E*K, N)
+            lead = arr.shape[:-3]
+            E = arr.shape[-3]
+            flat = arr.reshape(lead + (E * K, N))
+            f = qfn
+            for _ in lead:
+                f = jax.vmap(f)
+            return f(flat)
+        # stacked layers: vmap over leading dims
+        f = qfn
+        for _ in arr.shape[:-2]:
+            f = jax.vmap(f)
+        return f(arr)
+
+    qparams = walk(params)
+    return qparams, report
+
+
+def quantized_param_bytes(qparams) -> Dict[str, int]:
+    """HBM footprint by leaf kind (packed vs residual fp)."""
+    packed = unpacked = 0
+    for leaf in jax.tree.leaves(
+            qparams, is_leaf=lambda x: isinstance(x, Q.QTensor)):
+        if isinstance(leaf, Q.QTensor):
+            for a in leaf.data.values():
+                import numpy as np
+                packed += int(np.prod(a.shape)) * jnp.dtype(a.dtype).itemsize
+        else:
+            import numpy as np
+            unpacked += int(np.prod(leaf.shape)) * jnp.dtype(leaf.dtype).itemsize
+    return dict(packed=packed, unpacked=unpacked, total=packed + unpacked)
+
+
+def spec_like_quantized(params_spec: Dict[str, Any], policy: QuantPolicy,
+                        expert_stack_paths: Tuple[str, ...] = ("moe/w_",)):
+    """ShapeDtypeStruct version of quantize_params for dry-run lowering:
+    walks a pytree of ShapeDtypeStructs and replaces quantizable leaves with
+    packed-spec QTensors (no allocation)."""
+    from repro.core.formats import get_format, pick_fallback
+
+    def walk(node, prefix=""):
+        if isinstance(node, dict):
+            return {k: walk(v, f"{prefix}{k}/") for k, v in node.items()}
+        path = prefix[:-1]
+        arr = node
+        if len(arr.shape) < 2 or not _is_quantizable_path(path):
+            return arr
+        K, N = arr.shape[-2], arr.shape[-1]
+        is_expert = any(f in path for f in expert_stack_paths)
+        variant = policy.variant_for(path, K, N)
+        if variant is None:
+            return arr
+        variant = pick_fallback(variant, K)
+        fmt = get_format(variant)
+        if is_expert and len(arr.shape) >= 3:
+            lead = arr.shape[:-3]
+            E = arr.shape[-3]
+            Keff = E * K
+        else:
+            lead = arr.shape[:-2]
+            Keff = K
+        data = {}
+        for name, (shape, dt) in fmt.array_shapes(Keff, N).items():
+            data[name] = jax.ShapeDtypeStruct(tuple(lead) + shape,
+                                              jnp.dtype(dt))
+        return Q.QTensor(variant, (Keff, N), data)
+
+    return walk(params_spec)

@@ -1,0 +1,67 @@
+"""Explicit compressed gradient all-reduce (shard_map) with error feedback.
+
+Under plain pjit the data-parallel gradient all-reduce happens inside the
+backward pass at the accumulation dtype XLA chooses. For bandwidth-bound
+scale-out, this module gives explicit control: gradients are cast to
+``wire_dtype`` (bf16 halves DP traffic), psum'ed over the dp axes via
+shard_map, and the quantization residual is carried to the next step
+(error feedback), which keeps SGD unbiased in expectation.
+
+Used by the train driver when ``--grad-compress`` is set; exercised by
+tests/test_distributed.py on a multi-device host mesh.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.distributed.sharding import dp_axes
+
+
+def compressed_psum(grads: Any, mesh: Mesh, wire_dtype=jnp.bfloat16,
+                    error: Optional[Any] = None) -> Tuple[Any, Any]:
+    """All-reduce-mean ``grads`` over the dp axes at ``wire_dtype``.
+
+    grads are per-device *local* gradients (e.g. from a shard_map'd or
+    per-host loss). Returns (reduced fp32 grads, new error-feedback state).
+    """
+    axes = dp_axes(mesh)
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+
+    if error is None:
+        error = jax.tree.map(lambda g: jnp.zeros(g.shape, jnp.float32),
+                             grads)
+
+    def reduce_one(g, e):
+        corrected = g.astype(jnp.float32) + e
+        wire = corrected.astype(wire_dtype)
+        new_e = corrected - wire.astype(jnp.float32)     # residual feedback
+        summed = jax.lax.psum(wire, axes)
+        return summed.astype(jnp.float32) / n, new_e
+
+    spec = jax.tree.map(lambda _: P(), grads)
+
+    def inner(g, e):
+        out = jax.tree.map(reduce_one, g, e)
+        flat, treedef = jax.tree.flatten(
+            out, is_leaf=lambda x: isinstance(x, tuple))
+        red = treedef.unflatten([t[0] for t in flat])
+        err = treedef.unflatten([t[1] for t in flat])
+        return red, err
+
+    fn = jax.shard_map(inner, mesh=mesh, in_specs=(spec, spec),
+                       out_specs=(spec, spec))
+    return fn(grads, error)
+
+
+def wire_bytes(grads, wire_dtype=jnp.bfloat16) -> int:
+    """DP traffic per step at the compressed wire dtype."""
+    import numpy as np
+    return sum(int(np.prod(g.shape)) * jnp.dtype(wire_dtype).itemsize
+               for g in jax.tree.leaves(grads))

@@ -1,0 +1,334 @@
+"""Sharding rules: params (FSDP x TP), optimizer state, KV caches, batches.
+
+Conventions (DESIGN.md §5):
+  * data-parallel axes: ("data",) single-pod, ("pod", "data") multi-pod --
+    the pod axis composes with data parallelism, which is what the
+    multi-pod dry-run proves out.
+  * TP axis: "model". Weights: last dim over model, second-to-last over dp
+    (FSDP; GSPMD all-gathers at use). MoE experts: EP over model when
+    E % |model| == 0 (olmoe), else per-expert FFN TP (granite).
+  * Quantized (serve) weights: packed payload arrays shard over model on
+    lanes only (TP); the packed K rows stay whole per shard so super-block
+    boundaries never straddle devices.
+  * KV caches: batch over dp, then kv_heads over model when divisible,
+    else head_dim over model, else sequence (see serve shardings).
+
+Every rule checks divisibility and degrades to replication, so any mesh
+shape compiles (elastic meshes; see launch/mesh.py).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core.quantize import QTensor
+
+
+# --------------------------------------------------------------------------
+# axis roles: by default "model" is the TP axis; tp_off() retargets it as
+# extra data parallelism (pure FSDP) -- the right regime for small dense
+# models where TP all-reduces dominate (see EXPERIMENTS.md §Perf H3). The
+# physical production mesh is unchanged; only the role mapping moves.
+# --------------------------------------------------------------------------
+_TP_OFF = {"v": False}
+
+
+class tp_off:
+    def __enter__(self):
+        self._saved = _TP_OFF["v"]
+        _TP_OFF["v"] = True
+        return self
+
+    def __exit__(self, *exc):
+        _TP_OFF["v"] = self._saved
+        return False
+
+
+def model_axis(mesh: Mesh):
+    if _TP_OFF["v"] or "model" not in mesh.axis_names:
+        return None
+    return "model"
+
+
+def dp_axes(mesh: Mesh) -> Tuple[str, ...]:
+    axes = [a for a in ("pod", "data") if a in mesh.axis_names]
+    if _TP_OFF["v"] and "model" in mesh.axis_names:
+        axes.append("model")
+    return tuple(axes)
+
+
+def axis_size(mesh: Mesh, axes) -> int:
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        axes = (axes,)
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    return n
+
+
+def _div(n: int, mesh: Mesh, axes) -> bool:
+    return n % axis_size(mesh, axes) == 0
+
+
+# down/out projections are row-parallel (K over model): their input is
+# already model-sharded (ff/heads), so the forward emits one small
+# d_model-sized all-reduce instead of gathering the ff-sized hidden --
+# standard Megatron TP pairing with the column-parallel up/gate/qkv.
+_ROW_PARALLEL = ("w_down", "wo", "c_proj", "out_proj", "proj_out")
+
+
+def _is_row_parallel(path: str) -> bool:
+    return path.split("/")[-1] in _ROW_PARALLEL
+
+
+def _spec_for_matrix(shape, mesh, path: str, *, fsdp: bool) -> P:
+    """(lead..., K, N) weight: column-parallel (N over model, K over dp)
+    by default; row-parallel (K over model, N over dp) for down/out."""
+    nd = len(shape)
+    dp = dp_axes(mesh)
+    m = model_axis(mesh)
+    dims = [None] * nd
+    if _is_row_parallel(path):
+        if m and _div(shape[-2], mesh, m):
+            dims[-2] = m
+        if fsdp and _div(shape[-1], mesh, dp):
+            dims[-1] = dp
+    else:
+        if m and _div(shape[-1], mesh, m):
+            dims[-1] = m
+        if fsdp and _div(shape[-2], mesh, dp):
+            dims[-2] = dp
+    return P(*dims)
+
+
+def _spec_for_experts(shape, mesh, path: str, *, fsdp: bool) -> P:
+    """(lead..., E, K, N): EP over model if divisible, else FFN-TP."""
+    nd = len(shape)
+    dp = dp_axes(mesh)
+    m = model_axis(mesh)
+    dims = [None] * nd
+    if m and _div(shape[-3], mesh, m):
+        dims[-3] = m                             # EP
+        if fsdp and _div(shape[-2], mesh, dp):
+            dims[-2] = dp
+    else:                                        # per-expert FFN TP
+        if _is_row_parallel(path):
+            if m and _div(shape[-2], mesh, m):
+                dims[-2] = m
+            if fsdp and _div(shape[-1], mesh, dp):
+                dims[-1] = dp
+        else:
+            if m and _div(shape[-1], mesh, m):
+                dims[-1] = m
+            if fsdp and _div(shape[-2], mesh, dp):
+                dims[-2] = dp
+    return P(*dims)
+
+
+def param_specs(params, mesh: Mesh, *, fsdp: bool = True) -> Any:
+    """Pytree of PartitionSpec matching ``params`` (arrays, specs or
+    QTensors)."""
+
+    def walk(node, prefix=""):
+        if isinstance(node, dict):
+            return {k: walk(v, f"{prefix}{k}/") for k, v in node.items()}
+        path = prefix[:-1]
+        if isinstance(node, QTensor):
+            # packed payloads: column-parallel = lanes over model;
+            # row-parallel = packed K rows over model, but only when every
+            # shard holds whole super-blocks (K % (|model| * 256) == 0) --
+            # otherwise replicate (cheap: these are 2.6-3.6 bit tensors)
+            K = node.shape[0]
+            m = model_axis(mesh)
+            row = (_is_row_parallel(path) and "moe/" not in path)
+            sb_aligned = m is not None and K % (axis_size(mesh, m)
+                                                * 256) == 0
+
+            def qspec(arr):
+                nd = len(arr.shape)
+                dims = [None] * nd
+                if row:
+                    if sb_aligned:
+                        dims[-2] = m
+                elif m and _div(arr.shape[-1], mesh, m):
+                    dims[-1] = m
+                return P(*dims)
+            return QTensor(node.variant, node.shape,
+                           {k: qspec(v) for k, v in node.data.items()})
+        shape = node.shape
+        parts = path.split("/")
+        leaf = parts[-1]
+        is_norm = (any(p.startswith("ln") or "norm" in p for p in parts)
+                   or "norm" in leaf)
+        if (len(shape) <= 1 or is_norm
+                or leaf.startswith(("conv", "A_log", "D", "dt_bias",
+                                    "b_", "bias"))):
+            return P()                           # replicated (incl. stacked
+            # norm scales: their leading dim is the layer-scan axis)
+        if "moe/w_" in path and len(shape) >= 3:
+            return _spec_for_experts(shape, mesh, path, fsdp=fsdp)
+        if leaf in ("wte", "wpe"):
+            # embeddings: vocab over model (so a tied head emits V-sharded
+            # logits with no vocab-sized all-reduce), features over dp
+            dp = dp_axes(mesh)
+            m = model_axis(mesh)
+            row = m if (m and _div(shape[0], mesh, m)) else None
+            col = dp if fsdp and _div(shape[1], mesh, dp) else None
+            return P(*([None] * (len(shape) - 2) + [row, col]))
+        return _spec_for_matrix(shape, mesh, path, fsdp=fsdp)
+
+    return walk(params)
+
+
+def opt_state_specs(pspecs) -> Dict[str, Any]:
+    return dict(m=pspecs, v=pspecs, step=P())
+
+
+def batch_specs(batch: Dict[str, Any], mesh: Mesh) -> Dict[str, P]:
+    dp = dp_axes(mesh)
+    out = {}
+    for k, v in batch.items():
+        nd = len(v.shape)
+        if k == "positions" and nd == 3:         # (3, B, S) M-RoPE
+            bdp = dp if _div(v.shape[1], mesh, dp) else None
+            out[k] = P(None, bdp, None)
+        elif nd >= 1:
+            bdp = dp if _div(v.shape[0], mesh, dp) else None
+            out[k] = P(*((bdp,) + (None,) * (nd - 1)))
+        else:
+            out[k] = P()
+    return out
+
+
+def cache_specs(cache: Dict[str, Any], mesh: Mesh,
+                kv_shard: str = "auto") -> Dict[str, Any]:
+    """Decode-cache shardings. kv_shard: auto | heads | head_dim | seq |
+    replicated -- 'seq' is the flash-decode-style partial-softmax layout
+    (see EXPERIMENTS.md §Perf)."""
+    dp = dp_axes(mesh)
+    m = model_axis(mesh)
+    out: Dict[str, Any] = {}
+
+    def bdp(B, T=None):
+        """Batch over dp when divisible; else (long-context B=1) shard the
+        cache sequence over dp -- flash-decoding-style partial softmax."""
+        if _div(B, mesh, dp):
+            return dp, None
+        if T is not None and _div(T, mesh, dp):
+            return None, dp
+        return None, None
+
+    # resolve the kv mode once so k/v and their int8 scales co-shard.
+    # auto prefers heads, then sequence (flash-decoding partial softmax).
+    # head_dim sharding is only used when explicitly requested: GSPMD
+    # resolves GQA q-heads x Dh-sharded cache by re-gathering the whole
+    # cache every step (see EXPERIMENTS.md §Perf H1).
+    kv_mode = "replicated"
+    if "k" in cache and m:
+        ks = cache["k"].shape
+        kv_mode = kv_shard
+        if kv_mode == "auto":
+            if _div(ks[3], mesh, m):
+                kv_mode = "heads"
+            elif _div(ks[2], mesh, m):
+                kv_mode = "seq"
+            else:
+                kv_mode = "replicated"
+
+    for k, v in cache.items():
+        shape = v.shape
+        if k in ("k", "v"):                      # (L|napp, B, T, KH, Dh)
+            b_ax, t_ax = bdp(shape[1], shape[2])
+            dims = [None, b_ax, t_ax, None, None]
+            if kv_mode == "heads":
+                dims[3] = m
+            elif kv_mode == "head_dim":
+                dims[4] = m
+            elif kv_mode == "seq" and t_ax is None:
+                dims[2] = m
+            out[k] = P(*dims)
+        elif k in ("k_scale", "v_scale"):        # (L, B, T, KH)
+            b_ax, t_ax = bdp(shape[1], shape[2])
+            dims = [None, b_ax, t_ax, None]
+            if kv_mode == "heads":
+                dims[3] = m
+            elif kv_mode == "seq" and t_ax is None:
+                dims[2] = m
+            out[k] = P(*dims)
+        elif k == "pos":                         # (B, T)
+            b_ax, t_ax = bdp(shape[0], shape[1])
+            out[k] = P(b_ax, t_ax)
+        elif k == "state":                       # (L, B, H, Pdim, N)
+            b_ax, _ = bdp(shape[1])
+            dims = [None, b_ax, None, None, None]
+            if m and _div(shape[2], mesh, m):
+                dims[2] = m
+            out[k] = P(*dims)
+        elif k == "conv":                        # (L, B, W-1, C)
+            b_ax, _ = bdp(shape[1])
+            dims = [None, b_ax, None,
+                    m if (m and _div(shape[3], mesh, m)) else None]
+            out[k] = P(*dims)
+        else:
+            out[k] = P()
+    return out
+
+
+def named(tree_specs, mesh: Mesh):
+    """PartitionSpec pytree -> NamedSharding pytree."""
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s),
+        tree_specs, is_leaf=lambda x: isinstance(x, P))
+
+
+# ---------------------------------------------------------------------------
+# activation sharding constraints (GSPMD guidance inside model code)
+#
+# Model code calls constrain(x, "dp", None, "model") with symbolic axes;
+# the launcher activates them for the current mesh via activation_axes().
+# Without activation, constrain() is the identity, so single-device smoke
+# tests and interpret-mode kernels are unaffected.
+# ---------------------------------------------------------------------------
+
+_ACT: Dict[str, Any] = {"enabled": False, "dp": None, "model": None,
+                        "dp_size": 1, "model_size": 1}
+
+
+class activation_axes:
+    def __init__(self, mesh: Mesh):
+        self.dp = dp_axes(mesh)
+        self.model = model_axis(mesh)
+        self.dp_size = axis_size(mesh, self.dp)
+        self.model_size = axis_size(mesh, self.model) if self.model else 1
+
+    def __enter__(self):
+        self._saved = dict(_ACT)
+        _ACT.update(enabled=True, dp=self.dp, model=self.model,
+                    dp_size=self.dp_size, model_size=self.model_size)
+        return self
+
+    def __exit__(self, *exc):
+        _ACT.update(self._saved)
+        return False
+
+
+def constrain(x, *dims):
+    """with_sharding_constraint with symbolic 'dp'/'model' axis names.
+    Identity unless a launcher activated axes; non-divisible dims degrade
+    to unsharded."""
+    if not _ACT["enabled"]:
+        return x
+    resolved = []
+    for size, d in zip(x.shape, dims):
+        if d == "dp" and _ACT["dp"] and size % _ACT["dp_size"] == 0:
+            resolved.append(_ACT["dp"])
+        elif d == "model" and _ACT["model"] and size % _ACT["model_size"] == 0:
+            resolved.append(_ACT["model"])
+        else:
+            resolved.append(None)
+    return jax.lax.with_sharding_constraint(x, P(*resolved))

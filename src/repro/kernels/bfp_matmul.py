@@ -1,0 +1,136 @@
+"""Fused BFP dequant-matmul Pallas TPU kernel -- the DSBP, TPU-native.
+
+The paper's Dynamic Super-Block Processor streams packed super-blocks from
+main memory through a bit-slicer/data-mapper into BRAM caches, runs a shared
+integer vector engine, and applies variant-specific scaling. On TPU the same
+dataflow becomes:
+
+  HBM (packed SoA arrays)  --BlockSpec DMA-->  VMEM tiles
+  bit-slicer/data-mapper    = vectorized shift/mask slab unpack (VPU)
+  shared vector engine      = MXU ``jnp.dot`` with fp32 accumulation
+  Q2/Q3 scalar units + mux  = variant-specific two-level scale fold,
+                              selected statically per layer (one compiled
+                              program holds both variants; switching per
+                              layer needs no reconfiguration)
+
+Output-stationary tiling (paper §III-C): grid (M/bm, N/bn, K/bk) with the
+K dimension innermost/"arbitrary"; the output tile stays resident in VMEM
+across the K sweep, exactly like the paper's accumulator register file.
+
+HBM traffic per output tile is the *packed* operand bytes -- the entire
+point of BFP quantization (2.625-3.5625 bits/weight instead of 16).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.formats import get_format
+from repro.core.quantize import QTensor, dequantize
+
+
+def _choose_block_k(K: int, sb: int, target: int = 512) -> int:
+    bk = min(target, K)
+    while bk % sb or K % bk:
+        bk -= sb
+        if bk <= 0:
+            raise ValueError(f"no valid block_k for K={K}, sb={sb}")
+    return bk
+
+
+def _round_up(x: int, m: int) -> int:
+    return (x + m - 1) // m * m
+
+
+def _kernel(x_ref, *rest, variant: str, names: Tuple[str, ...],
+            block_shape: Tuple[int, int], nk: int, compute_dtype):
+    """rest = (*weight_refs, out_ref)."""
+    w_refs, o_ref = rest[:-1], rest[-1]
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    # "bit-slicer + data mapper": unpack/dequantize this VMEM tile.
+    data = {name: ref[...] for name, ref in zip(names, w_refs)}
+    qt = QTensor(variant, block_shape, data)
+    w = dequantize(qt, dtype=compute_dtype)          # (bk, bn)
+    x = x_ref[...].astype(compute_dtype)             # (bm, bk)
+    o_ref[...] += jnp.dot(x, w, preferred_element_type=jnp.float32)
+
+
+def bfp_matmul_pallas(x: jnp.ndarray, t: QTensor, *,
+                      block_m: int = 128, block_n: int = 256,
+                      block_k: int = 512,
+                      compute_dtype=jnp.bfloat16,
+                      out_dtype=None,
+                      interpret: bool = False) -> jnp.ndarray:
+    """x: (M, K) float; t: packed (K, N). Returns (M, N) in ``out_dtype``.
+
+    M / N are padded to block multiples inside (packed arrays pad with
+    zeros along lanes => zero weights, numerically inert).
+    """
+    M, K = x.shape
+    Kt, N = t.shape
+    assert K == Kt, (K, Kt)
+    fmt = get_format(t.variant)
+    out_dtype = out_dtype or x.dtype
+
+    bk = _choose_block_k(K, fmt.super_block, block_k)
+    bm = min(block_m, _round_up(M, 8))
+    bn = min(block_n, _round_up(N, 128))
+    Mp, Np = _round_up(M, bm), _round_up(N, bn)
+
+    if Mp != M:
+        x = jnp.pad(x, ((0, Mp - M), (0, 0)))
+    data = dict(t.data)
+    if Np != N:
+        data = {k2: jnp.pad(v, ((0, 0), (0, Np - N))) for k2, v in data.items()}
+
+    names = tuple(sorted(data))
+    kdiv = {a.name: a.k_div for a in fmt.arrays}
+    grid = (Mp // bm, Np // bn, K // bk)
+
+    in_specs = [pl.BlockSpec((bm, bk), lambda i, j, k: (i, k))]
+    for name in names:
+        dv = kdiv[name]
+        in_specs.append(
+            pl.BlockSpec((bk // dv, bn),
+                         functools.partial(lambda i, j, k, _dv: (k, j), _dv=dv)))
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, variant=t.variant, names=names,
+                          block_shape=(bk, bn), nk=grid[2],
+                          compute_dtype=compute_dtype),
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((Mp, Np), jnp.float32),
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(x, *[data[n] for n in names])
+    return out[:M, :N].astype(out_dtype)
+
+
+def vmem_bytes(variant: str, block_m: int, block_n: int, block_k: int,
+               x_dtype=jnp.bfloat16, compute_dtype=jnp.bfloat16) -> dict:
+    """Static VMEM budget of one grid step (Table II analogue)."""
+    fmt = get_format(variant)
+    w_packed = sum((block_k // a.k_div) * block_n * jnp.dtype(a.dtype).itemsize
+                   for a in fmt.arrays)
+    return dict(
+        x_tile=block_m * block_k * jnp.dtype(x_dtype).itemsize,
+        w_packed_tile=w_packed,
+        w_dequant_tile=block_k * block_n * jnp.dtype(compute_dtype).itemsize,
+        acc_tile=block_m * block_n * 4,
+        total=(block_m * block_k * jnp.dtype(x_dtype).itemsize + w_packed
+               + block_k * block_n * jnp.dtype(compute_dtype).itemsize
+               + block_m * block_n * 4),
+    )

@@ -1,0 +1,75 @@
+"""Public fused BFP-matmul entry points (jit-friendly).
+
+``impl`` selects the datapath:
+  * "pallas" -- the fused Pallas TPU kernel (HBM traffic stays packed).
+                Use interpret=True on CPU for validation.
+  * "xla"    -- dequantize-then-dot expressed in XLA. This is the
+                *framework baseline* (the analogue of the paper's NEON CPU
+                path): XLA materializes the dequantized weights, so the
+                memory roofline term carries the full bf16 weight traffic.
+  * "auto"   -- pallas on TPU backends, xla elsewhere (dry-run lowers the
+                xla path; see DESIGN.md §7).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.quantize import QTensor, dequantize, quantize_q8_k
+from repro.kernels.bfp_matmul import bfp_matmul_pallas
+from repro.kernels.q8k_quant import q8k_quantize_pallas
+from repro.kernels import ref as _ref
+
+
+def _default_impl() -> str:
+    return "pallas" if jax.default_backend() == "tpu" else "xla"
+
+
+def bfp_matmul(x: jnp.ndarray, t: QTensor, *, impl: str = "auto",
+               compute_dtype=jnp.bfloat16, out_dtype=None,
+               interpret: bool = False,
+               block_m: int = 128, block_n: int = 256,
+               block_k: int = 512) -> jnp.ndarray:
+    """x: (..., K) activation; t: packed (K, N) weights. Returns (..., N).
+
+    Dispatches one layer's MatMul to the variant-appropriate datapath --
+    the JAX analogue of the paper's per-layer 0x01-config + 0x08-schedule.
+    """
+    if impl == "auto":
+        impl = _default_impl()
+    out_dtype = out_dtype or x.dtype
+    lead = x.shape[:-1]
+    K = x.shape[-1]
+    x2 = x.reshape(-1, K)
+
+    if impl == "pallas":
+        out = bfp_matmul_pallas(
+            x2, t, compute_dtype=compute_dtype, out_dtype=out_dtype,
+            interpret=interpret, block_m=block_m, block_n=block_n,
+            block_k=block_k)
+    elif impl == "xla":
+        # dot emits compute_dtype directly: TPU MXU still accumulates fp32
+        # internally, and any TP partial-sum all-reduce stays at bf16 width
+        # instead of fp32 (GSPMD places the reduce before a downcast)
+        w = dequantize(t, dtype=compute_dtype)
+        out = jnp.dot(x2.astype(compute_dtype), w).astype(out_dtype)
+    elif impl == "ref":
+        out = _ref.matmul_ref(x2, t, out_dtype=out_dtype)
+    else:
+        raise ValueError(f"unknown impl {impl!r}")
+    return out.reshape(lead + (t.shape[1],))
+
+
+def q8k_quantize(x: jnp.ndarray, *, impl: str = "auto",
+                 interpret: bool = False):
+    """Quantize activations (..., K) to Q8_K payload dict."""
+    if impl == "auto":
+        impl = _default_impl()
+    lead = x.shape[:-1]
+    K = x.shape[-1]
+    x2 = x.reshape(-1, K)
+    if impl == "pallas":
+        q = q8k_quantize_pallas(x2, interpret=interpret)
+    else:
+        q = quantize_q8_k(x2)
+    return {k: v.reshape(lead + v.shape[1:]) for k, v in q.items()}

@@ -1,0 +1,60 @@
+"""Pallas kernel: quantize activations to Q8_K (per-256 super-block int8).
+
+The paper's driver quantizes input tensors to Q8_K before streaming them to
+the accelerator (llama.cpp does the same on CPU). On TPU this is a cheap
+VPU pass: per 256-value super-block, absmax -> scale -> round, plus the
+16-block partial sums ("bsums") that the Q2_K min-correction term consumes.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(x_ref, qs_ref, d_ref, bs_ref):
+    x = x_ref[...].astype(jnp.float32)              # (bm, K)
+    bm, K = x.shape
+    nsb = K // 256
+    xs = x.reshape(bm, nsb, 256)
+    amax = jnp.abs(xs).max(axis=-1)                  # (bm, nsb)
+    d = amax / 127.0
+    inv = jnp.where(d > 0, 1.0 / jnp.where(d > 0, d, 1.0), 0.0)
+    q = jnp.clip(jnp.round(xs * inv[..., None]), -127, 127)
+    qi = q.astype(jnp.int32)
+    bsums = qi.reshape(bm, nsb, 16, 16).sum(axis=-1)
+    qs_ref[...] = qi.reshape(bm, K).astype(jnp.int8)
+    d_ref[...] = d
+    bs_ref[...] = bsums.reshape(bm, K // 16).astype(jnp.int16)
+
+
+def q8k_quantize_pallas(x: jnp.ndarray, *, block_m: int = 8,
+                        interpret: bool = False):
+    """x: (M, K), K % 256 == 0 -> dict(qs int8 (M,K), d f32 (M,K/256),
+    bsums int16 (M,K/16))."""
+    M, K = x.shape
+    assert K % 256 == 0, K
+    bm = min(block_m, M)
+    Mp = (M + bm - 1) // bm * bm
+    if Mp != M:
+        x = jnp.pad(x, ((0, Mp - M), (0, 0)))
+    grid = (Mp // bm,)
+    qs, d, bs = pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((bm, K), lambda i: (i, 0))],
+        out_specs=[
+            pl.BlockSpec((bm, K), lambda i: (i, 0)),
+            pl.BlockSpec((bm, K // 256), lambda i: (i, 0)),
+            pl.BlockSpec((bm, K // 16), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((Mp, K), jnp.int8),
+            jax.ShapeDtypeStruct((Mp, K // 256), jnp.float32),
+            jax.ShapeDtypeStruct((Mp, K // 16), jnp.int16),
+        ],
+        interpret=interpret,
+    )(x)
+    return dict(qs=qs[:M], d=d[:M], bsums=bs[:M])

@@ -1,0 +1,82 @@
+"""Pure-jnp oracles for the BFP matmul kernels.
+
+Two reference semantics:
+
+  * ``matmul_ref``      -- dequantize-to-f32 then matmul. This is the golden
+    numerical reference for the fused Pallas kernel (which dequantizes
+    per-VMEM-tile and feeds the MXU).
+  * ``matmul_q8k_ref``  -- llama.cpp ``vec_dot_qX_K_q8_K`` semantics: integer
+    dot products per 16-block with two-level rescaling, activations in Q8_K.
+    This is the bit-faithful model of the paper's DSBP datapath (shared
+    integer vector engine + Q2/Q3 scalar units + accumulator).
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax.numpy as jnp
+
+from repro.core.formats import slab_unpack
+from repro.core.quantize import QTensor, dequantize
+
+
+def matmul_ref(x: jnp.ndarray, t: QTensor, out_dtype=jnp.float32) -> jnp.ndarray:
+    """x: (..., K) float; t: packed (K, N). Returns (..., N)."""
+    w = dequantize(t, dtype=jnp.float32)
+    return jnp.dot(x.astype(jnp.float32), w).astype(out_dtype)
+
+
+# ---------------------------------------------------------------------------
+# integer-datapath reference (llama.cpp vec_dot semantics)
+# ---------------------------------------------------------------------------
+
+def _q8_fields(qx: Dict[str, jnp.ndarray]):
+    qs = qx["qs"].astype(jnp.int32)          # (..., K)
+    d8 = qx["d"].astype(jnp.float32)         # (..., K//256)
+    bsums = qx["bsums"].astype(jnp.int32)    # (..., K//16)
+    return qs, d8, bsums
+
+
+def matmul_q8k_ref(qx: Dict[str, jnp.ndarray], t: QTensor,
+                   out_dtype=jnp.float32) -> jnp.ndarray:
+    """Integer-accumulation reference. qx: Q8_K activation dict over (M, K)."""
+    K, N = t.shape
+    nsb = K // 256
+    qs, d8, bsums = _q8_fields(qx)
+    M = qs.shape[0]
+    x_blk = qs.reshape(M, nsb, 16, 16)                       # int32
+
+    if t.variant == "q2_k":
+        q = slab_unpack(t.data["qs"], 2, 256).astype(jnp.int32)
+        q = q.reshape(nsb, 16, 16, N)
+        sc = (t.data["scales"] & 0xF).astype(jnp.int32).reshape(nsb, 16, N)
+        mn = (t.data["scales"] >> 4).astype(jnp.int32).reshape(nsb, 16, N)
+        d = t.data["d"].astype(jnp.float32)                  # (nsb, N)
+        dmin = t.data["dmin"].astype(jnp.float32)
+        # int dot per 16-block: (M, nsb, 16blk, N)
+        idot = jnp.einsum("msbi,sbin->msbn", x_blk, q).astype(jnp.float32)
+        scaled = jnp.einsum("msbn,sbn->msn", idot, sc.astype(jnp.float32))
+        # min correction uses the Q8 block sums (the paper's bsum trick)
+        bs = bsums.reshape(M, nsb, 16).astype(jnp.float32)
+        mins = jnp.einsum("msb,sbn->msn", bs, mn.astype(jnp.float32))
+        acc = (scaled * d[None] - mins * dmin[None]) * d8[:, :, None]
+        return acc.sum(axis=1).astype(out_dtype)
+
+    if t.variant == "q3_k":
+        lo = slab_unpack(t.data["qs"], 2, 256).astype(jnp.int32)
+        hi = slab_unpack(t.data["hmask"], 1, 256).astype(jnp.int32)
+        q = (lo + (hi << 2) - 4).reshape(nsb, 16, 16, N)     # [-4, 3]
+        sc = t.data["scales"].astype(jnp.int32).reshape(nsb, 16, N) - 32
+        d = t.data["d"].astype(jnp.float32)
+        idot = jnp.einsum("msbi,sbin->msbn", x_blk, q).astype(jnp.float32)
+        scaled = jnp.einsum("msbn,sbn->msn", idot, sc.astype(jnp.float32))
+        acc = scaled * d[None] * d8[:, :, None]
+        return acc.sum(axis=1).astype(out_dtype)
+
+    raise NotImplementedError(
+        f"integer reference only models the paper's native variants "
+        f"(q2_k, q3_k); got {t.variant}")
+
+
+def dequant_ref(t: QTensor, dtype=jnp.float32) -> jnp.ndarray:
+    return dequantize(t, dtype=dtype)

@@ -1,0 +1,340 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# The two lines above MUST run before any jax import (jax locks the device
+# count at first init). REPRO_DRYRUN_DEVICES overrides for the tiny-mesh
+# CI test -- still before any jax import.
+if os.environ.get("REPRO_DRYRUN_DEVICES"):
+    os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count="
+                               + os.environ["REPRO_DRYRUN_DEVICES"])
+
+# Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+#
+# For each cell this builds the *real* step function (train_step /
+# serve_prefill / serve_step with BFP-quantized weights), gives it
+# ShapeDtypeStruct stand-ins (no allocation), lowers and compiles it against
+# the production mesh, and records:
+#
+#   * memory_analysis()  -- per-chip HBM: proves the cell fits
+#   * cost_analysis()    -- per-chip FLOPs / bytes for §Roofline
+#   * collective bytes   -- parsed from post-SPMD HLO for §Roofline
+#
+# Usage:
+#   python -m repro.launch.dryrun --arch llama3.2-1b --shape train_4k
+#   python -m repro.launch.dryrun --all --multi-pod --out results/dryrun
+
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import (ARCH_IDS, SHAPES, get_arch, input_specs,
+                                shape_applicable)
+from repro.core.policy import get_policy
+from repro.core.qlinear import spec_like_quantized
+from repro.distributed import sharding as SH
+from repro.launch import analysis as AN
+from repro.launch import flops as FL
+from repro.launch.mesh import make_production_mesh, validate_mesh
+from repro.models import transformer as T
+from repro.optim.adamw import AdamWConfig
+from repro.training import steps as S
+
+
+def _bf16_specs(tree):
+    def c(x):
+        if jnp.issubdtype(x.dtype, jnp.floating):
+            return jax.ShapeDtypeStruct(x.shape, jnp.bfloat16)
+        return x
+    return jax.tree.map(c, tree)
+
+
+def _tune_for_dryrun(cfg, shape):
+    """Dry-run lowers the XLA dataflow path (Pallas cannot target the CPU
+    backend); attention must be the memory-bounded blockwise impl."""
+    kw = dict(kernel_impl="xla", attn_impl="blockwise")
+    if shape.kind == "train":
+        kw["remat"] = True
+    return cfg.replace(**kw)
+
+
+def _probe_depths(cfg):
+    """Two reduced depths for the unrolled cost probes (XLA counts a scan
+    body once regardless of trip count, so cost/collective metrics come
+    from unrolled lowerings at two depths, linearly extrapolated to the
+    true depth; memory/compile proof uses the full scanned graph)."""
+    if cfg.family == "hybrid":
+        k = cfg.hybrid_attn_every
+        return k, 2 * k
+    return 1, 2
+
+
+def _extrapolate(m1, m2, l1, l2, L):
+    b = (m2 - m1) / (l2 - l1)
+    a = m1 - b * l1
+    return a + b * L
+
+
+def _lower_cell(cfg, shape, mesh, *, quant_policy, kv_shard, fsdp,
+                microbatches, serve_quantized, tp=True):
+    """Build + lower the cell's step function. Returns (lowered,)."""
+    import contextlib
+    tp_ctx = contextlib.nullcontext() if tp else SH.tp_off()
+    with tp_ctx:
+        return _lower_cell_inner(cfg, shape, mesh, quant_policy=quant_policy,
+                                 kv_shard=kv_shard, fsdp=fsdp,
+                                 microbatches=microbatches,
+                                 serve_quantized=serve_quantized)
+
+
+def _lower_cell_inner(cfg, shape, mesh, *, quant_policy, kv_shard, fsdp,
+                      microbatches, serve_quantized):
+    specs = input_specs(cfg, shape)
+    batch_sh = SH.named(SH.batch_specs(specs, mesh), mesh)
+
+    with mesh, SH.activation_axes(mesh):
+        if shape.kind == "train":
+            opt = AdamWConfig()
+            state_sds = jax.eval_shape(
+                lambda: S.init_train_state(cfg, opt, jax.random.PRNGKey(0)))
+            pspecs = SH.param_specs(state_sds["params"], mesh, fsdp=fsdp)
+            state_specs = dict(params=pspecs,
+                               opt=SH.opt_state_specs(pspecs), step=P())
+            state_sh = SH.named(state_specs, mesh)
+            step_fn = S.make_train_step(cfg, opt, microbatches=microbatches)
+            jitted = jax.jit(step_fn, in_shardings=(state_sh, batch_sh),
+                             out_shardings=(state_sh, None),
+                             donate_argnums=(0,))
+            return jitted.lower(state_sds, specs)
+
+        params_sds = _bf16_specs(jax.eval_shape(
+            lambda: T.init_params(cfg, jax.random.PRNGKey(0))))
+        if serve_quantized:
+            params_sds = spec_like_quantized(params_sds,
+                                             get_policy(quant_policy))
+        psh = SH.named(SH.param_specs(params_sds, mesh, fsdp=False), mesh)
+
+        if shape.kind == "prefill":
+            prefill, _ = S.make_serve_steps(cfg)
+            jitted = jax.jit(prefill, in_shardings=(psh, batch_sh))
+            return jitted.lower(params_sds, specs)
+
+        # decode
+        cache_sds = jax.eval_shape(
+            lambda: T.init_cache(cfg, shape.global_batch, shape.seq_len))
+        cache_sh = SH.named(
+            SH.cache_specs(cache_sds, mesh, kv_shard=kv_shard), mesh)
+        _, decode = S.make_serve_steps(cfg)
+        jitted = jax.jit(decode, in_shardings=(psh, cache_sh, batch_sh),
+                         out_shardings=(None, cache_sh),
+                         donate_argnums=(1,))
+        return jitted.lower(params_sds, cache_sds, specs)
+
+
+def dryrun_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
+                quant_policy: str = "default_serve_mix",
+                kv_shard: str = "auto", fsdp: bool = True,
+                microbatches: int = 1,
+                serve_quantized: bool = True,
+                cost_probes: bool = True, tp: bool = True,
+                mesh=None, config_override=None) -> Dict[str, Any]:
+    """Lower+compile one cell; returns the record for EXPERIMENTS.md."""
+    shape = SHAPES[shape_name]
+    cfg = _tune_for_dryrun(get_arch(arch), shape)
+    if config_override:
+        cfg = cfg.replace(**config_override)
+    ok, why = shape_applicable(cfg, shape)
+    rec: Dict[str, Any] = dict(arch=arch, shape=shape_name,
+                               multi_pod=multi_pod, kind=shape.kind,
+                               kv_shard=kv_shard, fsdp=fsdp,
+                               serve_quantized=serve_quantized)
+    if not ok:
+        rec.update(status="skipped", reason=why)
+        return rec
+
+    mesh = mesh if mesh is not None else make_production_mesh(
+        multi_pod=multi_pod)
+    n_chips = mesh.size
+    validate_mesh(mesh, shape.global_batch)
+    kw = dict(quant_policy=quant_policy, kv_shard=kv_shard, fsdp=fsdp,
+              microbatches=microbatches, serve_quantized=serve_quantized,
+              tp=tp)
+
+    # 1) full-depth scanned graph: the compile/memory proof
+    t0 = time.time()
+    lowered = _lower_cell(cfg, shape, mesh, **kw)
+    t_lower = time.time() - t0
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+    mem = AN.memory_stats(compiled)
+
+    # 2) unrolled cost probes at two reduced depths -> exact per-layer
+    #    cost extrapolated to true depth (scan bodies are cost-counted once)
+    mf = FL.model_flops(get_arch(arch), shape)
+    if cost_probes:
+        l1, l2 = _probe_depths(cfg)
+        probes = []
+        probe_text = None
+        for lp in (l1, l2):
+            # unrolled probe: scan bodies are cost-counted once, so every
+            # scan (layers, attention kv chunks, SSD chunks, microbatches)
+            # unrolls; the chunked loss switches to its dense equivalent.
+            # Attention chunks coarsen to bound unrolled-HLO size (single
+            # core: compile time); this overcounts the triangular-diagonal
+            # waste by <= cq/S ~ 6%, i.e. the compute term is conservative.
+            pcfg = cfg.replace(n_layers=lp, scan_unroll=True, loss_chunk=0,
+                               attn_q_chunk=2048, attn_kv_chunk=2048,
+                               ssd_unroll=False)
+            pl = _lower_cell(pcfg, shape, mesh, **kw).compile()
+            if probe_text is None:
+                probe_text = pl.as_text()
+            pr = AN.analyze_compiled(pl, n_chips)
+            # SSD chunk scans stay rolled in probes (compile-time bound on
+            # this 1-core host): add the missing (nc-1)/nc of the exact
+            # analytic SSD flops for the probe depth
+            if cfg.family in ("ssm", "hybrid") and shape.kind != "decode":
+                from repro.models.mamba2 import ssm_dims
+                nc = max(1, shape.seq_len // cfg.ssm_chunk)
+                mult = 3.0 if shape.kind == "train" else 1.0
+                dd = ssm_dims(cfg)
+                mp = mesh.shape.get("model", 1) if tp else 1
+                # tokens shard over dp; heads over model when divisible,
+                # else each model rank recomputes the full head set
+                sharded_chips = (n_chips if dd["n_heads"] % mp == 0
+                                 else n_chips // mp)
+                missing = (mult * FL._ssd_flops_seq(
+                    cfg, shape.global_batch, shape.seq_len, lp)
+                    * (nc - 1) / nc / sharded_chips)
+                pr = AN.Roofline(
+                    flops_per_chip=pr.flops_per_chip + missing,
+                    bytes_per_chip=pr.bytes_per_chip,
+                    coll_bytes_per_chip=pr.coll_bytes_per_chip,
+                    coll_breakdown=pr.coll_breakdown, n_chips=n_chips)
+            probes.append(pr)
+        L = cfg.n_layers
+        ex = lambda f: max(0.0, _extrapolate(f(probes[0]), f(probes[1]),
+                                             l1, l2, L))
+        coll_kinds = set(probes[0].coll_breakdown) | set(
+            probes[1].coll_breakdown)
+        coll = {k: int(ex(lambda p, k=k: p.coll_breakdown.get(k, 0)))
+                for k in coll_kinds}
+        roof = AN.Roofline(
+            flops_per_chip=ex(lambda p: p.flops_per_chip),
+            bytes_per_chip=ex(lambda p: p.bytes_per_chip),
+            coll_bytes_per_chip=float(
+                coll.get("total_corrected", coll.get("total", 0))),
+            coll_breakdown=coll, model_flops=mf, n_chips=n_chips)
+        top_coll = AN.hlo_collective_summary(probe_text, top=8)
+    else:
+        roof = AN.analyze_compiled(compiled, n_chips, model_flops=mf)
+        top_coll = AN.hlo_collective_summary(compiled.as_text(), top=8)
+
+    # analytic fused-HBM model -> the roofline memory term (see flops.py)
+    mcfg = cfg
+    mm = FL.memory_model(
+        mcfg, shape, n_chips=n_chips,
+        model_par=mesh.shape.get("model", 1) if tp else 1,
+        serve_quantized=serve_quantized,
+        policy_name=quant_policy,
+        kv_cache_bits=8 if mcfg.kv_cache_quant else 16)
+    roof.bytes_analytic_per_chip = mm["total"]
+    rec["memory_model"] = {k: int(v) for k, v in mm.items()}
+
+    rec.update(status="ok", n_chips=n_chips,
+               mesh=dict(zip(mesh.axis_names, [mesh.shape[a] for a in
+                                               mesh.axis_names])),
+               lower_s=round(t_lower, 2), compile_s=round(t_compile, 2),
+               memory=mem, roofline=roof.as_dict(),
+               top_collectives=top_coll)
+    return rec
+
+
+def print_record(rec: Dict[str, Any]) -> None:
+    if rec["status"] == "skipped":
+        print(f"[skip] {rec['arch']} x {rec['shape']}: {rec['reason']}")
+        return
+    r = rec["roofline"]
+    m = rec["memory"]
+    print(f"[ok] {rec['arch']} x {rec['shape']} "
+          f"(multi_pod={rec['multi_pod']}, chips={rec['n_chips']})")
+    print(f"     per-chip HBM: args {m['argument_size_in_bytes']/2**30:.2f} "
+          f"GiB, temps {m['temp_size_in_bytes']/2**30:.2f} GiB, "
+          f"out {m['output_size_in_bytes']/2**30:.2f} GiB")
+    print(f"     roofline: compute {r['compute_s']*1e3:.2f} ms | memory "
+          f"{r['memory_s']*1e3:.2f} ms (hlo {r.get('memory_s_hlo', 0)*1e3:.0f}) "
+          f"| collective {r['collective_s']*1e3:.2f} ms -> "
+          f"{r['dominant']}-bound")
+    print(f"     useful-flops ratio {r['useful_flops_fraction']:.3f}, "
+          f"roofline MFU {r['mfu']:.3f} "
+          f"(lower {rec['lower_s']}s, compile {rec['compile_s']}s)")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--kv-shard", default="auto")
+    ap.add_argument("--quant-policy", default="default_serve_mix")
+    ap.add_argument("--no-quant", action="store_true")
+    ap.add_argument("--no-fsdp", action="store_true")
+    ap.add_argument("--no-probes", action="store_true",
+                    help="skip unrolled cost probes (compile proof only)")
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--out", default=None)
+    ap.add_argument("--only-arch", default=None,
+                    help="comma-separated arch filter for --all")
+    args = ap.parse_args()
+
+    if args.all:
+        archs = (args.only_arch.split(",") if args.only_arch
+                 else ARCH_IDS[:10])
+        cells = [(a, s) for a in archs for s in SHAPES]
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        cells = [(args.arch, args.shape)]
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+
+    records = []
+    for arch, shape in cells:
+        for mp in meshes:
+            try:
+                rec = dryrun_cell(
+                    arch, shape, multi_pod=mp, kv_shard=args.kv_shard,
+                    quant_policy=args.quant_policy,
+                    serve_quantized=not args.no_quant,
+                    fsdp=not args.no_fsdp,
+                    cost_probes=not args.no_probes,
+                    microbatches=args.microbatches)
+            except Exception as e:  # a failure here is a bug in the system
+                rec = dict(arch=arch, shape=shape, multi_pod=mp,
+                           status="error", error=f"{type(e).__name__}: {e}",
+                           traceback=traceback.format_exc()[-2000:])
+            print_record(rec) if rec["status"] != "error" else print(
+                f"[ERROR] {arch} x {shape}: {rec['error']}")
+            records.append(rec)
+            if args.out:
+                os.makedirs(args.out, exist_ok=True)
+                tag = "multi" if mp else "single"
+                path = os.path.join(args.out,
+                                    f"{arch}__{shape}__{tag}.json")
+                with open(path, "w") as f:
+                    json.dump(rec, f, indent=1, default=str)
+    n_ok = sum(r["status"] == "ok" for r in records)
+    n_skip = sum(r["status"] == "skipped" for r in records)
+    n_err = sum(r["status"] == "error" for r in records)
+    print(f"\n== dry-run: {n_ok} ok, {n_skip} skipped, {n_err} errors ==")
+    if n_err:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,78 @@
+import os
+os.environ.setdefault(
+    "XLA_FLAGS", "--xla_force_host_platform_device_count=256")
+
+# §Perf hillclimb driver: run named variants of the three chosen cells and
+# record before/after roofline terms (EXPERIMENTS.md §Perf).
+#
+#   REPRO_DRYRUN_DEVICES=256 PYTHONPATH=src python -m repro.launch.hillclimb \
+#       --cell h1 --out results/hillclimb
+
+import argparse
+import json
+import time
+
+from repro.launch.dryrun import dryrun_cell, print_record
+
+# hypothesis -> change lists; each entry: (variant_name, kwargs)
+CELLS = {
+    # H1: qwen2-vl-72b x decode_32k -- the paper-representative cell
+    # (BFP-quantized decode) and the most collective-bound overall.
+    "h1": ("qwen2-vl-72b", "decode_32k", [
+        ("base_auto", dict()),                     # auto kv: head_dim mode
+        ("kv_seq", dict(kv_shard="seq")),          # flash-decoding layout
+        ("kv_seq_int8kv", dict(kv_shard="seq",
+                               config_override=dict(kv_cache_quant=True))),
+    ]),
+    # H2: granite-moe-3b-a800m x train_4k -- worst useful-flops ratio and
+    # most collective-bound train cell.
+    "h2": ("granite-moe-3b-a800m", "train_4k", [
+        ("base_tp16", dict()),
+        ("pure_fsdp", dict(tp=False)),
+        ("pure_fsdp_cf1", dict(tp=False,
+                               config_override=dict(capacity_factor=1.0))),
+    ]),
+    # H3: llama3.2-1b x train_4k -- representative small dense train,
+    # collective-bound at TP=16.
+    "h3": ("llama3.2-1b", "train_4k", [
+        ("base_tp16", dict()),
+        ("pure_fsdp", dict(tp=False)),
+    ]),
+    # decode-fix validation on a second arch (same hypothesis as h1)
+    "h1b": ("qwen3-1.7b", "decode_32k", [
+        ("base_auto", dict()),
+        ("kv_seq", dict(kv_shard="seq")),
+        ("kv_seq_int8kv", dict(kv_shard="seq",
+                               config_override=dict(kv_cache_quant=True))),
+    ]),
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--cell", required=True, choices=sorted(CELLS))
+    ap.add_argument("--out", default="results/hillclimb")
+    args = ap.parse_args()
+    arch, shape, variants = CELLS[args.cell]
+    os.makedirs(args.out, exist_ok=True)
+    for name, kw in variants:
+        t0 = time.time()
+        try:
+            rec = dryrun_cell(arch, shape, **kw)
+        except Exception as e:
+            import traceback
+            rec = dict(arch=arch, shape=shape, status="error",
+                       error=str(e), traceback=traceback.format_exc()[-2000:])
+        rec["variant"] = name
+        path = os.path.join(args.out, f"{args.cell}__{name}.json")
+        with open(path, "w") as f:
+            json.dump(rec, f, indent=1, default=str)
+        if rec["status"] == "ok":
+            print(f"=== {args.cell}/{name} ({time.time()-t0:.0f}s)")
+            print_record(rec)
+        else:
+            print(f"=== {args.cell}/{name} ERROR: {rec.get('error')}")
+
+
+if __name__ == "__main__":
+    main()

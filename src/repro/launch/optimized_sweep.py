@@ -1,0 +1,69 @@
+import os
+os.environ.setdefault(
+    "XLA_FLAGS", "--xla_force_host_platform_device_count=256")
+
+# Optimized configuration sweep: apply the §Perf hillclimb recipes to every
+# applicable cell and record the optimized roofline table.
+#   decode/long cells : kv_shard=seq + int8 KV cache (H1 recipe)
+#   train/prefill of <=2B-dense archs : tp_off pure-FSDP (H3 recipe)
+#
+#   REPRO_DRYRUN_DEVICES=256 PYTHONPATH=src \
+#       python -m repro.launch.optimized_sweep --out results/dryrun_opt
+
+import argparse
+import json
+import traceback
+
+from repro.configs.base import ARCH_IDS, SHAPES, get_arch, shape_applicable
+from repro.launch.dryrun import dryrun_cell, print_record
+
+# archs where the H3 pure-FSDP remap beats TP on the production mesh
+SMALL_DENSE = ("llama3.2-1b", "qwen3-1.7b", "h2o-danube-1.8b",
+               "musicgen-large", "granite-moe-3b-a800m", "olmoe-1b-7b",
+               "zamba2-1.2b", "mamba2-2.7b", "phi3-mini-3.8b")
+
+
+def variant_for(arch: str, shape_name: str):
+    kind = SHAPES[shape_name].kind
+    if kind == "decode":
+        return dict(kv_shard="auto",
+                    config_override=dict(kv_cache_quant=True))
+    if arch in SMALL_DENSE:
+        return dict(tp=False)
+    return None            # big-model train/prefill: baseline is right
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="results/dryrun_opt")
+    ap.add_argument("--kinds", default="decode",
+                    help="comma list of kinds to sweep (decode,train,prefill)")
+    args = ap.parse_args()
+    kinds = set(args.kinds.split(","))
+    os.makedirs(args.out, exist_ok=True)
+    for arch in ARCH_IDS[:10]:
+        for shape_name, shape in SHAPES.items():
+            if shape.kind not in kinds:
+                continue
+            if not shape_applicable(get_arch(arch), shape)[0]:
+                continue
+            kw = variant_for(arch, shape_name)
+            if kw is None:
+                continue
+            try:
+                rec = dryrun_cell(arch, shape_name, **kw)
+            except Exception as e:
+                rec = dict(arch=arch, shape=shape_name, status="error",
+                           error=str(e),
+                           traceback=traceback.format_exc()[-1500:])
+            path = os.path.join(args.out, f"{arch}__{shape_name}__opt.json")
+            with open(path, "w") as f:
+                json.dump(rec, f, indent=1, default=str)
+            if rec["status"] == "ok":
+                print_record(rec)
+            else:
+                print(f"[ERROR] {arch} x {shape_name}: {rec.get('error')}")
+
+
+if __name__ == "__main__":
+    main()

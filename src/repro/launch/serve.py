@@ -1,0 +1,70 @@
+"""Serving launcher: quantize a model with a mixed BFP policy and serve
+batched requests -- the llama-cli analogue of the paper's evaluation.
+
+  PYTHONPATH=src python -m repro.launch.serve --arch tinyllama-1.1b \
+      --reduced --policy paper_llama_mix --tokens 32
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from repro.configs.base import get_arch
+from repro.core.policy import get_policy
+from repro.core.qlinear import quantize_params, quantized_param_bytes
+from repro.models import transformer as T
+from repro.serving.engine import Engine, ServeConfig
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--policy", default="default_serve_mix")
+    ap.add_argument("--no-quant", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=6)   # paper: 6 tokens
+    ap.add_argument("--tokens", type=int, default=10)      # paper: 10 tokens
+    ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = get_arch(args.arch, reduced=args.reduced)
+    if not cfg.embed_input:
+        raise SystemExit(f"{args.arch} has a stub modality frontend; "
+                         "serve driver needs token inputs")
+    key = jax.random.PRNGKey(args.seed)
+    params = T.init_params(cfg, key)
+    if args.no_quant:
+        qp = params
+        print("serving UNQUANTIZED (baseline)")
+    else:
+        t0 = time.time()
+        qp, report = quantize_params(params, get_policy(args.policy))
+        counts = {}
+        for v in report.values():
+            if v:
+                counts[v] = counts.get(v, 0) + 1
+        sizes = quantized_param_bytes(qp)
+        print(f"quantized with policy {args.policy} in {time.time()-t0:.1f}s:"
+              f" {counts}; packed {sizes['packed']/2**20:.1f} MiB + residual "
+              f"{sizes['unpacked']/2**20:.1f} MiB")
+
+    engine = Engine(cfg, qp, ServeConfig(max_new_tokens=args.tokens,
+                                         temperature=args.temperature))
+    rng = np.random.default_rng(args.seed)
+    prompts = [list(rng.integers(0, cfg.vocab_size, args.prompt_len))
+               for _ in range(args.batch)]
+    outs = engine.generate(prompts)
+    for i, o in enumerate(outs[:4]):
+        print(f"req {i}: {o}")
+    s = engine.stats
+    print(f"prefill {s['prefill_s']:.3f}s, decode {s['decode_s']:.3f}s, "
+          f"{s['tok_per_s']:.1f} tok/s ({s['tokens']} tokens)")
+
+
+if __name__ == "__main__":
+    main()

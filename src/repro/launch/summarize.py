@@ -1,0 +1,97 @@
+"""Summarize dry-run JSON artifacts into the EXPERIMENTS.md tables.
+
+  PYTHONPATH=src python -m repro.launch.summarize results/dryrun_single \
+      [results/dryrun_multi ...]
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+from typing import Dict, List
+
+
+def load(dirpath: str) -> List[Dict]:
+    recs = []
+    for name in sorted(os.listdir(dirpath)):
+        if name.endswith(".json"):
+            with open(os.path.join(dirpath, name)) as f:
+                recs.append(json.load(f))
+    return recs
+
+
+def fmt_bytes(b) -> str:
+    return f"{float(b)/2**30:.2f}"
+
+
+def dryrun_table(recs: List[Dict]) -> str:
+    rows = ["| arch | shape | mesh | status | HBM/chip GiB (args+temp+out) "
+            "| compile s |",
+            "|---|---|---|---|---|---|"]
+    for r in recs:
+        mesh = "2x16x16" if r.get("multi_pod") else "16x16"
+        if r["status"] == "skipped":
+            rows.append(f"| {r['arch']} | {r['shape']} | {mesh} | SKIP "
+                        f"(full attention @524k) | - | - |")
+            continue
+        if r["status"] != "ok":
+            rows.append(f"| {r['arch']} | {r['shape']} | {mesh} | "
+                        f"ERROR {r.get('error','')[:60]} | - | - |")
+            continue
+        m = r["memory"]
+        hbm = (f"{fmt_bytes(m['argument_size_in_bytes'])}+"
+               f"{fmt_bytes(m['temp_size_in_bytes'])}+"
+               f"{fmt_bytes(m['output_size_in_bytes'])}")
+        rows.append(f"| {r['arch']} | {r['shape']} | {mesh} | ok | {hbm} | "
+                    f"{r['compile_s']} |")
+    return "\n".join(rows)
+
+
+def roofline_table(recs: List[Dict]) -> str:
+    rows = ["| arch | shape | compute ms | memory ms | coll ms | dominant "
+            "| useful/HLO | roofline MFU | what would move the dominant "
+            "term |",
+            "|---|---|---|---|---|---|---|---|---|"]
+    for r in recs:
+        if r["status"] != "ok" or r.get("multi_pod"):
+            continue
+        rf = r["roofline"]
+        hint = _hint(r)
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | {rf['compute_s']*1e3:.2f} | "
+            f"{rf['memory_s']*1e3:.2f} | {rf['collective_s']*1e3:.2f} | "
+            f"{rf['dominant']} | {rf['useful_flops_fraction']:.2f} | "
+            f"{rf['mfu']:.3f} | {hint} |")
+    return "\n".join(rows)
+
+
+def _hint(r: Dict) -> str:
+    rf = r["roofline"]
+    dom = rf["dominant"]
+    kind = r["kind"]
+    if dom == "memory" and kind == "decode":
+        mm = r.get("memory_model", {})
+        if mm and mm.get("cache", 0) > mm.get("weights", 0):
+            return "KV/SSM cache traffic: quantize cache or shard wider"
+        return "weight traffic: lower-bit variants / wider TP"
+    if dom == "memory":
+        return "activation traffic: bigger fused blocks, less remat"
+    if dom == "collective":
+        return "resharding: SP/reduce-scatter, overlap, fewer TP syncs"
+    return "MXU utilization: larger per-chip tiles / fewer small dots"
+
+
+def main() -> None:
+    for d in sys.argv[1:]:
+        recs = load(d)
+        print(f"\n## {d} ({len(recs)} records)\n")
+        print("### Dry-run\n")
+        print(dryrun_table(recs))
+        singles = [r for r in recs if not r.get("multi_pod")]
+        if singles:
+            print("\n### Roofline (single-pod)\n")
+            print(roofline_table(recs))
+
+
+if __name__ == "__main__":
+    main()

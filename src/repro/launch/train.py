@@ -1,0 +1,49 @@
+"""Training launcher: --arch <id> [--reduced] with the full fault-tolerant
+loop (checkpoint/restart, watchdog, microbatching).
+
+On a real pod this runs once per host under the cluster scheduler; the mesh
+comes from jax.devices() (elastic). On this CPU container use --reduced.
+
+  PYTHONPATH=src python -m repro.launch.train --arch llama3.2-1b --reduced \
+      --steps 200 --batch 8 --seq 128 --ckpt-dir /tmp/ckpt
+"""
+from __future__ import annotations
+
+import argparse
+
+from repro.configs.base import get_arch
+from repro.optim.adamw import AdamWConfig
+from repro.training.loop import run_training
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--warmup", type=int, default=20)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = get_arch(args.arch, reduced=args.reduced)
+    opt = AdamWConfig(lr=args.lr, warmup_steps=args.warmup,
+                      total_steps=args.steps)
+    res = run_training(cfg, steps=args.steps, global_batch=args.batch,
+                       seq_len=args.seq, ckpt_dir=args.ckpt_dir,
+                       ckpt_every=args.ckpt_every,
+                       microbatches=args.microbatches, opt=opt,
+                       seed=args.seed)
+    t = res["timing"]
+    print(f"done: final loss {res['losses'][-1]:.4f}, "
+          f"step p50 {t.get('p50', 0):.3f}s p99 {t.get('p99', 0):.3f}s, "
+          f"stragglers {t.get('stragglers', 0)}")
+
+
+if __name__ == "__main__":
+    main()

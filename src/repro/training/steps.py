@@ -1,0 +1,188 @@
+"""Loss + train/serve step functions (the units the launcher jits/lowers).
+
+``make_train_step`` builds a donated, microbatch-accumulating train step:
+  * params master fp32, compute cast bf16 (mixed precision)
+  * optional gradient accumulation via lax.scan over microbatches,
+    accumulated in ``accum_dtype`` (bf16 halves accumulation HBM -- a
+    gradient-compression knob; cross-replica reduction precision is
+    XLA-controlled, see distributed/compress.py for the explicit path)
+  * remat is a model-config knob (scan-over-layers + jax.checkpoint)
+
+``make_serve_steps`` builds prefill/decode against (optionally quantized)
+serve params -- decode with BFP weights is the paper's deployment shape.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import transformer as T
+from repro.optim import adamw
+
+
+def cast_params(params, dtype):
+    def c(x):
+        return x.astype(dtype) if (hasattr(x, "dtype")
+                                   and jnp.issubdtype(x.dtype, jnp.floating)
+                                   and x.ndim >= 2) else x
+    return jax.tree.map(c, params)
+
+
+def softmax_xent(logits: jnp.ndarray, labels: jnp.ndarray,
+                 z_loss: float = 1e-4) -> jnp.ndarray:
+    """logits (..., V) f32, labels (...) int32. Mean token loss + z-loss.
+
+    Uses one-hot contraction (not take_along_axis) so a vocab-sharded
+    logits tensor reduces with a tiny all-reduce instead of an all-gather.
+    """
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    oh = jax.nn.one_hot(labels, logits.shape[-1], dtype=logits.dtype)
+    ll = jnp.sum(logits * oh, axis=-1)
+    loss = (lse - ll).mean()
+    if z_loss:
+        loss = loss + z_loss * (lse ** 2).mean()
+    return loss
+
+
+def chunked_xent(h: jnp.ndarray, head, labels: jnp.ndarray, *,
+                 tie_wte=None, chunk: int = 2048,
+                 z_loss: float = 1e-4) -> jnp.ndarray:
+    """Cross entropy from hidden states, chunked over tokens.
+
+    Never materializes the full (B, S, V) fp32 logits: each chunk of
+    ``chunk`` tokens computes its own head matmul + lse (rematerialized in
+    the backward pass). This is the standard memory/collective fix for
+    large-vocab training -- see EXPERIMENTS.md §Perf.
+    """
+    B, S, d = h.shape
+    hf = h.reshape(B * S, d)
+    lf = labels.reshape(B * S)
+    n = B * S
+    c = min(chunk, n)
+    if n % c:
+        pad = c - n % c
+        hf = jnp.pad(hf, ((0, pad), (0, 0)))
+        lf = jnp.concatenate([lf, jnp.full((pad,), -1, lf.dtype)])
+        n = n + pad
+    hf = hf.reshape(n // c, c, d)
+    lf = lf.reshape(n // c, c)
+
+    @jax.checkpoint
+    def body(acc, xs):
+        hc, lc = xs
+        if tie_wte is not None:
+            logits = jnp.einsum("td,vd->tv", hc.astype(jnp.float32),
+                                tie_wte.astype(jnp.float32))
+        else:
+            logits = jnp.dot(hc, head.astype(hc.dtype)).astype(jnp.float32)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        oh = jax.nn.one_hot(lc, logits.shape[-1], dtype=logits.dtype)
+        ll = jnp.sum(logits * oh, axis=-1)
+        valid = (lc >= 0).astype(jnp.float32)
+        loss_sum = jnp.sum((lse - ll) * valid)
+        z_sum = jnp.sum((lse ** 2) * valid)
+        nvalid = valid.sum()
+        return (acc[0] + loss_sum, acc[1] + z_sum, acc[2] + nvalid), None
+
+    (loss_sum, z_sum, nvalid), _ = jax.lax.scan(
+        body, (jnp.zeros(()), jnp.zeros(()), jnp.zeros(())), (hf, lf))
+    return loss_sum / nvalid + z_loss * z_sum / nvalid
+
+
+def make_loss_fn(cfg: ModelConfig, aux_weight: float = 1e-2):
+    use_chunked = cfg.loss_chunk and cfg.vocab_size >= 8192
+
+    def loss_fn(params, batch):
+        compute = cast_params(params, jnp.dtype(cfg.dtype))
+        if use_chunked:
+            h, aux, _ = T.forward_seq(
+                compute, cfg, return_hidden=True,
+                tokens=batch.get("tokens"), embeds=batch.get("embeds"),
+                positions=batch.get("positions"))
+            tie = compute["wte"] if cfg.tie_embeddings else None
+            head = None if cfg.tie_embeddings else compute["lm_head"]
+            loss = chunked_xent(h, head, batch["labels"], tie_wte=tie,
+                                chunk=cfg.loss_chunk)
+        else:
+            logits, aux, _ = T.forward_seq(
+                compute, cfg,
+                tokens=batch.get("tokens"), embeds=batch.get("embeds"),
+                positions=batch.get("positions"))
+            loss = softmax_xent(logits, batch["labels"])
+        loss = loss + aux_weight * aux
+        return loss, dict(loss=loss, aux=aux)
+    return loss_fn
+
+
+def make_train_step(cfg: ModelConfig, opt: adamw.AdamWConfig,
+                    microbatches: int = 1, accum_dtype=jnp.float32):
+    loss_fn = make_loss_fn(cfg)
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def train_step(state: Dict[str, Any], batch: Dict[str, Any]):
+        params = state["params"]
+        if microbatches <= 1:
+            (loss, metrics), grads = grad_fn(params, batch)
+        else:
+            def micro(accum, mb):
+                (l, m), g = grad_fn(params, mb)
+                accum = jax.tree.map(
+                    lambda a, b: a + b.astype(accum_dtype), accum, g)
+                return accum, (l, m["aux"])
+
+            def split(x):
+                B = x.shape[0]
+                mb = B // microbatches
+                return x.reshape((microbatches, mb) + x.shape[1:])
+            # M-RoPE positions carry a leading (3,) dim: split on batch dim
+            mbs = {}
+            for k, v in batch.items():
+                if k == "positions" and v.ndim == 3:
+                    mbs[k] = jnp.moveaxis(split(jnp.moveaxis(v, 0, 1)), 2, 1)
+                else:
+                    mbs[k] = split(v)
+            zeros = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, accum_dtype), params)
+            grads, (losses, auxes) = jax.lax.scan(
+                micro, zeros, mbs, unroll=True if cfg.scan_unroll else 1)
+            grads = jax.tree.map(lambda g: (g / microbatches).astype(
+                jnp.float32), grads)
+            loss = losses.mean()
+            metrics = dict(loss=loss, aux=auxes.mean())
+        new_params, new_opt, om = adamw.apply_updates(
+            opt, params, grads, state["opt"])
+        metrics.update(om)
+        return dict(params=new_params, opt=new_opt,
+                    step=state["step"] + 1), metrics
+
+    return train_step
+
+
+def make_serve_steps(cfg: ModelConfig):
+    def prefill(params, batch):
+        # logits for the LAST position only: never materializes the
+        # (B, S, V) tensor (it would dominate prefill memory+collectives)
+        h, _, caches = T.forward_seq(
+            params, cfg, tokens=batch.get("tokens"),
+            embeds=batch.get("embeds"), positions=batch.get("positions"),
+            want_cache=True, return_hidden=True)
+        logits = T._logits(params, cfg, h[:, -1])
+        return logits, caches
+
+    def decode(params, cache, batch):
+        return T.decode_step(params, cfg, cache,
+                             tokens=batch.get("tokens"),
+                             embeds=batch.get("embeds"),
+                             position=batch["position"])
+
+    return prefill, decode
+
+
+def init_train_state(cfg: ModelConfig, opt: adamw.AdamWConfig, key):
+    params = T.init_params(cfg, key, dtype=jnp.float32)
+    return dict(params=params, opt=adamw.init_state(opt, params),
+                step=jnp.zeros((), jnp.int32))

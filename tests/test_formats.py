@@ -1,0 +1,133 @@
+"""Format-layer tests: pack/unpack, round-trip error bounds, density."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import formats as F
+from repro.core import quantize as Q
+
+WEIGHT_VARIANTS = ["q2_k", "q3_k", "q4_k", "q5_k", "q6_k", "q8_0"]
+
+# worst-case |w - dq(q(w))| / absmax_block for each variant (loose but
+# monotone bounds: error halves roughly per extra bit)
+ERR_BOUND = {"q2_k": 0.65, "q3_k": 0.40, "q4_k": 0.12, "q5_k": 0.07,
+             "q6_k": 0.06, "q8_0": 0.006}
+
+
+def _rand(key, K=512, N=128, scale=1.0):
+    return jax.random.normal(jax.random.PRNGKey(key), (K, N)) * scale
+
+
+@pytest.mark.parametrize("variant", WEIGHT_VARIANTS)
+def test_roundtrip_error_bound(variant):
+    w = _rand(0)
+    t = Q.quantize(variant, w)
+    wd = Q.dequantize(t)
+    # per-element error bounded relative to the max |w| in its block
+    fmt = F.get_format(t.variant)
+    blk = fmt.block
+    K, N = w.shape
+    wb = np.asarray(w).reshape(K // blk, blk, N)
+    amax = np.abs(wb).max(axis=1, keepdims=True) + 1e-9
+    rel = np.abs(np.asarray(wd).reshape(wb.shape) - wb) / amax
+    assert rel.max() <= ERR_BOUND[variant], rel.max()
+
+
+@pytest.mark.parametrize("variant", WEIGHT_VARIANTS)
+def test_bits_per_weight_matches_format(variant):
+    w = _rand(1)
+    t = Q.quantize(variant, w)
+    assert abs(t.bits_per_weight
+               - F.get_format(t.variant).bits_per_weight) < 1e-6
+
+
+def test_error_monotone_in_bits():
+    w = _rand(2)
+    errs = []
+    for v in WEIGHT_VARIANTS:
+        t = Q.quantize(v, w)
+        errs.append(float(jnp.sqrt(jnp.mean((Q.dequantize(t) - w) ** 2))))
+    assert errs == sorted(errs, reverse=True), errs
+
+
+def test_slab_pack_unpack_roundtrip():
+    for bits, sb in [(1, 256), (2, 256), (4, 256), (2, 64)]:
+        rng = np.random.default_rng(bits)
+        q = rng.integers(0, 1 << bits, size=(512, 64)).astype(np.uint8)
+        packed = F.slab_pack(jnp.asarray(q), bits, sb)
+        assert packed.shape == (512 * bits // 8, 64)
+        out = F.slab_unpack(packed, bits, sb)
+        np.testing.assert_array_equal(np.asarray(out), q)
+
+
+def test_fallback_rule():
+    # llama.cpp: K % 256 != 0 falls back to q8_0 (needs K % 32 == 0)
+    assert F.pick_fallback("q2_k", 512) == "q2_k"
+    assert F.pick_fallback("q2_k", 29568) == "q8_0"   # qwen2-vl d_ff
+    with pytest.raises(ValueError):
+        F.pick_fallback("q2_k", 100)
+
+
+def test_q8k_bsums_consistent():
+    x = jax.random.normal(jax.random.PRNGKey(3), (4, 512))
+    qx = Q.quantize_q8_k(x)
+    qs = np.asarray(qx["qs"], dtype=np.int32)
+    bs = np.asarray(qx["bsums"], dtype=np.int32)
+    np.testing.assert_array_equal(
+        qs.reshape(qs.shape[0], -1, 16).sum(-1), bs)
+
+
+@settings(max_examples=20, deadline=None)
+@given(scale=st.floats(1e-3, 1e3), key=st.integers(0, 2**16),
+       variant=st.sampled_from(WEIGHT_VARIANTS))
+def test_scale_invariance_property(scale, key, variant):
+    """Quantization error scales linearly with the data (BFP property)."""
+    w = _rand(key, K=256, N=32)
+    t1 = Q.quantize(variant, w)
+    t2 = Q.quantize(variant, w * scale)
+    e1 = np.abs(np.asarray(Q.dequantize(t1) - w)).max()
+    e2 = np.abs(np.asarray(Q.dequantize(t2) - w * scale)).max()
+    assert e2 <= (e1 * scale) * 1.25 + 1e-6
+
+
+@settings(max_examples=15, deadline=None)
+@given(key=st.integers(0, 2**16),
+       variant=st.sampled_from(["q6_k", "q8_0"]))
+def test_idempotence_property(key, variant):
+    """Re-quantizing an already-dequantized tensor is near-stationary.
+
+    This holds for the *symmetric* variants (scale refit on grid values is
+    stable). The affine variants (Q2_K/Q4_K/Q5_K) re-fit scale AND min per
+    block, which can oscillate by a quantization step -- so they are
+    covered by the absolute error bound test instead."""
+    step = {"q6_k": 0.12, "q8_0": 0.02}[variant]
+    w = _rand(key, K=256, N=32)
+    wd = Q.dequantize(Q.quantize(variant, w))
+    wdd = Q.dequantize(Q.quantize(variant, wd))
+    err = np.abs(np.asarray(wdd - wd))
+    base = np.abs(np.asarray(wd)).max() + 1e-9
+    assert err.max() / base < step
+
+
+def test_q8k_roundtrip():
+    x = jax.random.normal(jax.random.PRNGKey(0), (8, 512))
+    qx = Q.quantize_q8_k(x)
+    xd = Q.dequantize_q8_k(qx)
+    rel = float(jnp.abs(xd - x).max() / jnp.abs(x).max())
+    assert rel < 0.02
+
+
+def test_qtensor_pytree_jit():
+    w = _rand(4)
+    t = Q.quantize("q3_k", w)
+    out = jax.jit(Q.dequantize)(t)
+    np.testing.assert_allclose(np.asarray(out),
+                               np.asarray(Q.dequantize(t)), rtol=1e-6)
+
+
+def test_qtensor_spec_nbytes():
+    s = Q.qtensor_spec("q2_k", 512, 384)
+    assert s.nbytes == F.Q2_K.nbytes(512, 384)
+    assert abs(s.bits_per_weight - 2.625) < 1e-9

@@ -1,0 +1,85 @@
+"""Micro-ISA driver + simulator tests (paper Table I / §III-C)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import isa
+from repro.core.quantize import quantize, quantize_q8_k
+from repro.kernels import ref
+
+
+def _setup(variant="q2_k", M=24, K=512, N=192, key=0):
+    kx, kw = jax.random.split(jax.random.PRNGKey(key))
+    x = np.asarray(jax.random.normal(kx, (M, K)), np.float32)
+    w = quantize(variant, jax.random.normal(kw, (K, N)) * 0.2)
+    return x, w
+
+
+def test_stream_structure_follows_paper():
+    """CONFIG first; whole-input load when it fits; output-stationary
+    LOAD_W/SCHEDULE sweeps; STORE per output tile."""
+    x, w = _setup()
+    plan = isa.plan_tiling(24, 512, 192, "q2_k", input_buf_bytes=1 << 30,
+                           tile_n=64)
+    stream = isa.generate_stream(24, 512, 192, "q2_k", plan)
+    assert stream[0].op == isa.Op.CONFIG
+    assert stream[0].weight_type == "q2_k"
+    assert stream[1].op == isa.Op.LOAD_I        # input fits -> sent once
+    kinds = [i.op for i in stream]
+    assert kinds.count(isa.Op.STORE) == 3       # N/64 x M/128 output tiles
+    assert isa.Op.SCHEDULE in kinds
+
+
+def test_sim_matches_integer_reference():
+    x, w = _setup("q2_k")
+    out, stats = isa.run_matmul(x, w)
+    qx = quantize_q8_k(jnp.asarray(x))
+    expect = np.asarray(ref.matmul_q8k_ref(qx, w))
+    np.testing.assert_allclose(out, expect, rtol=1e-5,
+                               atol=1e-5 * np.abs(expect).max())
+    assert stats.schedules >= 1
+
+
+@pytest.mark.parametrize("variant", ["q2_k", "q3_k"])
+def test_sim_tiled_equals_untiled(variant):
+    """Output-stationary tiling must not change results (paper §III-C)."""
+    x, w = _setup(variant, M=40, K=768, N=160)
+    plan_small = isa.plan_tiling(40, 768, 160, variant,
+                                 input_buf_bytes=100,   # forces tiling
+                                 weight_buf_bytes=60000,
+                                 tile_m=16, tile_n=64)
+    assert not plan_small.whole_input
+    out_t, stats_t = isa.run_matmul(x, w, plan_small)
+    out_u, _ = isa.run_matmul(x, w)
+    np.testing.assert_allclose(out_t, out_u, rtol=1e-5,
+                               atol=1e-5 * np.abs(out_u).max())
+    assert stats_t.schedules > 1
+
+
+def test_sim_rejects_wrong_weight_type():
+    x, w = _setup("q2_k")
+    stream = isa.generate_stream(24, 512, 192, "q3_k")
+    sim = isa.FBFQSimulator(x, w)
+    with pytest.raises(AssertionError):
+        sim.run(stream)
+
+
+def test_stream_byte_accounting():
+    """Weight stream bytes == packed tensor bytes when each tile is sent
+    once (the accelerator's bandwidth model)."""
+    x, w = _setup("q3_k", M=16, K=512, N=128)
+    plan = isa.plan_tiling(16, 512, 128, "q3_k", tile_m=16, tile_n=128)
+    out, stats = isa.run_matmul(x, w, plan)
+    assert stats.weight_bytes == w.nbytes
+    assert stats.output_bytes == 16 * 128 * 4
+
+
+def test_qtensor_tile_slicing():
+    _, w = _setup("q3_k", K=768, N=96)
+    t = isa.qtensor_tile(w, 256, 768, 32, 64)
+    assert t.shape == (512, 32)
+    from repro.core.quantize import dequantize
+    full = np.asarray(dequantize(w))
+    part = np.asarray(dequantize(t))
+    np.testing.assert_allclose(part, full[256:768, 32:64], rtol=1e-6)

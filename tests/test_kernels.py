@@ -1,0 +1,123 @@
+"""Per-kernel validation: Pallas (interpret mode) vs pure-jnp oracle,
+swept over shapes, dtypes and variants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import quantize as Q
+from repro.kernels import ops, ref
+from repro.kernels.bfp_matmul import bfp_matmul_pallas, vmem_bytes
+from repro.kernels.q8k_quant import q8k_quantize_pallas
+
+VARIANTS = ["q2_k", "q3_k", "q4_k", "q5_k", "q6_k", "q8_0"]
+
+
+def _mk(key, M, K, N, dtype=jnp.float32):
+    kx, kw = jax.random.split(jax.random.PRNGKey(key))
+    x = jax.random.normal(kx, (M, K), jnp.float32).astype(dtype)
+    w = jax.random.normal(kw, (K, N), jnp.float32) * 0.2
+    return x, w
+
+
+@pytest.mark.parametrize("variant", VARIANTS)
+@pytest.mark.parametrize("shape", [(8, 256, 128), (24, 768, 200),
+                                   (1, 512, 384), (130, 512, 96)])
+def test_pallas_vs_ref_shapes(variant, shape):
+    M, K, N = shape
+    x, w = _mk(0, M, K, N)
+    t = Q.quantize(variant, w)
+    o_ref = np.asarray(ref.matmul_ref(x, t))
+    o_pal = np.asarray(bfp_matmul_pallas(
+        x, t, interpret=True, compute_dtype=jnp.float32,
+        out_dtype=jnp.float32, block_m=16, block_n=128, block_k=256))
+    np.testing.assert_allclose(o_pal, o_ref, rtol=2e-5,
+                               atol=2e-5 * np.abs(o_ref).max())
+
+
+@pytest.mark.parametrize("variant", ["q2_k", "q3_k"])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_pallas_dtypes(variant, dtype):
+    x, w = _mk(1, 16, 512, 128, dtype=dtype)
+    t = Q.quantize(variant, w)
+    o_ref = np.asarray(ref.matmul_ref(x.astype(jnp.float32), t))
+    o_pal = np.asarray(bfp_matmul_pallas(
+        x, t, interpret=True, compute_dtype=jnp.float32,
+        out_dtype=jnp.float32, block_m=8, block_n=128, block_k=256))
+    tol = 2e-2 if dtype == jnp.bfloat16 else 1e-4
+    np.testing.assert_allclose(o_pal, o_ref, rtol=tol,
+                               atol=tol * np.abs(o_ref).max())
+
+
+@pytest.mark.parametrize("block_k", [256, 512])
+@pytest.mark.parametrize("block_n", [128, 256])
+def test_pallas_block_sweep(block_k, block_n):
+    x, w = _mk(2, 32, 1024, 256)
+    t = Q.quantize("q2_k", w)
+    o_ref = np.asarray(ref.matmul_ref(x, t))
+    o_pal = np.asarray(bfp_matmul_pallas(
+        x, t, interpret=True, compute_dtype=jnp.float32,
+        out_dtype=jnp.float32, block_m=16, block_n=block_n,
+        block_k=block_k))
+    np.testing.assert_allclose(o_pal, o_ref, rtol=2e-5,
+                               atol=2e-5 * np.abs(o_ref).max())
+
+
+def test_integer_datapath_matches_dequant():
+    """llama.cpp vec_dot (integer) semantics vs dequant matmul."""
+    x, w = _mk(3, 16, 512, 64)
+    qx = Q.quantize_q8_k(x)
+    xd = Q.dequantize_q8_k(qx)
+    for v in ("q2_k", "q3_k"):
+        t = Q.quantize(v, w)
+        oi = np.asarray(ref.matmul_q8k_ref(qx, t))
+        od = np.asarray(ref.matmul_ref(xd, t))
+        np.testing.assert_allclose(oi, od, rtol=1e-5,
+                                   atol=1e-5 * np.abs(od).max())
+
+
+def test_q8k_quant_kernel_matches_jnp():
+    x = jax.random.normal(jax.random.PRNGKey(4), (24, 768))
+    qk = q8k_quantize_pallas(x, interpret=True)
+    qj = Q.quantize_q8_k(x)
+    np.testing.assert_allclose(np.asarray(qk["d"]), np.asarray(qj["d"]),
+                               rtol=1e-6)
+    # quant values may differ by 1 ulp of rounding at scale boundaries
+    assert np.abs(np.asarray(qk["qs"], np.int32)
+                  - np.asarray(qj["qs"], np.int32)).max() <= 1
+    np.testing.assert_array_equal(
+        np.asarray(qk["qs"], np.int32).reshape(24, -1, 16).sum(-1),
+        np.asarray(qk["bsums"], np.int32))
+
+
+def test_ops_dispatch_and_batched():
+    x = jax.random.normal(jax.random.PRNGKey(5), (2, 3, 512))
+    w = jax.random.normal(jax.random.PRNGKey(6), (512, 128)) * 0.1
+    t = Q.quantize("q3_k", w)
+    o_xla = ops.bfp_matmul(x, t, impl="xla", compute_dtype=jnp.float32,
+                           out_dtype=jnp.float32)
+    o_pal = ops.bfp_matmul(x, t, impl="pallas", interpret=True,
+                           compute_dtype=jnp.float32,
+                           out_dtype=jnp.float32)
+    assert o_xla.shape == (2, 3, 128)
+    np.testing.assert_allclose(np.asarray(o_pal), np.asarray(o_xla),
+                               rtol=2e-5, atol=1e-4)
+
+
+def test_vmem_budget_fits():
+    """Kernel working set must fit v5e VMEM (16 MiB usable ~= 0.5 for us)."""
+    for v in VARIANTS:
+        b = vmem_bytes(v, 128, 256, 512)
+        assert b["total"] < 8 * 2**20, (v, b)
+
+
+def test_pallas_under_jit():
+    x, w = _mk(7, 8, 256, 128)
+    t = Q.quantize("q2_k", w)
+    f = jax.jit(lambda xx, tt: bfp_matmul_pallas(
+        xx, tt, interpret=True, compute_dtype=jnp.float32,
+        out_dtype=jnp.float32, block_m=8, block_n=128, block_k=256))
+    o = f(x, t)
+    np.testing.assert_allclose(np.asarray(o),
+                               np.asarray(ref.matmul_ref(x, t)),
+                               rtol=2e-5, atol=1e-4)

@@ -1,0 +1,116 @@
+"""Mixed-quantization policy tests: Table III reproduction (layer counts +
+model sizes) and policy mechanics."""
+import pytest
+
+from repro.core import policy as POL
+from repro.configs.base import get_arch
+
+
+def _llama_matmuls(cfg):
+    """(path, K, N) for every MatMul layer, llama-family."""
+    d, L = cfg.d_model, cfg.n_layers
+    H, KH, Dh, f, V = (cfg.n_heads, cfg.n_kv_heads, cfg.d_head, cfg.d_ff,
+                       cfg.vocab_size)
+    out = []
+    for i in range(L):
+        out += [
+            (f"layers/attn/wq", d, H * Dh), (f"layers/attn/wk", d, KH * Dh),
+            (f"layers/attn/wv", d, KH * Dh), (f"layers/attn/wo", H * Dh, d),
+            (f"layers/mlp/w_gate", d, f), (f"layers/mlp/w_up", d, f),
+            (f"layers/mlp/w_down", f, d),
+        ]
+    out.append(("lm_head", d, V))
+    return out
+
+
+def _gpt2_matmuls(cfg):
+    d, L, f, V = cfg.d_model, cfg.n_layers, cfg.d_ff, cfg.vocab_size
+    out = []
+    for i in range(L):
+        out += [("layers/attn/c_attn", d, 3 * d),
+                ("layers/attn/c_proj", d, d),
+                ("layers/mlp/c_fc", d, f),
+                ("layers/mlp/c_proj", f, d)]
+    out.append(("lm_head", d, V))
+    return out
+
+
+# paper Table III ground truth: (arch, q2_layers, q3_layers, size_MB)
+TABLE_III = [
+    ("gpt2-paper", 25, 24, 77),
+    ("tinyllama-1.1b", 45, 110, 460),
+    ("mobilellama-1.4b", 49, 120, 560),
+]
+
+
+@pytest.mark.parametrize("arch,q2,q3,size_mb", TABLE_III)
+def test_table3_layer_counts(arch, q2, q3, size_mb):
+    cfg = get_arch(arch)
+    if arch == "gpt2-paper":
+        mms = _gpt2_matmuls(cfg)
+        pol = POL.get_policy("paper_gpt2_mix")
+        extra = [("wte", cfg.vocab_size * cfg.d_model),
+                 ("wpe", cfg.max_position * cfg.d_model)]
+    else:
+        mms = _llama_matmuls(cfg)
+        pol = POL.get_policy("paper_llama_mix")
+        extra = []
+    summ = POL.summarize(pol, mms, extra_f16=extra)
+    counts = summ["counts"]
+    assert counts.get("q2_k", 0) == q2, counts
+    assert counts.get("q3_k", 0) == q3, counts
+
+
+@pytest.mark.parametrize("arch,q2,q3,size_mb", TABLE_III)
+def test_table3_model_sizes(arch, q2, q3, size_mb):
+    """Model sizes within 8% of the paper's Table III (gguf bit-density)."""
+    cfg = get_arch(arch)
+    if arch == "gpt2-paper":
+        mms = _gpt2_matmuls(cfg)
+        pol = POL.get_policy("paper_gpt2_mix")
+        # gguf stores wte quantized (policy maps it) + wpe fp16
+        mms = mms + [("wte", cfg.d_model, cfg.vocab_size)]
+        extra = [("wpe", cfg.max_position * cfg.d_model)]
+    else:
+        mms = _llama_matmuls(cfg)
+        pol = POL.get_policy("paper_llama_mix")
+        mms = mms + [("wte", cfg.d_model, cfg.vocab_size)]
+        extra = []
+    summ = POL.summarize(pol, mms, extra_f16=extra)
+    got_mb = summ["size_bytes_gguf"] / 1e6
+    assert abs(got_mb - size_mb) / size_mb < 0.08, (got_mb, size_mb)
+
+
+def test_paper_param_counts():
+    """Table III parameter counts: GPT2 163M (untied head), TinyLlama 1.1B,
+    MobileLLaMA 1.4B."""
+    import numpy as np
+    for arch, expect in [("gpt2-paper", 163e6), ("tinyllama-1.1b", 1.1e9),
+                         ("mobilellama-1.4b", 1.4e9)]:
+        cfg = get_arch(arch)
+        mms = (_gpt2_matmuls(cfg) if arch == "gpt2-paper"
+               else _llama_matmuls(cfg))
+        n = sum(K * N for _, K, N in mms)
+        n += cfg.vocab_size * cfg.d_model          # wte
+        if cfg.pos_emb == "learned":
+            n += cfg.max_position * cfg.d_model
+        assert abs(n - expect) / expect < 0.06, (arch, n)
+
+
+def test_policy_fallback_k_not_multiple_of_256():
+    pol = POL.get_policy("default_serve_mix")
+    assert pol.variant_for("layers/mlp/w_down", 29568, 8192) == "q8_0"
+    assert pol.variant_for("layers/mlp/w_down", 8192, 2048) == "q3_k"
+
+
+def test_policy_first_match_wins():
+    pol = POL.make_policy("t", [("*attn/wk", "q2_k"), ("*attn/*", "q6_k")])
+    assert pol.variant_for("layers/attn/wk", 512, 512) == "q2_k"
+    assert pol.variant_for("layers/attn/wq", 512, 512) == "q6_k"
+    assert pol.variant_for("layers/mlp/w_up", 512, 512) == "q3_k"  # default
+
+
+def test_policy_none_and_small():
+    pol = POL.make_policy("t", [("*norm*", "none")])
+    assert pol.variant_for("layers/norm/w", 512, 512) is None
+    assert pol.variant_for("x", 512, 8) is None     # N too small
