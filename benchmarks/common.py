@@ -1,6 +1,8 @@
-"""Shared benchmark utilities: timing + CSV emission."""
+"""Shared benchmark utilities: timing + CSV/JSON emission."""
+import json
+import os
 import time
-from typing import Callable
+from typing import Callable, Optional
 
 import jax
 
@@ -22,3 +24,14 @@ def time_jitted(fn: Callable, *args, iters: int = 10, warmup: int = 2):
 
 def emit(name: str, us_per_call: float, derived: str = "") -> None:
     print(f"{name},{us_per_call:.1f},{derived}")
+
+
+def emit_json(payload: dict, path: Optional[str] = None) -> None:
+    """Print a machine-readable result blob (and optionally persist it) so
+    successive PRs can diff the perf trajectory."""
+    text = json.dumps(payload, indent=2, sort_keys=True)
+    print(text)
+    if path:
+        os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+        with open(path, "w") as f:
+            f.write(text + "\n")

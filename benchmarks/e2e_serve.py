@@ -1,7 +1,17 @@
-"""End-to-end serving bench (paper's llama-cli experiment, reduced scale):
-quantize a TinyLlama-family reduced model with the paper's mixed policy,
-serve the paper's workload shape (6-token prompt, 10 new tokens), report
-measured tok/s on CPU for the quantized vs unquantized model."""
+"""End-to-end serving bench (paper's llama-cli experiment, reduced scale).
+
+Quantizes a TinyLlama-family reduced model with the paper's mixed policy
+and drives the continuous-batching engine at queue depths 1 / 4 / 8 / 32
+over the paper's workload shape (6-token prompt, 10 new tokens).  Reports
+decode tok/s, prefill/decode wall time, and -- the quantity the on-device
+decode loop exists to minimize -- host syncs per request.
+
+Output: human CSV rows (``emit``) plus one machine-readable JSON blob
+(``--out`` to persist, default benchmarks/results/e2e_serve.json when run
+as a script) so future PRs can track the perf trajectory.
+"""
+import argparse
+
 import jax
 import numpy as np
 
@@ -10,25 +20,69 @@ from repro.core.policy import get_policy
 from repro.core.qlinear import quantize_params
 from repro.models import transformer as T
 from repro.serving.engine import Engine, ServeConfig
-from benchmarks.common import emit
+from benchmarks.common import emit, emit_json
+
+PROMPT_LEN = 6            # paper workload
+NEW_TOKENS = 10
+QUEUE_DEPTHS = (1, 4, 8, 32)     # 4 = the seed benchmark's batch shape
+MAX_SLOTS = 8
 
 
-def run() -> None:
+def _bench_one(cfg, params, depth: int) -> dict:
+    slots = min(depth, MAX_SLOTS)
+    eng = Engine(cfg, params, ServeConfig(
+        max_new_tokens=NEW_TOKENS, max_slots=slots,
+        decode_chunk=NEW_TOKENS, cache_len=32, prefill_bucket=8))
+    rng = np.random.default_rng(0)
+    prompts = [list(rng.integers(0, cfg.vocab_size, PROMPT_LEN))
+               for _ in range(depth)]
+    for _ in range(2):                         # compile + cache-donation warm
+        eng.generate(prompts)
+    stats = []
+    for _ in range(3):
+        outs = eng.generate(prompts)
+        assert all(len(o) == NEW_TOKENS for o in outs)
+        stats.append(dict(eng.stats))
+    s = sorted(stats, key=lambda d: d["decode_s"])[1]      # median run
+    return dict(queue_depth=depth, slots=slots,
+                tokens=int(s["tokens"]),
+                tok_per_s=round(s["tok_per_s"], 1),
+                prefill_s=round(s["prefill_s"], 4),
+                decode_s=round(s["decode_s"], 4),
+                host_syncs=int(s["host_syncs"]),
+                syncs_per_request=round(s["host_syncs"] / depth, 2),
+                chunks=int(s["chunks"]))
+
+
+def run(out_path: str = None) -> dict:
     cfg = get_arch("tinyllama-1.1b", reduced=True)
     params = T.init_params(cfg, jax.random.PRNGKey(0))
     qp, _ = quantize_params(params, get_policy("paper_llama_mix"))
-    rng = np.random.default_rng(0)
-    prompts = [list(rng.integers(0, cfg.vocab_size, 6)) for _ in range(4)]
 
+    results = dict(
+        benchmark="e2e_serve",
+        arch="tinyllama-1.1b(reduced)",
+        workload=dict(prompt_len=PROMPT_LEN, new_tokens=NEW_TOKENS,
+                      queue_depths=list(QUEUE_DEPTHS), max_slots=MAX_SLOTS),
+        runs=[],
+    )
     for tag, p in [("fp32", params), ("fbfq_mixed_q2q3", qp)]:
-        eng = Engine(cfg, p, ServeConfig(max_new_tokens=10))
-        eng.generate(prompts)          # warmup + compile
-        outs = eng.generate(prompts)
-        s = eng.stats
-        emit(f"e2e_serve_{tag}", s["decode_s"] / max(s["tokens"], 1) * 1e6,
-             f"tok/s={s['tok_per_s']:.1f} prefill_s={s['prefill_s']:.3f} "
-             f"(paper workload: 6-tok prompt, 10 new tokens)")
+        for depth in QUEUE_DEPTHS:
+            rec = _bench_one(cfg, p, depth)
+            rec["params"] = tag
+            results["runs"].append(rec)
+            emit(f"e2e_serve_{tag}_d{depth}",
+                 rec["decode_s"] / max(rec["tokens"], 1) * 1e6,
+                 f"tok/s={rec['tok_per_s']} host_syncs={rec['host_syncs']} "
+                 f"({rec['syncs_per_request']}/req) "
+                 f"prefill_s={rec['prefill_s']}")
+    emit_json(results, out_path)
+    return results
 
 
 if __name__ == "__main__":
-    run()
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="benchmarks/results/e2e_serve.json",
+                    help="where to persist the JSON blob ('' to skip)")
+    args = ap.parse_args()
+    run(args.out or None)

@@ -1,6 +1,10 @@
 """Kernel microbenchmark: fused BFP matmul roofline terms per
 (variant x shape), plus interpret-mode correctness spot check and measured
-CPU wall time of the XLA dataflow."""
+CPU wall time of the XLA dataflow.
+
+``--smoke`` runs just one interpret-mode shape (CI compile-only gate)."""
+import argparse
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -19,6 +23,22 @@ SHAPES = [
     ("prefill", 2048, 2048, 8192),
     ("train_fwd", 8192, 8192, 29568),
 ]
+
+
+def smoke() -> None:
+    """One kernel shape through the interpret-mode Pallas path; asserts
+    against the oracle. Cheap enough for a CPU-only CI job."""
+    M, K, N = 16, 512, 128
+    x = jax.random.normal(jax.random.PRNGKey(0), (M, K))
+    w = jax.random.normal(jax.random.PRNGKey(1), (K, N)) * 0.1
+    t = quantize("q3_k", w)
+    o_ref = np.asarray(ref.matmul_ref(x, t))
+    o_pal = np.asarray(bfp_matmul_pallas(
+        x, t, interpret=True, compute_dtype=jnp.float32,
+        out_dtype=jnp.float32, block_m=16, block_n=128, block_k=256))
+    err = np.abs(o_pal - o_ref).max() / (np.abs(o_ref).max() + 1e-9)
+    assert err < 1e-5, err
+    emit("kernel_smoke_q3_k", 0.0, f"pallas_vs_ref_rel_err={err:.2e}")
 
 
 def run() -> None:
@@ -54,4 +74,9 @@ def run() -> None:
 
 
 if __name__ == "__main__":
-    run()
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true")
+    if ap.parse_args().smoke:
+        smoke()
+    else:
+        run()

@@ -33,6 +33,15 @@ from jax.experimental.pallas import tpu as pltpu
 from repro.core.formats import get_format
 from repro.core.quantize import QTensor, dequantize
 
+# jax renamed TPUCompilerParams -> CompilerParams across 0.4.x releases;
+# accept whichever this install provides
+_CompilerParams = getattr(pltpu, "CompilerParams",
+                          getattr(pltpu, "TPUCompilerParams", None))
+if _CompilerParams is None:
+    raise ImportError(
+        "jax.experimental.pallas.tpu exposes neither CompilerParams nor "
+        "TPUCompilerParams; unsupported jax version")
+
 
 def _choose_block_k(K: int, sb: int, target: int = 512) -> int:
     bk = min(target, K)
@@ -112,7 +121,7 @@ def bfp_matmul_pallas(x: jnp.ndarray, t: QTensor, *,
         in_specs=in_specs,
         out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
         out_shape=jax.ShapeDtypeStruct((Mp, Np), jnp.float32),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(x, *[data[n] for n in names])

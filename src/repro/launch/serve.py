@@ -1,8 +1,9 @@
-"""Serving launcher: quantize a model with a mixed BFP policy and serve
-batched requests -- the llama-cli analogue of the paper's evaluation.
+"""Serving launcher: quantize a model with a mixed BFP policy and serve a
+queue of requests through the continuous-batching engine -- the llama-cli
+analogue of the paper's evaluation.
 
   PYTHONPATH=src python -m repro.launch.serve --arch tinyllama-1.1b \
-      --reduced --policy paper_llama_mix --tokens 32
+      --reduced --policy paper_llama_mix --tokens 32 --requests 8 --slots 4
 """
 from __future__ import annotations
 
@@ -25,11 +26,20 @@ def main() -> None:
     ap.add_argument("--reduced", action="store_true")
     ap.add_argument("--policy", default="default_serve_mix")
     ap.add_argument("--no-quant", action="store_true")
-    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--requests", type=int, default=4,
+                    help="queue depth (may exceed --slots)")
+    ap.add_argument("--slots", type=int, default=4,
+                    help="concurrent batch slots")
+    ap.add_argument("--chunk", type=int, default=0,
+                    help="decode steps per host sync (0 = --tokens)")
+    ap.add_argument("--cache-len", type=int, default=256)
     ap.add_argument("--prompt-len", type=int, default=6)   # paper: 6 tokens
     ap.add_argument("--tokens", type=int, default=10)      # paper: 10 tokens
     ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--eos-id", type=int, default=None)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--stream", action="store_true",
+                    help="print tokens as they are emitted")
     args = ap.parse_args()
 
     cfg = get_arch(args.arch, reduced=args.reduced)
@@ -53,17 +63,27 @@ def main() -> None:
               f" {counts}; packed {sizes['packed']/2**20:.1f} MiB + residual "
               f"{sizes['unpacked']/2**20:.1f} MiB")
 
-    engine = Engine(cfg, qp, ServeConfig(max_new_tokens=args.tokens,
-                                         temperature=args.temperature))
+    engine = Engine(cfg, qp, ServeConfig(
+        max_new_tokens=args.tokens, temperature=args.temperature,
+        eos_id=args.eos_id, cache_len=args.cache_len, seed=args.seed,
+        max_slots=args.slots, decode_chunk=args.chunk or args.tokens))
+
+    on_token = None
+    if args.stream:
+        on_token = lambda rid, tok: print(f"  [req {rid}] += {tok}")
     rng = np.random.default_rng(args.seed)
-    prompts = [list(rng.integers(0, cfg.vocab_size, args.prompt_len))
-               for _ in range(args.batch)]
-    outs = engine.generate(prompts)
-    for i, o in enumerate(outs[:4]):
-        print(f"req {i}: {o}")
+    ids = [engine.submit(list(rng.integers(0, cfg.vocab_size,
+                                           args.prompt_len)),
+                         on_token=on_token)
+           for _ in range(args.requests)]
+    results = engine.run()
+    for rid in ids[:4]:
+        print(f"req {rid}: {results[rid]}")
     s = engine.stats
     print(f"prefill {s['prefill_s']:.3f}s, decode {s['decode_s']:.3f}s, "
-          f"{s['tok_per_s']:.1f} tok/s ({s['tokens']} tokens)")
+          f"{s['tok_per_s']:.1f} tok/s ({s['tokens']} tokens, "
+          f"{s['host_syncs']} host syncs / {s['requests']} requests, "
+          f"{s['chunks']} fused chunks)")
 
 
 if __name__ == "__main__":

@@ -463,9 +463,12 @@ def _quantize_kv(x):
 
 
 def _attn_layer_decode(h, lp, kc, vc, slot_pos, position, slot, cfg,
-                       cos_sin, impl, interpret, ks=None, vs=None):
+                       cos_sin, impl, interpret, ks=None, vs=None,
+                       live=None):
     """h: (B,1,d); kc/vc: (B,T,KH,Dh); position/slot: (B,).
-    ks/vs: (B,T,KH) int8-cache scales when cfg.kv_cache_quant."""
+    ks/vs: (B,T,KH) int8-cache scales when cfg.kv_cache_quant.
+    live: (B,) bool -- dead slots leave the cache untouched (their logits
+    are garbage and must be ignored by the caller)."""
     B = h.shape[0]
     a_in = L.norm(h, lp["ln1"], cfg.norm_type, cfg.norm_eps)
     q, k, v = _qkv(a_in, lp, cfg, impl, interpret)
@@ -474,18 +477,26 @@ def _attn_layer_decode(h, lp, kc, vc, slot_pos, position, slot, cfg,
         q = L.apply_rope(q, cos, sin)
         k = L.apply_rope(k, cos, sin)
     bidx = jnp.arange(B)
+
+    def sel(new, old, extra_dims):
+        if live is None:
+            return new
+        return jnp.where(live.reshape((B,) + (1,) * extra_dims), new, old)
+
     if cfg.kv_cache_quant:
         kq, kscale = _quantize_kv(k[:, 0])
         vq, vscale = _quantize_kv(v[:, 0])
-        kc = kc.at[bidx, slot].set(kq)
-        vc = vc.at[bidx, slot].set(vq)
-        ks = ks.at[bidx, slot].set(kscale)
-        vs = vs.at[bidx, slot].set(vscale)
+        kc = kc.at[bidx, slot].set(sel(kq, kc[bidx, slot], 2))
+        vc = vc.at[bidx, slot].set(sel(vq, vc[bidx, slot], 2))
+        ks = ks.at[bidx, slot].set(sel(kscale, ks[bidx, slot], 1))
+        vs = vs.at[bidx, slot].set(sel(vscale, vs[bidx, slot], 1))
         k_eff = kc.astype(jnp.float32) * ks[..., None]
         v_eff = vc.astype(jnp.float32) * vs[..., None]
     else:
-        kc = kc.at[bidx, slot].set(k[:, 0].astype(kc.dtype))
-        vc = vc.at[bidx, slot].set(v[:, 0].astype(vc.dtype))
+        kc = kc.at[bidx, slot].set(
+            sel(k[:, 0].astype(kc.dtype), kc[bidx, slot], 2))
+        vc = vc.at[bidx, slot].set(
+            sel(v[:, 0].astype(vc.dtype), vc[bidx, slot], 2))
         k_eff, v_eff = kc, vc
     o = L.decode_attention(q, k_eff, v_eff, slot_pos, position,
                            window=cfg.sliding_window,
@@ -504,10 +515,16 @@ def _attn_layer_decode(h, lp, kc, vc, slot_pos, position, slot, cfg,
 
 
 def decode_step(params, cfg: ModelConfig, cache: Dict[str, Any], *,
-                tokens=None, embeds=None, position=None,
+                tokens=None, embeds=None, position=None, live=None,
                 interpret: bool = False):
     """One decode step. tokens: (B,) int32 or embeds: (B, d); position: (B,)
-    absolute position of the new token. Returns (logits (B,V) f32, cache)."""
+    absolute per-slot position of the new token. Returns
+    (logits (B,V) f32, cache).
+
+    live: optional (B,) bool slot mask for continuous batching -- dead
+    slots run the math (static shapes) but do NOT mutate their cache or
+    position book-keeping, so a freed slot can be re-admitted later
+    without stale-state leakage. Logits of dead slots are undefined."""
     impl = cfg.kernel_impl
     B = tokens.shape[0] if tokens is not None else embeds.shape[0]
     h = _embed(params, cfg, tokens=tokens, embeds=embeds, positions=position)
@@ -528,7 +545,9 @@ def decode_step(params, cfg: ModelConfig, cache: Dict[str, Any], *,
     if cfg.family in ("dense", "vlm", "audio", "moe", "gpt2"):
         T = cache["k"].shape[2]
         slot = position % T
-        slot_pos = cache["pos"].at[jnp.arange(B), slot].set(position)
+        pos_new = position if live is None else jnp.where(
+            live, position, cache["pos"][jnp.arange(B), slot])
+        slot_pos = cache["pos"].at[jnp.arange(B), slot].set(pos_new)
         new_cache["pos"] = slot_pos
 
         quant = cfg.kv_cache_quant
@@ -546,7 +565,7 @@ def decode_step(params, cfg: ModelConfig, cache: Dict[str, Any], *,
             vs = idx(vsall) if quant else None
             hh, kc, vc, ks, vs = _attn_layer_decode(
                 hh, lp, idx(kall), idx(vall), slot_pos, position, slot,
-                cfg, cos_sin, impl, interpret, ks=ks, vs=vs)
+                cfg, cos_sin, impl, interpret, ks=ks, vs=vs, live=live)
             kall, vall = upd(kall, kc), upd(vall, vc)
             if quant:
                 ksall, vsall = upd(ksall, ks), upd(vsall, vs)
@@ -571,6 +590,9 @@ def decode_step(params, cfg: ModelConfig, cache: Dict[str, Any], *,
             out, (cs2, ss2) = M2.mamba2_decode(a_in[:, 0], lp["ssm"], cfg,
                                                cs, ss, impl=impl,
                                                interpret=interpret)
+            if live is not None:
+                cs2 = jnp.where(live[:, None, None], cs2, cs)
+                ss2 = jnp.where(live[:, None, None, None], ss2, ss)
             call = jax.lax.dynamic_update_index_in_dim(call, cs2.astype(
                 call.dtype), li, 0)
             sall = jax.lax.dynamic_update_index_in_dim(sall, ss2, li, 0)
@@ -583,7 +605,7 @@ def decode_step(params, cfg: ModelConfig, cache: Dict[str, Any], *,
 
     elif cfg.family == "hybrid":
         h, new_cache = _hybrid_decode(params, cfg, h, cache, position,
-                                      impl, interpret)
+                                      impl, interpret, live=live)
     else:
         raise ValueError(cfg.family)
 
@@ -593,7 +615,7 @@ def decode_step(params, cfg: ModelConfig, cache: Dict[str, Any], *,
 
 
 def _shared_block_decode(h, emb0, sp, cfg, kc, vc, slot_pos, position, slot,
-                         impl, interpret):
+                         impl, interpret, live=None):
     """h/emb0: (B,1,d); kc/vc: (B,T,KH,Dh2)."""
     B, _, d = h.shape
     u = jnp.concatenate([h, emb0], axis=-1)
@@ -609,8 +631,12 @@ def _shared_block_decode(h, emb0, sp, cfg, kc, vc, slot_pos, position, slot,
     q = L.apply_rope(q, cos, sin)
     k = L.apply_rope(k, cos, sin)
     bidx = jnp.arange(B)
-    kc = kc.at[bidx, slot].set(k[:, 0].astype(kc.dtype))
-    vc = vc.at[bidx, slot].set(v[:, 0].astype(vc.dtype))
+    k_new, v_new = k[:, 0].astype(kc.dtype), v[:, 0].astype(vc.dtype)
+    if live is not None:
+        k_new = jnp.where(live[:, None, None], k_new, kc[bidx, slot])
+        v_new = jnp.where(live[:, None, None], v_new, vc[bidx, slot])
+    kc = kc.at[bidx, slot].set(k_new)
+    vc = vc.at[bidx, slot].set(v_new)
     o = L.decode_attention(q, kc, vc, slot_pos, position,
                            window=cfg.sliding_window)
     o = o.reshape(B, 1, cfg.n_heads * Dh2)
@@ -621,12 +647,15 @@ def _shared_block_decode(h, emb0, sp, cfg, kc, vc, slot_pos, position, slot,
     return h + out, kc, vc
 
 
-def _hybrid_decode(params, cfg, h, cache, position, impl, interpret):
+def _hybrid_decode(params, cfg, h, cache, position, impl, interpret,
+                   live=None):
     emb0 = h
     B = h.shape[0]
     T = cache["k"].shape[2]
     slot = position % T
-    slot_pos = cache["pos"].at[jnp.arange(B), slot].set(position)
+    pos_new = position if live is None else jnp.where(
+        live, position, cache["pos"][jnp.arange(B), slot])
+    slot_pos = cache["pos"].at[jnp.arange(B), slot].set(pos_new)
     new_cache = dict(cache)
     new_cache["pos"] = slot_pos
     groups = _hybrid_groups(cfg)
@@ -647,6 +676,9 @@ def _hybrid_decode(params, cfg, h, cache, position, impl, interpret):
             out, (c2, s2) = M2.mamba2_decode(a_in[:, 0], lpl["ssm"], cfg,
                                              c1, s1, impl=impl,
                                              interpret=interpret)
+            if live is not None:
+                c2 = jnp.where(live[:, None, None], c2, c1)
+                s2 = jnp.where(live[:, None, None, None], s2, s1)
             return hh + out[:, None], (c2, s2)
 
         h, (cn, sn) = jax.lax.scan(body, h, (lp, cs, ss),
@@ -656,7 +688,7 @@ def _hybrid_decode(params, cfg, h, cache, position, impl, interpret):
         if g == cfg.hybrid_attn_every:
             h, kc, vc = _shared_block_decode(
                 h, emb0, params["shared"], cfg, knew[app], vnew[app],
-                slot_pos, position, slot, impl, interpret)
+                slot_pos, position, slot, impl, interpret, live=live)
             knew = knew.at[app].set(kc)
             vnew = vnew.at[app].set(vc)
             app += 1
@@ -721,3 +753,25 @@ def cache_from_prefill(cfg: ModelConfig, caches, seq_len: int,
         return {"conv": conv.astype(dtype), "state": state,
                 "k": k.astype(dtype), "v": v.astype(dtype), "pos": pos}
     raise ValueError(cfg.family)
+
+
+def cache_batch_axis(key: str) -> int:
+    """Axis of the batch-slot dimension for each decode-cache entry.
+
+    Every family stacks layers (or shared-block applications) at axis 0
+    except the per-slot position ring ``pos`` which is (B, T)."""
+    return 0 if key == "pos" else 1
+
+
+def cache_set_slot(cache: Dict[str, Any], slot_cache: Dict[str, Any],
+                   index) -> Dict[str, Any]:
+    """Scatter a single-request cache (batch dim 1) into batch slot
+    ``index`` of a multi-slot decode cache. ``index`` may be traced, so
+    one compiled program serves every slot (continuous-batching
+    admission)."""
+    out = {}
+    for k, v in cache.items():
+        ax = cache_batch_axis(k)
+        out[k] = jax.lax.dynamic_update_slice_in_dim(
+            v, slot_cache[k].astype(v.dtype), index, axis=ax)
+    return out

@@ -1,14 +1,36 @@
-"""Batched serving engine: prefill + decode with sampling, slot-based
-continuous batching, and (optionally) BFP-quantized weights -- the paper's
-end-to-end inference scenario (llama-cli analogue).
+"""Continuous-batching serving engine with a fully on-device decode loop.
 
-Static shapes throughout (fixed batch slots, fixed cache length) so the
-whole serving path is two jitted programs: ``prefill`` and ``decode_step``.
-Finished sequences are replaced in their slot between decode steps without
-recompilation; per-slot position/live masks handle ragged lifetimes.
+The paper's end-to-end number is serving throughput, and at that scale the
+bottleneck is not the MatMul but the per-token host round-trip (LlamaF,
+arXiv:2409.11424).  This engine therefore keeps the whole decode loop on
+device:
+
+* ``decode chunk``: one jitted program runs up to ``decode_chunk`` decode
+  steps inside a ``jax.lax.while_loop`` -- sampling, EOS masking, per-slot
+  token-budget accounting and position bookkeeping are all arrays in the
+  loop carry.  The host sees one sync per *chunk*, not per token, so host
+  syncs per generated sequence are O(1).
+* ``continuous batching``: a request queue feeds a fixed set of batch
+  slots.  When a sequence finishes (EOS or budget), its slot is freed and
+  the next queued request is admitted between chunks -- single-request
+  prefill, cache scatter into the slot (``transformer.cache_set_slot``),
+  no recompilation.  Dead slots still run the math (static shapes) but a
+  live mask keeps them from touching their cache (``decode_step(live=)``).
+* ``streaming``: each request may carry an ``on_token`` callback; tokens
+  are delivered after every chunk (and the first token at admission).
+
+Prompts are right-padded to a bucket length for attention families (exact
+under causal masking; pad cache entries are disabled via ``pos = -1``).
+Recurrent families (ssm/hybrid) prefill at exact prompt length, since
+trailing pads would pollute the recurrent state.
+
+``generate_reference`` keeps the pre-rewrite host-driven loop (one jitted
+step per token, same math) for parity tests and as readable documentation
+of the device loop's semantics.
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
 import time
 from typing import Any, Callable, Dict, List, Optional
@@ -23,75 +45,323 @@ from repro.models import transformer as T
 
 @dataclasses.dataclass
 class ServeConfig:
-    max_new_tokens: int = 32
+    max_new_tokens: int = 32            # per-request default token budget
     temperature: float = 0.0            # 0 -> greedy
     eos_id: Optional[int] = None
-    cache_len: int = 256
+    cache_len: int = 256                # KV ring length (fixed at compile)
     seed: int = 0
+    max_slots: int = 4                  # concurrent batch slots
+    decode_chunk: int = 32              # device-loop steps per host sync
+    prefill_bucket: int = 16            # prompt pad granularity (attention)
+
+
+@dataclasses.dataclass
+class Request:
+    id: int
+    prompt: List[int]
+    max_new_tokens: int
+    on_token: Optional[Callable[[int, int], None]] = None
+    tokens: List[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+
+    def _emit(self, tok: int) -> None:
+        self.tokens.append(tok)
+        if self.on_token is not None:
+            self.on_token(self.id, tok)
 
 
 class Engine:
     def __init__(self, cfg: ModelConfig, params, serve_cfg: ServeConfig):
+        for field in ("max_slots", "decode_chunk", "max_new_tokens",
+                      "cache_len"):
+            if getattr(serve_cfg, field) < 1:
+                raise ValueError(f"ServeConfig.{field} must be >= 1, got "
+                                 f"{getattr(serve_cfg, field)}")
         self.cfg = cfg
         self.params = params
         self.scfg = serve_cfg
-        self._decode = jax.jit(self._decode_impl)
+        self._B = serve_cfg.max_slots
+        # ring length must match init_cache's clamp or slot scatter would
+        # write a cache_len-long update into a window-long ring
+        self._T = T.attn_cache_len(cfg, serve_cfg.cache_len)
         self._prefill = jax.jit(self._prefill_impl)
+        # caches are donated so XLA aliases the ring buffers call-to-call
+        self._admit_cache = jax.jit(self._admit_cache_impl,
+                                    donate_argnums=(0,))
+        self._decode_chunk = jax.jit(self._decode_chunk_impl,
+                                     donate_argnums=(1,))
+        self._ref_step = jax.jit(self._ref_step_impl)
+        self._cache = None
         self.stats: Dict[str, float] = {}
+        self._reset()
 
     # -- jitted internals ----------------------------------------------------
-    def _prefill_impl(self, params, tokens):
+    def _sample(self, logits, key):
+        """logits (B,V) -> token ids (B,) int32."""
+        if self.scfg.temperature > 0:
+            return jax.random.categorical(
+                key, logits / self.scfg.temperature).astype(jnp.int32)
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+
+    def _prefill_impl(self, params, tokens, length, key):
+        """Single-request prefill: tokens (1,P) right-padded, length ().
+        Returns (first sampled token (), slot cache with pads disabled)."""
+        P = tokens.shape[1]
         logits, _, caches = T.forward_seq(params, self.cfg, tokens=tokens,
                                           want_cache=True)
-        return logits[:, -1], caches
+        last = jax.lax.dynamic_index_in_dim(logits[0], length - 1, 0,
+                                            keepdims=False)
+        first = self._sample(last[None], key)[0]
+        slot_cache = T.cache_from_prefill(self.cfg, caches, P,
+                                          cache_len=self._T)
+        if "pos" in slot_cache:
+            # pad entries must never win decode attention
+            slot_cache["pos"] = jnp.where(slot_cache["pos"] < length,
+                                          slot_cache["pos"], -1)
+        return first, slot_cache
 
-    def _decode_impl(self, params, cache, tokens, position, key):
-        logits, cache = T.decode_step(params, self.cfg, cache,
-                                      tokens=tokens, position=position)
-        if self.scfg.temperature > 0:
-            nxt = jax.random.categorical(key,
-                                         logits / self.scfg.temperature)
-        else:
-            nxt = jnp.argmax(logits, axis=-1)
-        return nxt.astype(jnp.int32), cache
+    def _admit_cache_impl(self, cache, slot_cache, index):
+        return T.cache_set_slot(cache, slot_cache, index)
+
+    def _decode_chunk_impl(self, params, cache, tok, pos, live, n_gen,
+                           budget, key):
+        """Run up to ``decode_chunk`` decode steps on device.
+
+        Carry: (step, cache, tok (B,), pos (B,), live (B,) bool,
+        n_gen (B,), out (B,C), key).  Exits early once every slot is dead.
+        ``out`` holds the tokens emitted this chunk, -1 where a slot was
+        already dead at that step (so each row is a dense prefix).
+        """
+        C = self.scfg.decode_chunk
+        B = tok.shape[0]
+        out0 = jnp.full((B, C), -1, jnp.int32)
+
+        def cond(st):
+            step, _, _, _, live_, _, _, _ = st
+            return (step < C) & jnp.any(live_)
+
+        def body(st):
+            step, cache_, tok_, pos_, live_, n_gen_, out_, key_ = st
+            logits, cache_ = T.decode_step(params, self.cfg, cache_,
+                                           tokens=tok_, position=pos_,
+                                           live=live_)
+            key_, sub = jax.random.split(key_)
+            nxt = self._sample(logits, sub)
+            nxt = jnp.where(live_, nxt, tok_)
+            out_ = out_.at[:, step].set(jnp.where(live_, nxt, -1))
+            n_gen_ = n_gen_ + live_.astype(jnp.int32)
+            new_live = live_ & (n_gen_ < budget)
+            if self.scfg.eos_id is not None:
+                new_live = new_live & (nxt != self.scfg.eos_id)
+            pos_ = pos_ + live_.astype(jnp.int32)
+            return step + 1, cache_, nxt, pos_, new_live, n_gen_, out_, key_
+
+        st = (jnp.zeros((), jnp.int32), cache, tok, pos, live, n_gen,
+              out0, key)
+        _, cache, tok, pos, live, n_gen, out, key = jax.lax.while_loop(
+            cond, body, st)
+        return cache, out, tok, pos, live, n_gen, key
+
+    def _ref_step_impl(self, params, cache, tok, pos, live, key):
+        """One host-driven decode step (reference path)."""
+        logits, cache = T.decode_step(params, self.cfg, cache, tokens=tok,
+                                      position=pos, live=live)
+        nxt = self._sample(logits, key)
+        return jnp.where(live, nxt, tok), cache
+
+    # -- host-side scheduler -------------------------------------------------
+    def _reset(self) -> None:
+        B = self._B
+        self._queue: collections.deque = collections.deque()
+        self._slots: List[Optional[Request]] = [None] * B
+        self._results: Dict[int, Request] = {}
+        self._next_id = 0
+        self._key = jax.random.PRNGKey(self.scfg.seed)
+        self._tok = np.zeros(B, np.int32)
+        self._pos = np.zeros(B, np.int32)
+        self._live = np.zeros(B, bool)
+        self._ngen = np.zeros(B, np.int32)
+        self._budget = np.full(B, self.scfg.max_new_tokens, np.int32)
+        self.stats = dict(prefill_s=0.0, decode_s=0.0, tokens=0,
+                          tok_per_s=0.0, host_syncs=0, admissions=0,
+                          chunks=0, requests=0)
+
+    def submit(self, prompt: List[int],
+               max_new_tokens: Optional[int] = None,
+               on_token: Optional[Callable[[int, int], None]] = None) -> int:
+        """Queue a request; returns its id. Tokens stream via ``on_token``
+        (called as on_token(request_id, token)) if given."""
+        if not prompt:
+            raise ValueError("empty prompt")
+        budget = (self.scfg.max_new_tokens if max_new_tokens is None
+                  else max_new_tokens)
+        if budget < 1:
+            raise ValueError(f"max_new_tokens must be >= 1, got {budget}")
+        if (self.cfg.family != "ssm" and not self.cfg.sliding_window
+                and len(prompt) + budget > self._T):
+            # full-attention archs must not wrap the KV ring (that would
+            # silently truncate context); windowed archs wrap by design
+            # (the ring IS the window) and take prompts of any length
+            raise ValueError(
+                f"prompt ({len(prompt)}) + max_new_tokens ({budget}) "
+                f"exceeds cache_len {self._T}; raise ServeConfig.cache_len")
+        req = Request(id=self._next_id, prompt=list(prompt),
+                      max_new_tokens=budget, on_token=on_token)
+        self._next_id += 1
+        self._queue.append(req)
+        return req.id
+
+    def _bucket_len(self, n: int) -> int:
+        # recurrent state would absorb trailing pads -> exact length there;
+        # prompts at/beyond the ring (windowed archs) also go exact, so the
+        # kept last-window slots hold real tokens, not masked pads
+        if self.cfg.family in ("ssm", "hybrid") or n >= self._T:
+            return n
+        b = max(self.scfg.prefill_bucket, 1)
+        return min(-(-n // b) * b, self._T)
+
+    def _admit_request(self, slot: int, req: Request) -> None:
+        n = len(req.prompt)
+        P = self._bucket_len(n)
+        toks = np.zeros((1, P), np.int32)
+        toks[0, :n] = req.prompt
+        t0 = time.perf_counter()
+        self._key, sub = jax.random.split(self._key)
+        first, slot_cache = self._prefill(self.params, jnp.asarray(toks),
+                                          jnp.asarray(n, jnp.int32), sub)
+        if self._cache is None:
+            self._cache = T.init_cache(self.cfg, self._B, self._T)
+        self._cache = self._admit_cache(self._cache, slot_cache,
+                                        jnp.asarray(slot, jnp.int32))
+        first_tok = int(first)                    # 1 host sync / admission
+        self.stats["host_syncs"] += 1
+        self.stats["admissions"] += 1
+        self.stats["prefill_s"] += time.perf_counter() - t0
+        req._emit(first_tok)
+        finished = req.max_new_tokens <= 1 or (
+            self.scfg.eos_id is not None and first_tok == self.scfg.eos_id)
+        if finished:
+            req.done = True
+            self._results[req.id] = req
+            return
+        self._slots[slot] = req
+        self._tok[slot] = first_tok
+        self._pos[slot] = n
+        self._live[slot] = True
+        self._ngen[slot] = 1
+        self._budget[slot] = req.max_new_tokens
+
+    def _admit_pending(self) -> None:
+        for i in range(self._B):
+            if not self._queue:
+                break
+            if self._slots[i] is None:
+                self._admit_request(i, self._queue.popleft())
+
+    def _run_chunk(self) -> None:
+        t0 = time.perf_counter()
+        self._cache, out_d, tok_d, pos_d, live_d, ngen_d, self._key = \
+            self._decode_chunk(self.params, self._cache,
+                               jnp.asarray(self._tok),
+                               jnp.asarray(self._pos),
+                               jnp.asarray(self._live),
+                               jnp.asarray(self._ngen),
+                               jnp.asarray(self._budget), self._key)
+        out, tok, pos, live, ngen = jax.device_get(
+            (out_d, tok_d, pos_d, live_d, ngen_d))  # THE sync of this chunk
+        # device_get hands back read-only buffers; admission mutates these
+        self._tok, self._pos = np.array(tok), np.array(pos)
+        self._live, self._ngen = np.array(live), np.array(ngen)
+        self.stats["host_syncs"] += 1
+        self.stats["chunks"] += 1
+        self.stats["decode_s"] += time.perf_counter() - t0
+        for i, req in enumerate(self._slots):
+            if req is None:
+                continue
+            for tok in out[i][out[i] >= 0].tolist():
+                req._emit(tok)
+            if not self._live[i]:
+                req.done = True
+                self._results[req.id] = req
+                self._slots[i] = None               # slot freed -> eviction
+
+    def run(self) -> Dict[int, List[int]]:
+        """Drive admission + fused decode chunks until queue and slots are
+        drained. Returns {request_id: tokens} for THIS cycle; stats cover
+        this cycle only (slots are always empty between run() calls, so
+        resetting the counters here is safe)."""
+        self.stats.update(prefill_s=0.0, decode_s=0.0, tokens=0,
+                          tok_per_s=0.0, host_syncs=0, admissions=0,
+                          chunks=0, requests=len(self._queue))
+        while self._queue or any(r is not None for r in self._slots):
+            self._admit_pending()
+            if not self._live.any():
+                continue
+            self._run_chunk()
+        done = {rid: req.tokens for rid, req in self._results.items()}
+        self._results = {}                  # next submit/run cycle is fresh
+        ntok = sum(len(t) for t in done.values())
+        self.stats["tokens"] = ntok
+        self.stats["tok_per_s"] = ntok / max(self.stats["decode_s"], 1e-9)
+        return done
 
     # -- public API ----------------------------------------------------------
     def generate(self, prompts: List[List[int]]) -> List[List[int]]:
-        """Generate completions for a batch of prompts (one slot each)."""
-        cfg, scfg = self.cfg, self.scfg
-        B = len(prompts)
-        plen = max(len(p) for p in prompts)
-        toks = np.zeros((B, plen), np.int32)
-        for i, p in enumerate(prompts):
-            toks[i, plen - len(p):] = p          # left-pad
-        t0 = time.perf_counter()
-        last_logits, caches = self._prefill(self.params, jnp.asarray(toks))
-        cache = T.cache_from_prefill(
-            cfg, caches, plen,
-            cache_len=max(T.attn_cache_len(cfg, plen + scfg.max_new_tokens),
-                          1))
-        t_prefill = time.perf_counter() - t0
+        """Generate completions for a batch of prompts. Prompts beyond
+        ``max_slots`` are continuously batched into freed slots. Resets
+        engine state (fresh PRNG seed) for call-to-call determinism."""
+        if self._queue:
+            raise RuntimeError(
+                f"{len(self._queue)} submitted request(s) pending; call "
+                "run() to drain them before generate() (which resets)")
+        self._reset()
+        ids = [self.submit(list(p)) for p in prompts]
+        res = self.run()
+        return [res[i] for i in ids]
 
-        nxt = jnp.argmax(last_logits, axis=-1).astype(jnp.int32)
-        outs: List[List[int]] = [[int(nxt[i])] for i in range(B)]
-        live = np.ones(B, bool)
-        key = jax.random.PRNGKey(scfg.seed)
+    def generate_reference(self,
+                           prompts: List[List[int]]) -> List[List[int]]:
+        """Pre-rewrite reference: same admission/prefill/sampling math but
+        one host round-trip per token. O(tokens) syncs -- parity oracle
+        for the on-device loop, not a serving path."""
+        if len(prompts) > self._B:
+            raise ValueError("reference path has no queue; "
+                             f"need <= {self._B} prompts")
+        if self._queue:
+            raise RuntimeError(
+                f"{len(self._queue)} submitted request(s) pending; call "
+                "run() to drain them before generate_reference()")
+        self._reset()
+        ids = [self.submit(list(p)) for p in prompts]
+        self.stats["requests"] = len(ids)
+        self._admit_pending()
         t0 = time.perf_counter()
-        for t in range(scfg.max_new_tokens - 1):
-            pos = jnp.full((B,), plen + t, jnp.int32)
-            key, sub = jax.random.split(key)
-            nxt, cache = self._decode(self.params, cache, nxt, pos, sub)
-            for i in range(B):
-                if live[i]:
-                    tok = int(nxt[i])
-                    outs[i].append(tok)
-                    if scfg.eos_id is not None and tok == scfg.eos_id:
-                        live[i] = False
-            if not live.any():
-                break
-        t_decode = time.perf_counter() - t0
-        ntok = sum(len(o) for o in outs)
-        self.stats = dict(prefill_s=t_prefill, decode_s=t_decode,
-                          tokens=ntok,
-                          tok_per_s=ntok / max(t_decode, 1e-9))
-        return outs
+        while self._live.any():
+            self._key, sub = jax.random.split(self._key)
+            nxt_d, self._cache = self._ref_step(
+                self.params, self._cache, jnp.asarray(self._tok),
+                jnp.asarray(self._pos), jnp.asarray(self._live), sub)
+            nxt = np.asarray(jax.device_get(nxt_d))
+            self.stats["host_syncs"] += 1
+            for i, req in enumerate(self._slots):
+                if req is None or not self._live[i]:
+                    continue
+                tok = int(nxt[i])
+                req._emit(tok)
+                self._ngen[i] += 1
+                self._pos[i] += 1
+                self._tok[i] = tok
+                if (self._ngen[i] >= self._budget[i]
+                        or (self.scfg.eos_id is not None
+                            and tok == self.scfg.eos_id)):
+                    self._live[i] = False
+                    req.done = True
+                    self._results[req.id] = req
+                    self._slots[i] = None
+        self.stats["decode_s"] += time.perf_counter() - t0
+        res = {rid: req.tokens for rid, req in self._results.items()}
+        self._results = {}
+        ntok = sum(len(t) for t in res.values())
+        self.stats["tokens"] = ntok
+        self.stats["tok_per_s"] = ntok / max(self.stats["decode_s"], 1e-9)
+        return [res[i] for i in ids]

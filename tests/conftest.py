@@ -7,6 +7,21 @@ os.environ.setdefault("JAX_PLATFORMS", "cpu")
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
+# hypothesis is a declared test dependency (pyproject [test] extra), but
+# hermetic/offline environments may not have it -- fall back to the
+# deterministic stub so the property tests still collect and run
+try:
+    import hypothesis  # noqa: F401
+except ModuleNotFoundError:
+    import importlib.util
+
+    _p = os.path.join(os.path.dirname(__file__), "_hypothesis_stub.py")
+    _spec = importlib.util.spec_from_file_location("hypothesis", _p)
+    _mod = importlib.util.module_from_spec(_spec)
+    sys.modules["hypothesis"] = _mod
+    _spec.loader.exec_module(_mod)
+    sys.modules["hypothesis.strategies"] = _mod.strategies
+
 import jax  # noqa: E402
 
 jax.config.update("jax_enable_x64", False)
