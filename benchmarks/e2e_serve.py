@@ -3,12 +3,16 @@
 Quantizes a TinyLlama-family reduced model with the paper's mixed policy
 and drives the continuous-batching engine at queue depths 1 / 4 / 8 / 32
 over the paper's workload shape (6-token prompt, 10 new tokens).  Reports
-decode tok/s, prefill/decode wall time, and -- the quantity the on-device
-decode loop exists to minimize -- host syncs per request.
+decode tok/s, prefill tok/s, mean time-to-first-token, wall times, and --
+the quantity the on-device decode loop exists to minimize -- host syncs
+per request.  Prefill runs through the batched chunked admission pipeline
+(one fused prefill per group of up to ``max_slots`` requests).
 
 Output: human CSV rows (``emit``) plus one machine-readable JSON blob
 (``--out`` to persist, default benchmarks/results/e2e_serve.json when run
-as a script) so future PRs can track the perf trajectory.
+as a script) so future PRs can track the perf trajectory.  ``--smoke``
+runs the reduced sweep CI uses for regression gating (see
+scripts/check_bench_regression.py).
 """
 import argparse
 
@@ -25,6 +29,7 @@ from benchmarks.common import emit, emit_json
 PROMPT_LEN = 6            # paper workload
 NEW_TOKENS = 10
 QUEUE_DEPTHS = (1, 4, 8, 32)     # 4 = the seed benchmark's batch shape
+SMOKE_DEPTHS = (4, 8)            # CI regression sweep
 MAX_SLOTS = 8
 
 
@@ -32,7 +37,8 @@ def _bench_one(cfg, params, depth: int) -> dict:
     slots = min(depth, MAX_SLOTS)
     eng = Engine(cfg, params, ServeConfig(
         max_new_tokens=NEW_TOKENS, max_slots=slots,
-        decode_chunk=NEW_TOKENS, cache_len=32, prefill_bucket=8))
+        decode_chunk=NEW_TOKENS, cache_len=32, prefill_bucket=8,
+        prefill_batch=slots))
     rng = np.random.default_rng(0)
     prompts = [list(rng.integers(0, cfg.vocab_size, PROMPT_LEN))
                for _ in range(depth)]
@@ -47,42 +53,58 @@ def _bench_one(cfg, params, depth: int) -> dict:
     return dict(queue_depth=depth, slots=slots,
                 tokens=int(s["tokens"]),
                 tok_per_s=round(s["tok_per_s"], 1),
+                prefill_tok_per_s=round(s["prefill_tok_per_s"], 1),
+                ttft_s=round(s["ttft_s"], 5),
                 prefill_s=round(s["prefill_s"], 4),
                 decode_s=round(s["decode_s"], 4),
                 host_syncs=int(s["host_syncs"]),
                 syncs_per_request=round(s["host_syncs"] / depth, 2),
+                prefill_groups=int(s["prefill_groups"]),
                 chunks=int(s["chunks"]))
 
 
-def run(out_path: str = None) -> dict:
+def run(out_path: str = None, smoke: bool = False) -> dict:
     cfg = get_arch("tinyllama-1.1b", reduced=True)
     params = T.init_params(cfg, jax.random.PRNGKey(0))
     qp, _ = quantize_params(params, get_policy("paper_llama_mix"))
+    depths = SMOKE_DEPTHS if smoke else QUEUE_DEPTHS
 
     results = dict(
         benchmark="e2e_serve",
         arch="tinyllama-1.1b(reduced)",
         workload=dict(prompt_len=PROMPT_LEN, new_tokens=NEW_TOKENS,
-                      queue_depths=list(QUEUE_DEPTHS), max_slots=MAX_SLOTS),
+                      queue_depths=list(depths), max_slots=MAX_SLOTS,
+                      smoke=smoke),
         runs=[],
     )
     for tag, p in [("fp32", params), ("fbfq_mixed_q2q3", qp)]:
-        for depth in QUEUE_DEPTHS:
+        for depth in depths:
             rec = _bench_one(cfg, p, depth)
             rec["params"] = tag
             results["runs"].append(rec)
             emit(f"e2e_serve_{tag}_d{depth}",
                  rec["decode_s"] / max(rec["tokens"], 1) * 1e6,
-                 f"tok/s={rec['tok_per_s']} host_syncs={rec['host_syncs']} "
-                 f"({rec['syncs_per_request']}/req) "
-                 f"prefill_s={rec['prefill_s']}")
+                 f"tok/s={rec['tok_per_s']} "
+                 f"prefill_tok/s={rec['prefill_tok_per_s']} "
+                 f"ttft_s={rec['ttft_s']} "
+                 f"host_syncs={rec['host_syncs']} "
+                 f"({rec['syncs_per_request']}/req)")
     emit_json(results, out_path)
     return results
 
 
 if __name__ == "__main__":
     ap = argparse.ArgumentParser()
-    ap.add_argument("--out", default="benchmarks/results/e2e_serve.json",
-                    help="where to persist the JSON blob ('' to skip)")
+    ap.add_argument("--out", default=None,
+                    help="where to persist the JSON blob ('' to skip; "
+                         "default: the committed baseline path for the "
+                         "full sweep, nowhere for --smoke so a partial "
+                         "sweep can never clobber the baseline)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="quick sweep (CI regression gate): depths "
+                         f"{SMOKE_DEPTHS} only")
     args = ap.parse_args()
-    run(args.out or None)
+    out = args.out
+    if out is None:
+        out = "" if args.smoke else "benchmarks/results/e2e_serve.json"
+    run(out or None, smoke=args.smoke)

@@ -1,0 +1,73 @@
+"""Benchmark regression gate: compare a fresh e2e_serve JSON against the
+committed baseline and fail (exit 1) on decode-throughput regressions.
+
+Usage (what CI runs):
+
+    PYTHONPATH=src python -m benchmarks.e2e_serve --smoke --out new.json
+    PYTHONPATH=src python scripts/check_bench_regression.py \
+        --new new.json --baseline benchmarks/results/e2e_serve.json
+
+Runs are matched on (params, queue_depth); only pairs present in BOTH
+files are compared, so the smoke sweep gates against the full committed
+baseline. Decode tok/s is the gated metric (fail if new < (1 - tol) *
+baseline); prefill tok/s and time-to-first-token are reported for
+context but not gated -- wall-clock prefill at these tiny shapes is
+dominated by dispatch overhead and too noisy across runner generations
+to gate on.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+
+def compare(new: dict, baseline: dict, tol: float) -> int:
+    base_by_key = {(r["params"], r["queue_depth"]): r
+                   for r in baseline.get("runs", [])}
+    failures, compared = [], 0
+    for r in new.get("runs", []):
+        key = (r["params"], r["queue_depth"])
+        b = base_by_key.get(key)
+        if b is None:
+            continue
+        compared += 1
+        floor = (1.0 - tol) * b["tok_per_s"]
+        status = "OK " if r["tok_per_s"] >= floor else "FAIL"
+        print(f"{status} {key[0]:>16} d{key[1]:<3} decode tok/s "
+              f"{r['tok_per_s']:>8.1f} vs baseline {b['tok_per_s']:>8.1f} "
+              f"(floor {floor:.1f}) | prefill tok/s "
+              f"{r.get('prefill_tok_per_s', 0):>8.1f} vs "
+              f"{b.get('prefill_tok_per_s', 0):>8.1f} | ttft_s "
+              f"{r.get('ttft_s', 0):.5f} vs {b.get('ttft_s', 0):.5f}")
+        if r["tok_per_s"] < floor:
+            failures.append(key)
+    if compared == 0:
+        print("ERROR: no (params, queue_depth) pairs in common with the "
+              "baseline -- wrong file?")
+        return 2
+    if failures:
+        print(f"REGRESSION: decode tok/s dropped more than {tol:.0%} on "
+              f"{failures}")
+        return 1
+    print(f"all {compared} compared runs within {tol:.0%} of baseline")
+    return 0
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--new", required=True, help="freshly produced JSON")
+    ap.add_argument("--baseline", required=True,
+                    help="committed baseline JSON")
+    ap.add_argument("--tol", type=float, default=0.20,
+                    help="allowed fractional decode tok/s drop (0.20)")
+    args = ap.parse_args()
+    with open(args.new) as f:
+        new = json.load(f)
+    with open(args.baseline) as f:
+        baseline = json.load(f)
+    return compare(new, baseline, args.tol)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -44,12 +44,24 @@ if _CompilerParams is None:
 
 
 def _choose_block_k(K: int, sb: int, target: int = 512) -> int:
-    bk = min(target, K)
-    while bk % sb or K % bk:
+    """Largest bk <= target with bk % sb == 0 and K % bk == 0.
+
+    Falls back to bk = sb when no super-block-aligned divisor of K exists
+    at or below the target (e.g. K = 1792 with target 384): K is always a
+    super-block multiple for packed tensors, so sb itself always tiles --
+    a smaller-than-asked tile, never an error. A target below sb gets the
+    same fallback."""
+    if K % sb:
+        raise ValueError(f"K={K} is not a multiple of super-block {sb}; "
+                         "not a packable shape")
+    if K <= target:
+        return K
+    bk = target - target % sb
+    while bk >= sb:
+        if K % bk == 0:
+            return bk
         bk -= sb
-        if bk <= 0:
-            raise ValueError(f"no valid block_k for K={K}, sb={sb}")
-    return bk
+    return sb
 
 
 def _round_up(x: int, m: int) -> int:

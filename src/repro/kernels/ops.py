@@ -60,16 +60,27 @@ def bfp_matmul(x: jnp.ndarray, t: QTensor, *, impl: str = "auto",
     return out.reshape(lead + (t.shape[1],))
 
 
-def q8k_quantize(x: jnp.ndarray, *, impl: str = "auto",
-                 interpret: bool = False):
-    """Quantize activations (..., K) to Q8_K payload dict."""
+def q8k_quantize(x: jnp.ndarray, *, valid: jnp.ndarray = None,
+                 impl: str = "auto", interpret: bool = False):
+    """Quantize activations (..., K) to Q8_K payload dict (the input
+    format of the integer datapath: ``ref.matmul_q8k_ref`` / the ISA
+    simulator; the fused serving kernels consume float activations).
+
+    Leading dims flatten into the kernel's M rows, so a right-padded
+    (batch, seq, K) batch quantizes in one pass. ``valid``: an optional
+    boolean mask over the leading dims; masked-out rows (batch padding)
+    produce all-zero payloads, keeping padding inert in any downstream
+    integer dot product."""
     if impl == "auto":
         impl = _default_impl()
     lead = x.shape[:-1]
     K = x.shape[-1]
     x2 = x.reshape(-1, K)
+    v2 = None if valid is None else valid.reshape(-1)
     if impl == "pallas":
-        q = q8k_quantize_pallas(x2, interpret=interpret)
+        q = q8k_quantize_pallas(x2, valid=v2, interpret=interpret)
     else:
+        if v2 is not None:
+            x2 = jnp.where(v2[:, None], x2, 0.0)
         q = quantize_q8_k(x2)
     return {k: v.reshape(lead + v.shape[1:]) for k, v in q.items()}

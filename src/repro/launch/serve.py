@@ -33,6 +33,14 @@ def main() -> None:
     ap.add_argument("--chunk", type=int, default=0,
                     help="decode steps per host sync (0 = --tokens)")
     ap.add_argument("--cache-len", type=int, default=256)
+    ap.add_argument("--prefill-batch", type=int, default=8,
+                    help="max requests per batched prefill group")
+    ap.add_argument("--prefill-chunk", type=int, default=64,
+                    help="tokens per prefill chunk (long prompts stream "
+                         "through one fixed-shape compiled program)")
+    ap.add_argument("--prefill-bucket", type=int, default=16,
+                    help="prompt pad granularity (compilations are "
+                         "O(#buckets), not O(#prompt lengths))")
     ap.add_argument("--prompt-len", type=int, default=6)   # paper: 6 tokens
     ap.add_argument("--tokens", type=int, default=10)      # paper: 10 tokens
     ap.add_argument("--temperature", type=float, default=0.0)
@@ -66,7 +74,9 @@ def main() -> None:
     engine = Engine(cfg, qp, ServeConfig(
         max_new_tokens=args.tokens, temperature=args.temperature,
         eos_id=args.eos_id, cache_len=args.cache_len, seed=args.seed,
-        max_slots=args.slots, decode_chunk=args.chunk or args.tokens))
+        max_slots=args.slots, decode_chunk=args.chunk or args.tokens,
+        prefill_batch=args.prefill_batch, prefill_chunk=args.prefill_chunk,
+        prefill_bucket=args.prefill_bucket))
 
     on_token = None
     if args.stream:
@@ -80,7 +90,11 @@ def main() -> None:
     for rid in ids[:4]:
         print(f"req {rid}: {results[rid]}")
     s = engine.stats
-    print(f"prefill {s['prefill_s']:.3f}s, decode {s['decode_s']:.3f}s, "
+    print(f"prefill {s['prefill_s']:.3f}s "
+          f"({s['prefill_tok_per_s']:.1f} tok/s, "
+          f"{s['prefill_groups']:.0f} fused groups, "
+          f"mean ttft {s['ttft_s'] * 1e3:.1f}ms), "
+          f"decode {s['decode_s']:.3f}s, "
           f"{s['tok_per_s']:.1f} tok/s ({s['tokens']} tokens, "
           f"{s['host_syncs']} host syncs / {s['requests']} requests, "
           f"{s['chunks']} fused chunks)")

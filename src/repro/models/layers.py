@@ -215,6 +215,29 @@ def blockwise_attention(q, k, v, *, causal=True, window=None, scale=None,
     return jnp.concatenate(out, axis=1).astype(q.dtype)
 
 
+def prefill_attention(q, k_cache, v_cache, slot_pos, k_new, v_new,
+                      positions, valid, *, window=None, scale=None,
+                      softcap=None):
+    """Chunked-prefill attention: one prompt chunk against cache + itself.
+
+    q: (B,C,H,D) chunk queries; k_cache/v_cache: (B,T,KH,D) ring *before*
+    this chunk's writes (an entry a later in-chunk token will overwrite is
+    still a real past token for earlier queries -- attending the pre-write
+    ring plus the explicit in-chunk keys reproduces exact causal/ring
+    semantics, including sliding-window wrap); slot_pos: (B,T) absolute
+    positions per ring slot (-1 empty); k_new/v_new: (B,C,KH,D) this
+    chunk's keys/values; positions: (B,C) absolute; valid: (B,C) False on
+    right-padding (those keys never win attention; their query outputs are
+    garbage the caller must ignore)."""
+    kv_pos_new = jnp.where(valid, positions, -1)
+    k_all = jnp.concatenate([k_cache, k_new.astype(k_cache.dtype)], axis=1)
+    v_all = jnp.concatenate([v_cache, v_new.astype(v_cache.dtype)], axis=1)
+    kv_pos = jnp.concatenate([slot_pos, kv_pos_new], axis=1)
+    return naive_attention(q, k_all, v_all, causal=True, window=window,
+                           scale=scale, softcap=softcap,
+                           q_positions=positions, kv_positions=kv_pos)
+
+
 def decode_attention(q, k_cache, v_cache, slot_pos, q_pos, *,
                      window=None, scale=None, softcap=None):
     """Single-step decode. q: (B,1,H,D); caches: (B,T,KH,D);

@@ -614,6 +614,131 @@ def decode_step(params, cfg: ModelConfig, cache: Dict[str, Any], *,
     return logits, new_cache
 
 
+def lm_logits(params, cfg: ModelConfig, h, *, interpret: bool = False):
+    """LM head on final-norm hidden states h (..., d) -> logits f32.
+
+    Public so schedulers can gather the few hidden rows they need (e.g.
+    each sequence's last prompt token) and run the vocab matmul on just
+    those, instead of materializing (B, S, V) logits."""
+    return _logits(params, cfg, h, impl=cfg.kernel_impl, interpret=interpret)
+
+
+def prefill_chunk(params, cfg: ModelConfig, cache: Dict[str, Any], *,
+                  tokens, start, lengths, interpret: bool = False):
+    """One batched prefill chunk against a decode cache (attention families).
+
+    tokens: (B, C) int32, right-padded; start: () int32 absolute position of
+    column 0 (same for every row -- the scheduler pads the batch to a shared
+    bucketed length); lengths: (B,) true prompt lengths. Columns at
+    positions >= lengths are padding: they run the math (static shapes) but
+    never write the KV ring and never win attention (write index driven out
+    of range -> scatter drop). A row with length 0 is a group-padding dummy.
+
+    Feeding a prompt through successive chunks is exact: each chunk's
+    queries attend the pre-chunk ring plus the chunk's own keys (see
+    ``layers.prefill_attention``), then the chunk's K/V land in the ring at
+    ``position % T`` -- identical semantics to running ``decode_step`` once
+    per token, but with MatMul-shaped batches. Requires C <= ring length
+    (in-chunk positions must map to distinct slots).
+
+    Returns (final-norm hidden (B, C, d), new cache). Callers that only
+    need logits for some rows/offsets should gather from the hidden states
+    and apply ``lm_logits`` there.
+    """
+    if cfg.family not in ("dense", "vlm", "audio", "moe", "gpt2"):
+        raise NotImplementedError(
+            f"prefill_chunk is KV-cache-only; family {cfg.family!r} "
+            "prefills at exact length via forward_seq")
+    impl = cfg.kernel_impl
+    B, C = tokens.shape
+    T = cache["k"].shape[2]
+    assert C <= T, (C, T)
+    positions = jnp.broadcast_to(
+        start + jnp.arange(C, dtype=jnp.int32)[None], (B, C))
+    valid = positions < lengths[:, None]
+    h = _embed(params, cfg, tokens=tokens, positions=positions)
+
+    cos_sin = None
+    if cfg.pos_emb in ("rope", "mrope"):
+        pos_r = positions
+        if cfg.pos_emb == "mrope":
+            pos_r = jnp.broadcast_to(positions[None], (3, B, C))
+        cos_sin = L.rope_cos_sin(
+            pos_r, cfg.d_head, cfg.rope_theta,
+            cfg.mrope_sections if cfg.pos_emb == "mrope" else None)
+
+    bidx = jnp.arange(B)[:, None]
+    slot_w = jnp.where(valid, positions % T, T)     # T = out of range: drop
+    old_pos = cache["pos"]
+    new_cache = dict(cache)
+    new_cache["pos"] = old_pos.at[bidx, slot_w].set(positions, mode="drop")
+    quant = cfg.kv_cache_quant
+    lidx = jnp.arange(cfg.n_layers)
+
+    def body(carry, xs):
+        hh, kall, vall, ksall, vsall = carry
+        lp, li = xs
+        idx = lambda a: jax.lax.dynamic_index_in_dim(a, li, 0, keepdims=False)
+        upd = lambda a, x: jax.lax.dynamic_update_index_in_dim(a, x, li, 0)
+        kc, vc = idx(kall), idx(vall)
+        a_in = L.norm(hh, lp["ln1"], cfg.norm_type, cfg.norm_eps)
+        q, k, v = _qkv(a_in, lp, cfg, impl, interpret)
+        if cos_sin is not None:
+            cos, sin = cos_sin
+            q = L.apply_rope(q, cos, sin)
+            k = L.apply_rope(k, cos, sin)
+        if quant:
+            ks, vs = idx(ksall), idx(vsall)
+            kq, kscale = _quantize_kv(k)            # (B,C,KH,Dh)/(B,C,KH)
+            vq, vscale = _quantize_kv(v)
+            kc_eff = kc.astype(jnp.float32) * ks[..., None]
+            vc_eff = vc.astype(jnp.float32) * vs[..., None]
+            # attend the quantized reconstruction of the chunk's own keys
+            # so results do not depend on where chunk boundaries fall
+            k_chunk = kq.astype(jnp.float32) * kscale[..., None]
+            v_chunk = vq.astype(jnp.float32) * vscale[..., None]
+        else:
+            kc_eff, vc_eff = kc, vc
+            k_chunk = k.astype(kc.dtype)            # ring-dtype rounding,
+            v_chunk = v.astype(vc.dtype)            # same reason as above
+        o = L.prefill_attention(q, kc_eff, vc_eff, old_pos, k_chunk,
+                                v_chunk, positions, valid,
+                                window=cfg.sliding_window,
+                                softcap=cfg.attn_logit_softcap)
+        if quant:
+            kall = upd(kall, kc.at[bidx, slot_w].set(kq, mode="drop"))
+            vall = upd(vall, vc.at[bidx, slot_w].set(vq, mode="drop"))
+            ksall = upd(ksall, ks.at[bidx, slot_w].set(kscale, mode="drop"))
+            vsall = upd(vsall, vs.at[bidx, slot_w].set(vscale, mode="drop"))
+        else:
+            kall = upd(kall, kc.at[bidx, slot_w].set(k_chunk, mode="drop"))
+            vall = upd(vall, vc.at[bidx, slot_w].set(v_chunk, mode="drop"))
+        hh = hh + _attn_out(o, lp, cfg, impl, interpret)
+        m_in = L.norm(hh, lp["ln2"], cfg.norm_type, cfg.norm_eps)
+        if cfg.family == "moe":
+            mo, _ = MOE.moe_block(m_in, lp["moe"], cfg, impl=impl,
+                                  interpret=interpret)
+            hh = hh + mo
+        elif cfg.act == "gelu":
+            hh = hh + L.gelu_mlp(m_in, lp["mlp"], impl=impl,
+                                 interpret=interpret)
+        else:
+            hh = hh + L.swiglu_mlp(m_in, lp["mlp"], impl=impl,
+                                   interpret=interpret)
+        return (hh, kall, vall, ksall, vsall), None
+
+    zero = jnp.zeros((), jnp.float32)
+    (h, knew, vnew, ksnew, vsnew), _ = jax.lax.scan(
+        body, (h, cache["k"], cache["v"],
+               cache.get("k_scale", zero), cache.get("v_scale", zero)),
+        (params["layers"], lidx), unroll=_unroll(cfg))
+    new_cache["k"], new_cache["v"] = knew, vnew
+    if quant:
+        new_cache["k_scale"], new_cache["v_scale"] = ksnew, vsnew
+    h = L.norm(h, params["ln_f"], cfg.norm_type, cfg.norm_eps)
+    return h, new_cache
+
+
 def _shared_block_decode(h, emb0, sp, cfg, kc, vc, slot_pos, position, slot,
                          impl, interpret, live=None):
     """h/emb0: (B,1,d); kc/vc: (B,T,KH,Dh2)."""
@@ -763,15 +888,28 @@ def cache_batch_axis(key: str) -> int:
     return 0 if key == "pos" else 1
 
 
-def cache_set_slot(cache: Dict[str, Any], slot_cache: Dict[str, Any],
-                   index) -> Dict[str, Any]:
-    """Scatter a single-request cache (batch dim 1) into batch slot
-    ``index`` of a multi-slot decode cache. ``index`` may be traced, so
-    one compiled program serves every slot (continuous-batching
-    admission)."""
+def cache_set_slots(cache: Dict[str, Any], group_cache: Dict[str, Any],
+                    indices) -> Dict[str, Any]:
+    """Scatter a G-request cache batch into batch slots ``indices`` (G,)
+    of a multi-slot decode cache in ONE program. ``indices`` may be traced,
+    so a single compilation serves every slot assignment (batched
+    continuous-batching admission). An index >= B drops that row -- the
+    scheduler pads admission groups to a bucketed size with dummy rows and
+    points them out of range instead of wasting a real slot on them."""
     out = {}
     for k, v in cache.items():
-        ax = cache_batch_axis(k)
-        out[k] = jax.lax.dynamic_update_slice_in_dim(
-            v, slot_cache[k].astype(v.dtype), index, axis=ax)
+        upd = group_cache[k].astype(v.dtype)
+        if cache_batch_axis(k) == 0:
+            out[k] = v.at[indices].set(upd, mode="drop")
+        else:
+            out[k] = v.at[:, indices].set(upd, mode="drop")
     return out
+
+
+def cache_set_slot(cache: Dict[str, Any], slot_cache: Dict[str, Any],
+                   index) -> Dict[str, Any]:
+    """Single-request admission: scatter a batch-dim-1 cache into slot
+    ``index``. Thin wrapper over ``cache_set_slots`` (kept for the
+    recurrent-family exact-length prefill path and external callers)."""
+    return cache_set_slots(cache, slot_cache,
+                           jnp.asarray(index, jnp.int32)[None])

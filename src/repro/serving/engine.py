@@ -1,28 +1,34 @@
-"""Continuous-batching serving engine with a fully on-device decode loop.
+"""Continuous-batching serving engine with a fully on-device decode loop
+and a batched, chunked prefill pipeline.
 
 The paper's end-to-end number is serving throughput, and at that scale the
-bottleneck is not the MatMul but the per-token host round-trip (LlamaF,
-arXiv:2409.11424).  This engine therefore keeps the whole decode loop on
-device:
+bottleneck is not the MatMul but host round-trips and under-filled batches
+(LlamaF, arXiv:2409.11424).  This engine therefore keeps both phases busy:
 
 * ``decode chunk``: one jitted program runs up to ``decode_chunk`` decode
   steps inside a ``jax.lax.while_loop`` -- sampling, EOS masking, per-slot
   token-budget accounting and position bookkeeping are all arrays in the
   loop carry.  The host sees one sync per *chunk*, not per token, so host
   syncs per generated sequence are O(1).
-* ``continuous batching``: a request queue feeds a fixed set of batch
-  slots.  When a sequence finishes (EOS or budget), its slot is freed and
-  the next queued request is admitted between chunks -- single-request
-  prefill, cache scatter into the slot (``transformer.cache_set_slot``),
-  no recompilation.  Dead slots still run the math (static shapes) but a
-  live mask keeps them from touching their cache (``decode_step(live=)``).
+* ``batched chunked prefill``: at each chunk boundary the scheduler drains
+  up to ``prefill_batch`` queued requests into the free slots at once,
+  right-pads their prompts to a shared bucketed length, and feeds them
+  through ONE jitted ``transformer.prefill_chunk`` program per fixed
+  (group, chunk) shape.  A length mask keeps padding out of the KV ring
+  and out of the sampled first token; prompts longer than
+  ``prefill_chunk`` stream through the same program chunk by chunk, so
+  prefill compilations are O(#buckets), not O(#distinct prompt lengths).
+  All resulting caches scatter into their slots in a single
+  ``transformer.cache_set_slots`` call.  Recurrent families (ssm/hybrid)
+  keep exact-length single-request prefill, since trailing pads would
+  pollute the recurrent state.
+* ``continuous batching``: when a sequence finishes (EOS, budget, or
+  ``cancel``), its slot is freed and queued requests are admitted between
+  chunks -- no recompilation.  Dead slots still run the math (static
+  shapes) but a live mask keeps them from touching their cache
+  (``decode_step(live=)``).
 * ``streaming``: each request may carry an ``on_token`` callback; tokens
   are delivered after every chunk (and the first token at admission).
-
-Prompts are right-padded to a bucket length for attention families (exact
-under causal masking; pad cache entries are disabled via ``pos = -1``).
-Recurrent families (ssm/hybrid) prefill at exact prompt length, since
-trailing pads would pollute the recurrent state.
 
 ``generate_reference`` keeps the pre-rewrite host-driven loop (one jitted
 step per token, same math) for parity tests and as readable documentation
@@ -42,6 +48,10 @@ import numpy as np
 from repro.configs.base import ModelConfig
 from repro.models import transformer as T
 
+# families whose decode state is a KV ring -> batched chunked prefill;
+# everything else (recurrent state) prefills at exact length per request
+_KV_FAMILIES = ("dense", "vlm", "audio", "moe", "gpt2")
+
 
 @dataclasses.dataclass
 class ServeConfig:
@@ -53,6 +63,8 @@ class ServeConfig:
     max_slots: int = 4                  # concurrent batch slots
     decode_chunk: int = 32              # device-loop steps per host sync
     prefill_bucket: int = 16            # prompt pad granularity (attention)
+    prefill_batch: int = 8              # max requests per prefill group
+    prefill_chunk: int = 64             # tokens per prefill chunk
 
 
 @dataclasses.dataclass
@@ -63,6 +75,8 @@ class Request:
     on_token: Optional[Callable[[int, int], None]] = None
     tokens: List[int] = dataclasses.field(default_factory=list)
     done: bool = False
+    cancelled: bool = False
+    ttft_s: Optional[float] = None      # time-to-first-token within run()
 
     def _emit(self, tok: int) -> None:
         self.tokens.append(tok)
@@ -73,7 +87,7 @@ class Request:
 class Engine:
     def __init__(self, cfg: ModelConfig, params, serve_cfg: ServeConfig):
         for field in ("max_slots", "decode_chunk", "max_new_tokens",
-                      "cache_len"):
+                      "cache_len", "prefill_batch", "prefill_chunk"):
             if getattr(serve_cfg, field) < 1:
                 raise ValueError(f"ServeConfig.{field} must be >= 1, got "
                                  f"{getattr(serve_cfg, field)}")
@@ -84,10 +98,19 @@ class Engine:
         # ring length must match init_cache's clamp or slot scatter would
         # write a cache_len-long update into a window-long ring
         self._T = T.attn_cache_len(cfg, serve_cfg.cache_len)
+        self._kv_family = cfg.family in _KV_FAMILIES
         self._prefill = jax.jit(self._prefill_impl)
         # caches are donated so XLA aliases the ring buffers call-to-call
         self._admit_cache = jax.jit(self._admit_cache_impl,
                                     donate_argnums=(0,))
+        # (the group cache is NOT donated here: its (L,G,T,..) buffers can
+        # never alias the (L,B,T,..) output, they'd just warn)
+        self._admit_caches = jax.jit(self._admit_caches_impl,
+                                     donate_argnums=(0,))
+        self._prefill_chunk = jax.jit(self._prefill_chunk_impl,
+                                      donate_argnums=(1, 5))
+        self._sample_first = jax.jit(self._sample_first_impl)
+        self._bind_slots = jax.jit(self._bind_slots_impl)
         self._decode_chunk = jax.jit(self._decode_chunk_impl,
                                      donate_argnums=(1,))
         self._ref_step = jax.jit(self._ref_step_impl)
@@ -104,8 +127,8 @@ class Engine:
         return jnp.argmax(logits, axis=-1).astype(jnp.int32)
 
     def _prefill_impl(self, params, tokens, length, key):
-        """Single-request prefill: tokens (1,P) right-padded, length ().
-        Returns (first sampled token (), slot cache with pads disabled)."""
+        """Exact-length single-request prefill (recurrent families):
+        tokens (1,P), length (). Returns (first token (), slot cache)."""
         P = tokens.shape[1]
         logits, _, caches = T.forward_seq(params, self.cfg, tokens=tokens,
                                           want_cache=True)
@@ -122,6 +145,54 @@ class Engine:
 
     def _admit_cache_impl(self, cache, slot_cache, index):
         return T.cache_set_slot(cache, slot_cache, index)
+
+    def _admit_caches_impl(self, cache, group_cache, indices):
+        return T.cache_set_slots(cache, group_cache, indices)
+
+    def _prefill_chunk_impl(self, params, gcache, tokens, start, lengths,
+                            last_logits):
+        """One (G, C) prefill chunk + ragged last-token logit capture.
+
+        ``start`` is traced, so every chunk index reuses one compilation.
+        ``last_logits`` accumulates each row's logits at its true last
+        prompt token (rows whose last token is not in this chunk pass
+        through); the LM head runs on ONE gathered row per sequence, never
+        on the full (G, C, V) block."""
+        C = tokens.shape[1]
+        h, gcache = T.prefill_chunk(params, self.cfg, gcache, tokens=tokens,
+                                    start=start, lengths=lengths)
+        last = lengths - 1
+        off = jnp.clip(last - start, 0, C - 1)
+        hr = jnp.take_along_axis(h, off[:, None, None], axis=1)[:, 0]
+        logits = T.lm_logits(params, self.cfg, hr)          # (G, V) f32
+        sel = (last >= start) & (last < start + C)
+        return gcache, jnp.where(sel[:, None], logits, last_logits)
+
+    def _sample_first_impl(self, last_logits, keys):
+        """Per-row first-token sampling with per-request keys: row i uses
+        the key the sequential path would have split for request i, so
+        batched admission is token-identical to one-at-a-time admission."""
+        samp = lambda lg, key: self._sample(lg[None], key)[0]
+        return jax.vmap(samp)(last_logits, keys)
+
+    def _bind_slots_impl(self, first, budgets, free_arr):
+        """Device-side slot binding for a prefill group: rows that already
+        finished at their first token (budget 1 / instant EOS; dummy rows
+        carry budget 0) take NO slot, and survivors pack into ``free_arr``
+        in group order -- the exact layout one-at-a-time admission yields
+        (a slot's row index feeds the shared decode sampling key, so
+        layout parity is what keeps batched admission token-identical
+        under temperature). Returns scatter indices, out-of-range where
+        unbound. On device so the cache scatter can be dispatched BEFORE
+        the host syncs on the first tokens."""
+        fin = budgets <= 1
+        if self.scfg.eos_id is not None:
+            fin = fin | (first == self.scfg.eos_id)
+        alive = ~fin
+        rank = jnp.cumsum(alive.astype(jnp.int32)) - 1
+        nfree = free_arr.shape[0]
+        return jnp.where(alive, free_arr[jnp.clip(rank, 0, nfree - 1)],
+                         self._B)
 
     def _decode_chunk_impl(self, params, cache, tok, pos, live, n_gen,
                            budget, key):
@@ -182,9 +253,15 @@ class Engine:
         self._live = np.zeros(B, bool)
         self._ngen = np.zeros(B, np.int32)
         self._budget = np.full(B, self.scfg.max_new_tokens, np.int32)
-        self.stats = dict(prefill_s=0.0, decode_s=0.0, tokens=0,
-                          tok_per_s=0.0, host_syncs=0, admissions=0,
-                          chunks=0, requests=0)
+        self._run_t0: Optional[float] = None
+        self.stats = self._fresh_stats(0)
+
+    @staticmethod
+    def _fresh_stats(requests: int) -> Dict[str, float]:
+        return dict(prefill_s=0.0, decode_s=0.0, tokens=0, tok_per_s=0.0,
+                    host_syncs=0, admissions=0, chunks=0,
+                    requests=requests, prefill_groups=0, prefill_tokens=0,
+                    prefill_tok_per_s=0.0, ttft_s=0.0)
 
     def submit(self, prompt: List[int],
                max_new_tokens: Optional[int] = None,
@@ -211,20 +288,142 @@ class Engine:
         self._queue.append(req)
         return req.id
 
-    def _bucket_len(self, n: int) -> int:
-        # recurrent state would absorb trailing pads -> exact length there;
-        # prompts at/beyond the ring (windowed archs) also go exact, so the
-        # kept last-window slots hold real tokens, not masked pads
-        if self.cfg.family in ("ssm", "hybrid") or n >= self._T:
-            return n
-        b = max(self.scfg.prefill_bucket, 1)
-        return min(-(-n // b) * b, self._T)
+    def cancel(self, request_id: int) -> bool:
+        """Cancel a request. Still queued: it never runs. Already in a
+        slot: the slot is freed at the next chunk boundary and tokens
+        emitted so far are kept. Either way the request shows up in this
+        cycle's results with ``cancelled=True``. Returns False for ids
+        that are unknown or already finished."""
+        for req in self._queue:
+            if req.id == request_id:
+                self._queue.remove(req)
+                req.done = req.cancelled = True
+                self._results[req.id] = req
+                return True
+        for i, req in enumerate(self._slots):
+            if req is not None and req.id == request_id:
+                self._live[i] = False
+                self._slots[i] = None
+                req.done = req.cancelled = True
+                self._results[req.id] = req
+                return True
+        return False
 
+    def _finish(self, req: Request) -> None:
+        req.done = True
+        self._results[req.id] = req
+
+    def _note_first_token(self, req: Request) -> None:
+        if self._run_t0 is not None:
+            req.ttft_s = time.perf_counter() - self._run_t0
+
+    def _start_slot(self, slot: int, req: Request, first_tok: int,
+                    prompt_len: int) -> bool:
+        """Record a freshly prefilled request; returns True if the slot
+        ended up free (finished at its first token, or cancelled from its
+        own first-token callback). The slot is bound BEFORE the token is
+        emitted so cancel() called inside on_token can find and free it."""
+        self._note_first_token(req)
+        self._slots[slot] = req
+        self._tok[slot] = first_tok
+        self._pos[slot] = prompt_len
+        self._live[slot] = True
+        self._ngen[slot] = 1
+        self._budget[slot] = req.max_new_tokens
+        req._emit(first_tok)
+        if self._slots[slot] is not req:        # cancelled during emit
+            return True
+        if req.max_new_tokens <= 1 or (
+                self.scfg.eos_id is not None
+                and first_tok == self.scfg.eos_id):
+            self._live[slot] = False
+            self._slots[slot] = None
+            self._finish(req)
+            return True
+        return False
+
+    # -- admission: batched chunked prefill (KV-cache families) --------------
+    def _group_shape(self, lens: List[int]):
+        """(padded len P, chunk len C, padded group size Gp).
+
+        P is the group max rounded up to ``prefill_bucket`` (one compiled
+        shape per bucket) and, past ``prefill_chunk``, to a multiple of the
+        chunk length (ONE compiled shape covers every longer prompt).
+        Group size pads to a power of two capped at ``prefill_batch``."""
+        b = max(self.scfg.prefill_bucket, 1)
+        maxb = max(-(-n // b) * b for n in lens)
+        C = max(1, min(self.scfg.prefill_chunk, self._T))
+        if maxb <= C:
+            P = C = maxb
+        else:
+            P = -(-maxb // C) * C
+        Gp = 1 << max(len(lens) - 1, 0).bit_length()
+        return P, C, min(max(Gp, 1), max(self.scfg.prefill_batch, 1))
+
+    def _admit_group(self, slots: List[int], reqs: List[Request]) -> None:
+        """Prefill ``reqs`` as one right-padded batch and scatter all their
+        caches into ``slots`` with a single cache_set_slots call."""
+        t0 = time.perf_counter()
+        G = len(reqs)
+        lens = [len(r.prompt) for r in reqs]
+        P, C, Gp = self._group_shape(lens)
+        toks = np.zeros((Gp, P), np.int32)
+        lengths = np.zeros(Gp, np.int32)            # dummy rows: length 0
+        for i, r in enumerate(reqs):
+            toks[i, :lens[i]] = r.prompt
+            lengths[i] = lens[i]
+        # split one key per request IN QUEUE ORDER -- exactly the stream a
+        # sequential (prefill_batch=1) admission loop would consume, so the
+        # two schedules sample identical first tokens
+        subs = []
+        for _ in range(G):
+            self._key, sub = jax.random.split(self._key)
+            subs.append(sub)
+        subs += [subs[-1]] * (Gp - G)               # dummies: never emitted
+        if self._cache is None:
+            self._cache = T.init_cache(self.cfg, self._B, self._T)
+        gcache = T.init_cache(self.cfg, Gp, self._T)
+        last_logits = jnp.zeros((Gp, self.cfg.vocab_size), jnp.float32)
+        lengths_d = jnp.asarray(lengths)
+        for j in range(P // C):
+            gcache, last_logits = self._prefill_chunk(
+                self.params, gcache, jnp.asarray(toks[:, j * C:(j + 1) * C]),
+                jnp.asarray(j * C, jnp.int32), lengths_d, last_logits)
+        first_d = self._sample_first(last_logits, jnp.stack(subs))
+        budgets = np.zeros(Gp, np.int32)            # dummies: 0 -> unbound
+        budgets[:G] = [r.max_new_tokens for r in reqs]
+        # free list padded to Gp so compiled shapes track the group
+        # BUCKET, not the exact group size (pad entries are never read:
+        # survivor ranks stay < G)
+        free_arr = np.full(Gp, self._B, np.int32)
+        free_arr[:G] = slots
+        idx_d = self._bind_slots(first_d, jnp.asarray(budgets),
+                                 jnp.asarray(free_arr))
+        self._cache = self._admit_caches(self._cache, gcache, idx_d)
+        firsts = np.asarray(jax.device_get(first_d))   # 1 sync / GROUP
+        # host-side mirror of _bind_slots_impl for the bookkeeping below
+        free_iter = iter(slots)
+        bound = [None if (req.max_new_tokens <= 1
+                          or (self.scfg.eos_id is not None
+                              and int(firsts[i]) == self.scfg.eos_id))
+                 else next(free_iter) for i, req in enumerate(reqs)]
+        self.stats["host_syncs"] += 1
+        self.stats["prefill_groups"] += 1
+        self.stats["admissions"] += G
+        self.stats["prefill_tokens"] += sum(lens)
+        self.stats["prefill_s"] += time.perf_counter() - t0
+        for i, req in enumerate(reqs):
+            if bound[i] is None:
+                self._note_first_token(req)
+                req._emit(int(firsts[i]))
+                self._finish(req)
+            else:
+                self._start_slot(bound[i], req, int(firsts[i]), lens[i])
+
+    # -- admission: exact-length single-request prefill (recurrent) ----------
     def _admit_request(self, slot: int, req: Request) -> None:
         n = len(req.prompt)
-        P = self._bucket_len(n)
-        toks = np.zeros((1, P), np.int32)
-        toks[0, :n] = req.prompt
+        toks = np.asarray(req.prompt, np.int32)[None]
         t0 = time.perf_counter()
         self._key, sub = jax.random.split(self._key)
         first, slot_cache = self._prefill(self.params, jnp.asarray(toks),
@@ -235,28 +434,24 @@ class Engine:
                                         jnp.asarray(slot, jnp.int32))
         first_tok = int(first)                    # 1 host sync / admission
         self.stats["host_syncs"] += 1
+        self.stats["prefill_groups"] += 1
         self.stats["admissions"] += 1
+        self.stats["prefill_tokens"] += n
         self.stats["prefill_s"] += time.perf_counter() - t0
-        req._emit(first_tok)
-        finished = req.max_new_tokens <= 1 or (
-            self.scfg.eos_id is not None and first_tok == self.scfg.eos_id)
-        if finished:
-            req.done = True
-            self._results[req.id] = req
-            return
-        self._slots[slot] = req
-        self._tok[slot] = first_tok
-        self._pos[slot] = n
-        self._live[slot] = True
-        self._ngen[slot] = 1
-        self._budget[slot] = req.max_new_tokens
+        self._start_slot(slot, req, first_tok, n)
 
     def _admit_pending(self) -> None:
-        for i in range(self._B):
-            if not self._queue:
-                break
-            if self._slots[i] is None:
-                self._admit_request(i, self._queue.popleft())
+        while self._queue:
+            free = [i for i in range(self._B) if self._slots[i] is None]
+            if not free:
+                return
+            if self._kv_family:
+                n = min(len(free), max(self.scfg.prefill_batch, 1),
+                        len(self._queue))
+                reqs = [self._queue.popleft() for _ in range(n)]
+                self._admit_group(free[:n], reqs)
+            else:
+                self._admit_request(free[0], self._queue.popleft())
 
     def _run_chunk(self) -> None:
         t0 = time.perf_counter()
@@ -280,29 +475,39 @@ class Engine:
                 continue
             for tok in out[i][out[i] >= 0].tolist():
                 req._emit(tok)
-            if not self._live[i]:
-                req.done = True
-                self._results[req.id] = req
+                if self._slots[i] is None:      # on_token cancelled us
+                    break
+            if self._slots[i] is not None and not self._live[i]:
+                self._finish(req)
                 self._slots[i] = None               # slot freed -> eviction
 
+    def _finalize_stats(self, done: Dict[int, List[int]]) -> None:
+        ntok = sum(len(t) for t in done.values())
+        self.stats["tokens"] = ntok
+        self.stats["tok_per_s"] = ntok / max(self.stats["decode_s"], 1e-9)
+        self.stats["prefill_tok_per_s"] = (
+            self.stats["prefill_tokens"] / max(self.stats["prefill_s"],
+                                               1e-9))
+        ttfts = [r.ttft_s for r in self._results.values()
+                 if r.ttft_s is not None]
+        self.stats["ttft_s"] = sum(ttfts) / len(ttfts) if ttfts else 0.0
+
     def run(self) -> Dict[int, List[int]]:
-        """Drive admission + fused decode chunks until queue and slots are
-        drained. Returns {request_id: tokens} for THIS cycle; stats cover
-        this cycle only (slots are always empty between run() calls, so
-        resetting the counters here is safe)."""
-        self.stats.update(prefill_s=0.0, decode_s=0.0, tokens=0,
-                          tok_per_s=0.0, host_syncs=0, admissions=0,
-                          chunks=0, requests=len(self._queue))
+        """Drive batched admission + fused decode chunks until queue and
+        slots are drained. Returns {request_id: tokens} for THIS cycle;
+        stats cover this cycle only (slots are always empty between run()
+        calls, so resetting the counters here is safe)."""
+        self.stats = self._fresh_stats(len(self._queue))
+        self._run_t0 = time.perf_counter()
         while self._queue or any(r is not None for r in self._slots):
             self._admit_pending()
             if not self._live.any():
                 continue
             self._run_chunk()
         done = {rid: req.tokens for rid, req in self._results.items()}
+        self._finalize_stats(done)
         self._results = {}                  # next submit/run cycle is fresh
-        ntok = sum(len(t) for t in done.values())
-        self.stats["tokens"] = ntok
-        self.stats["tok_per_s"] = ntok / max(self.stats["decode_s"], 1e-9)
+        self._run_t0 = None
         return done
 
     # -- public API ----------------------------------------------------------
@@ -334,6 +539,7 @@ class Engine:
         self._reset()
         ids = [self.submit(list(p)) for p in prompts]
         self.stats["requests"] = len(ids)
+        self._run_t0 = time.perf_counter()
         self._admit_pending()
         t0 = time.perf_counter()
         while self._live.any():
@@ -355,13 +561,11 @@ class Engine:
                         or (self.scfg.eos_id is not None
                             and tok == self.scfg.eos_id)):
                     self._live[i] = False
-                    req.done = True
-                    self._results[req.id] = req
+                    self._finish(req)
                     self._slots[i] = None
         self.stats["decode_s"] += time.perf_counter() - t0
         res = {rid: req.tokens for rid, req in self._results.items()}
+        self._finalize_stats(res)
         self._results = {}
-        ntok = sum(len(t) for t in res.values())
-        self.stats["tokens"] = ntok
-        self.stats["tok_per_s"] = ntok / max(self.stats["decode_s"], 1e-9)
+        self._run_t0 = None
         return [res[i] for i in ids]

@@ -50,15 +50,31 @@ def settings(max_examples=10, deadline=None, **_):
 
 def given(**strats):
     def deco(fn):
-        # deliberately NOT functools.wraps: pytest must see a zero-arg
-        # callable, not the wrapped signature (it would demand fixtures)
-        def runner():
-            n = getattr(runner, "_stub_max_examples", 10)
-            rng = np.random.default_rng(zlib.adler32(fn.__name__.encode()))
-            for _ in range(n):
-                fn(**{k: s.sample(rng) for k, s in strats.items()})
+        # deliberately NOT functools.wraps: pytest must see only the
+        # NON-strategy parameters (fixtures, e.g. a shared model), not the
+        # wrapped signature (it would demand fixtures for strategy args).
+        # exec builds a runner whose signature is exactly the fixture
+        # params, so pytest injects them and we forward them through.
+        import inspect
+
+        fixtures = [p for p in inspect.signature(fn).parameters
+                    if p not in strats]
+        args = ", ".join(fixtures)
+        ns = {}
+        exec(f"def runner({args}):\n"
+             f"    __drive({{{', '.join(f'{a!r}: {a}' for a in fixtures)}}})",
+             {"__drive": lambda fkw: _drive(runner, fn, strats, fkw)}, ns)
+        runner = ns["runner"]
         runner.__name__ = fn.__name__
         runner.__doc__ = fn.__doc__
         runner.__module__ = fn.__module__
         return runner
     return deco
+
+
+def _drive(runner, fn, strats, fixture_kwargs):
+    n = getattr(runner, "_stub_max_examples", 10)
+    rng = np.random.default_rng(zlib.adler32(fn.__name__.encode()))
+    for _ in range(n):
+        fn(**fixture_kwargs,
+           **{k: s.sample(rng) for k, s in strats.items()})

@@ -188,6 +188,139 @@ def test_submit_run_cycles_are_fresh(model):
     assert eng.stats["requests"] == 1 and eng.stats["tokens"] == 4
 
 
+def test_batched_admission_token_identical_to_sequential(model):
+    """THE acceptance oracle: a queue admitted in batched prefill groups
+    must emit token-for-token what one-at-a-time admission emits -- greedy
+    AND temperature sampling (per-request keys are split in queue order in
+    both schedules)."""
+    cfg, _ = model
+    prompts = _prompts(cfg, 9, lo=1, hi=14, seed=3)
+    for extra in (dict(), dict(temperature=0.7, seed=5)):
+        batched = _engine(model, max_slots=4, prefill_batch=4, **extra)
+        seq = _engine(model, max_slots=4, prefill_batch=1, **extra)
+        outs_b = batched.generate(prompts)
+        outs_s = seq.generate(prompts)
+        assert outs_b == outs_s
+        # batching is real: one prefill sync per GROUP, not per request
+        assert batched.stats["admissions"] == seq.stats["admissions"] == 9
+        assert (batched.stats["prefill_groups"]
+                < seq.stats["prefill_groups"] == 9)
+        assert batched.stats["host_syncs"] < seq.stats["host_syncs"]
+
+
+def test_chunked_prefill_long_prompt_parity(model):
+    """Prompts longer than prefill_chunk stream through the fixed-shape
+    chunk program; results must match sequential admission and the
+    host-loop reference (full-attention arch)."""
+    cfg, _ = model
+    prompts = _prompts(cfg, 3, lo=18, hi=30, seed=4)
+    kw = dict(max_new_tokens=5, cache_len=64, decode_chunk=5,
+              max_slots=2, prefill_chunk=8, prefill_bucket=4)
+    outs = _engine(model, **kw).generate(prompts)
+    seq = _engine(model, prefill_batch=1, **kw).generate(prompts)
+    assert outs == seq
+    two = _engine(model, **kw)
+    assert two.generate(prompts[:2]) == two.generate_reference(prompts[:2])
+
+
+def test_chunked_prefill_windowed_ring_wrap():
+    """A prompt longer than the KV ring, fed chunk-by-chunk, must leave
+    exactly the last-window state behind: parity with the host-loop
+    reference on a sliding-window arch."""
+    cfg = get_arch("h2o-danube-1.8b", reduced=True)      # window = 64
+    params = T.init_params(cfg, jax.random.PRNGKey(0))
+    scfg = ServeConfig(max_new_tokens=4, cache_len=64, decode_chunk=4,
+                       max_slots=2, prefill_chunk=16, prefill_bucket=8)
+    eng = Engine(cfg, params, scfg)
+    prompts = _prompts(cfg, 2, lo=90, hi=120, seed=5)    # 90+ > ring 64
+    assert eng.generate(prompts) == eng.generate_reference(prompts)
+
+
+def test_prefill_compilations_are_bucketed(model):
+    """Ragged prompt lengths inside one bucket share one padded shape:
+    a deep ragged queue admits in prefill_groups, each a single fused
+    prefill (prefill tokens accounted per true lengths, not pads)."""
+    cfg, _ = model
+    prompts = _prompts(cfg, 8, lo=1, hi=16, seed=6)
+    eng = _engine(model, max_slots=4, prefill_batch=4, prefill_bucket=16)
+    eng.generate(prompts)
+    assert eng.stats["prefill_groups"] == 2              # 8 reqs / groups of 4
+    assert eng.stats["prefill_tokens"] == sum(len(p) for p in prompts)
+    assert eng.stats["ttft_s"] > 0
+
+
+def test_cancel_queued_and_running(model):
+    """cancel(): a queued request never runs; a running request keeps its
+    streamed prefix and frees its slot; unknown ids return False."""
+    cfg, _ = model
+    eng = _engine(model, max_new_tokens=12, decode_chunk=3)
+    a = eng.submit(_prompts(cfg, 1, seed=7)[0])
+    b = eng.submit(_prompts(cfg, 1, seed=8)[0])
+    assert eng.cancel(b)
+    assert not eng.cancel(b) and not eng.cancel(999)
+    # cancel `c` mid-stream from its own token callback
+    seen = []
+
+    def cb(rid, tok):
+        seen.append(tok)
+        if len(seen) == 4:
+            eng.cancel(rid)
+    c = eng.submit(_prompts(cfg, 1, seed=9)[0], on_token=cb)
+    res = eng.run()
+    assert set(res) == {a, b, c}
+    assert res[b] == []                                  # never admitted
+    assert len(res[a]) == 12                             # untouched
+    assert 1 <= len(res[c]) < 12                         # partial kept
+    # engine drains cleanly afterwards
+    assert len(eng.generate([_prompts(cfg, 1, seed=10)[0]])[0]) == 12
+    # regression: cancelling from the FIRST token's callback must stick
+    # (the slot is bound before the admission-time emit, so cancel() can
+    # find and free it)
+    eng2 = _engine(model, max_new_tokens=12, decode_chunk=3)
+    d = eng2.submit(_prompts(cfg, 1, seed=13)[0],
+                    on_token=lambda rid, tok: eng2.cancel(rid))
+    res2 = eng2.run()
+    assert res2[d] == res2[d][:1] and len(res2[d]) == 1
+
+
+def test_prefill_chunk_boundary_invariance(model):
+    """Where chunk boundaries fall must not change a single token: the
+    chunk's own keys are attended at ring dtype (the value decode would
+    later read back), so chunk=1 (decode-like), chunk=4 and one-shot
+    prefill agree exactly."""
+    cfg, _ = model
+    prompts = _prompts(cfg, 2, lo=9, hi=14, seed=12)
+    outs = [
+        _engine(model, max_new_tokens=5, decode_chunk=5,
+                prefill_chunk=chunk, prefill_bucket=1).generate(prompts)
+        for chunk in (1, 4, 32)
+    ]
+    assert outs[0] == outs[1] == outs[2]
+
+
+def test_int8_kv_cache_chunked_prefill():
+    """kv_cache_quant engine path: chunked prefill quantizes each chunk's
+    K/V at the same per-token-head granularity decode uses, so chunk
+    placement is invisible and batched == sequential admission holds."""
+    cfg = get_arch("llama3.2-1b", reduced=True).replace(
+        kv_cache_quant=True, dtype="float32")
+    params = T.init_params(cfg, jax.random.PRNGKey(0))
+
+    def mk(**kw):
+        base = dict(max_new_tokens=4, cache_len=64, decode_chunk=4,
+                    max_slots=2, prefill_bucket=4)
+        base.update(kw)
+        return Engine(cfg, params, ServeConfig(**base))
+
+    prompts = _prompts(cfg, 3, lo=10, hi=20, seed=11)
+    outs = mk(prefill_chunk=8).generate(prompts)         # multi-chunk
+    assert outs == mk(prefill_chunk=8, prefill_batch=1).generate(prompts)
+    assert outs == mk(prefill_chunk=32).generate(prompts)  # single chunk
+    ref_eng = mk(prefill_chunk=8)
+    assert ref_eng.generate(prompts[:2]) == \
+        ref_eng.generate_reference(prompts[:2])
+
+
 def test_scheduler_recurrent_family():
     """SSM family: exact-length prefill (no pad pollution of the recurrent
     state); batched continuous run matches single-request runs."""

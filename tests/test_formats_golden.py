@@ -1,0 +1,142 @@
+"""Golden packing tests: bit-exact round-trips and slab-layout invariants
+against hand-computed super-blocks.
+
+The weights here are CONSTRUCTED so that the one-shot quantizer's fit is
+exact: every block's extreme values pin the intended block scale/min, the
+intended super-scales are fp16-exact powers of two, and every value sits
+on its reconstruction grid. That turns quantize() into a pure
+pack-and-store whose every payload byte we can predict by hand -- any
+layout drift (slab order, nibble packing, scale bias) fails loudly
+instead of hiding inside a tolerance.
+
+Covers the paper's native variants (Q2_K, Q3_K) and a beyond-paper one
+(Q6_K), plus Q8_0 and an independent re-implementation of the slab rule.
+"""
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import formats as F
+from repro.core import quantize as Q
+
+
+def _slab_pack_ref(q: np.ndarray, bits: int, sb: int) -> np.ndarray:
+    """Independent reimplementation of the slab layout contract: within
+    each super-block of ``sb`` rows, bit-field j (shift j*bits) of packed
+    row p holds original row j * (sb // F) + p."""
+    Fpb = 8 // bits
+    K, N = q.shape
+    slab = sb // Fpb
+    out = np.zeros((K // Fpb, N), np.uint8)
+    for s in range(K // sb):                    # super-block
+        for p in range(slab):                   # packed row within SB
+            byte = np.zeros(N, np.uint8)
+            for j in range(Fpb):                # bit-field
+                byte |= (q[s * sb + j * slab + p] & ((1 << bits) - 1)) \
+                    << (bits * j)
+            out[s * slab + p] = byte
+    return out
+
+
+def test_slab_layout_invariant_vs_independent_packer():
+    rng = np.random.default_rng(0)
+    for bits, sb in [(1, 256), (2, 256), (4, 256), (2, 64)]:
+        q = rng.integers(0, 1 << bits, size=(512, 3)).astype(np.uint8)
+        np.testing.assert_array_equal(
+            np.asarray(F.slab_pack(jnp.asarray(q), bits, sb)),
+            _slab_pack_ref(q, bits, sb))
+        np.testing.assert_array_equal(
+            np.asarray(F.slab_unpack(jnp.asarray(
+                _slab_pack_ref(q, bits, sb)), bits, sb)), q)
+
+
+def _col_dup(a: np.ndarray, n: int = 2) -> np.ndarray:
+    """(K,) -> (K, n) with column c scaled by 2**c (exercises per-lane
+    independence of every scale field)."""
+    return a[:, None] * (2.0 ** np.arange(n))[None, :]
+
+
+def test_golden_q2_k_superblock():
+    # block b: scale code b, min code 15-b, super-scales d=0.5, dmin=0.25;
+    # in-block pattern [0,1,2,3]*4 pins bmax/bmin to the exact grid ends
+    d, dmin = 0.5, 0.25
+    sc_q = np.arange(16)                        # 0..15 (15 pins d)
+    m_q = 15 - np.arange(16)                    # 15..0 (15 pins dmin)
+    qpat = np.tile(np.arange(4), 4)             # (16,) values 0..3
+    q = np.where(sc_q[:, None] > 0, qpat[None, :], 0)       # (16 blk, 16)
+    w1 = (d * sc_q)[:, None] * q - (dmin * m_q)[:, None]    # (16, 16)
+    w = _col_dup(w1.reshape(256))
+    t = Q.quantize("q2_k", jnp.asarray(w, jnp.float32))
+    assert t.variant == "q2_k" and t.shape == (256, 2)
+    np.testing.assert_array_equal(
+        np.asarray(t.data["scales"]),
+        np.repeat((sc_q | (m_q << 4)).astype(np.uint8)[:, None], 2, axis=1))
+    np.testing.assert_array_equal(np.asarray(t.data["d"], np.float32),
+                                  [[d, 2 * d]])
+    np.testing.assert_array_equal(np.asarray(t.data["dmin"], np.float32),
+                                  [[dmin, 2 * dmin]])
+    qkn = np.repeat(q.reshape(256)[:, None], 2, axis=1).astype(np.uint8)
+    np.testing.assert_array_equal(np.asarray(t.data["qs"]),
+                                  _slab_pack_ref(qkn, 2, 256))
+    np.testing.assert_array_equal(np.asarray(Q.dequantize(t)), w)  # exact
+
+
+def test_golden_q3_k_superblock():
+    # block b: 6-bit scale code 2b+1 (31 pins d=0.25); q in [-4,3] with -4
+    # present so amax/4 recovers the block scale exactly
+    d = 0.25
+    sc_q = 2 * np.arange(16) + 1                # 1..31 odd
+    qpat = np.tile(np.arange(-4, 4), 2)         # (16,) includes -4
+    w1 = (d * sc_q)[:, None] * qpat[None, :]    # (16, 16)
+    w = _col_dup(w1.reshape(256))
+    t = Q.quantize("q3_k", jnp.asarray(w, jnp.float32))
+    np.testing.assert_array_equal(
+        np.asarray(t.data["scales"]),
+        np.repeat((sc_q + 32).astype(np.uint8)[:, None], 2, axis=1))
+    np.testing.assert_array_equal(np.asarray(t.data["d"], np.float32),
+                                  [[d, 2 * d]])
+    stored = np.repeat((qpat + 4).astype(np.uint8)[None, :]
+                       .repeat(16, 0).reshape(256)[:, None], 2, axis=1)
+    np.testing.assert_array_equal(np.asarray(t.data["qs"]),
+                                  _slab_pack_ref(stored & 3, 2, 256))
+    np.testing.assert_array_equal(np.asarray(t.data["hmask"]),
+                                  _slab_pack_ref(stored >> 2, 1, 256))
+    np.testing.assert_array_equal(np.asarray(Q.dequantize(t)), w)
+
+
+def test_golden_q6_k_superblock_beyond_paper():
+    # block b: int8 scale code 127-8b (127 pins d=0.125); q in [-32,31]
+    # with -32 present so amax/32 recovers the block scale exactly
+    d = 0.125
+    sc_q = 127 - 8 * np.arange(16)              # 127..7, all > 0
+    qpat = np.array([-32, -16, -8, -4, -2, -1, 0, 1,
+                     2, 4, 8, 16, 24, 30, 31, -31])
+    w1 = (d * sc_q)[:, None] * qpat[None, :]
+    w = _col_dup(w1.reshape(256))
+    t = Q.quantize("q6_k", jnp.asarray(w, jnp.float32))
+    np.testing.assert_array_equal(
+        np.asarray(t.data["scales"]),
+        np.repeat(sc_q.astype(np.int8)[:, None], 2, axis=1))
+    np.testing.assert_array_equal(np.asarray(t.data["d"], np.float32),
+                                  [[d, 2 * d]])
+    stored = np.repeat((qpat + 32).astype(np.uint8)[None, :]
+                       .repeat(16, 0).reshape(256)[:, None], 2, axis=1)
+    np.testing.assert_array_equal(np.asarray(t.data["ql"]),
+                                  _slab_pack_ref(stored & 15, 4, 256))
+    np.testing.assert_array_equal(np.asarray(t.data["qh"]),
+                                  _slab_pack_ref(stored >> 4, 2, 256))
+    np.testing.assert_array_equal(np.asarray(Q.dequantize(t)), w)
+
+
+def test_golden_q8_0_block():
+    # one 32-block: d = 0.5 pinned by |q|=127; payload stores q verbatim
+    qpat = np.concatenate([[127, -127, 0, 1, -1], np.arange(-13, 14)])
+    assert qpat.shape == (32,)
+    w = _col_dup(0.5 * qpat)
+    t = Q.quantize("q8_0", jnp.asarray(w, jnp.float32))
+    assert t.variant == "q8_0"
+    np.testing.assert_array_equal(
+        np.asarray(t.data["qs"]),
+        np.repeat(qpat.astype(np.int8)[:, None], 2, axis=1))
+    np.testing.assert_array_equal(np.asarray(t.data["d"], np.float32),
+                                  [[0.5, 1.0]])
+    np.testing.assert_array_equal(np.asarray(Q.dequantize(t)), w)

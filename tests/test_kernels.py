@@ -1,16 +1,35 @@
 """Per-kernel validation: Pallas (interpret mode) vs pure-jnp oracle,
-swept over shapes, dtypes and variants."""
+swept over shapes, dtypes and variants -- plus a property-style parity
+suite over ALL registered formats x ragged shapes x compute dtypes, so a
+format added to ``core.formats.WEIGHT_VARIANTS`` later is covered with no
+test edits."""
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+from hypothesis import given, settings, strategies as st
 
+from repro.core import formats as F
 from repro.core import quantize as Q
 from repro.kernels import ops, ref
-from repro.kernels.bfp_matmul import bfp_matmul_pallas, vmem_bytes
+from repro.kernels.bfp_matmul import (_choose_block_k, bfp_matmul_pallas,
+                                      vmem_bytes)
 from repro.kernels.q8k_quant import q8k_quantize_pallas
 
-VARIANTS = ["q2_k", "q3_k", "q4_k", "q5_k", "q6_k", "q8_0"]
+VARIANTS = list(F.WEIGHT_VARIANTS)
+
+# per-variant parity tolerance (relative to |ref|.max()), by compute
+# dtype: the fused kernel and the oracle share the dequant formulas, so
+# f32-compute disagreement is pure accumulation-order noise; bf16 compute
+# adds rounding of x and w. A format registered later gets the default
+# unless it needs its own entry.
+_DEFAULT_RTOL = {"float32": 2e-5, "bfloat16": 2e-2}
+PARITY_RTOL = {v: dict(_DEFAULT_RTOL) for v in VARIANTS}
+PARITY_RTOL["q2_k"]["bfloat16"] = 3e-2      # coarsest grid, widest blocks
+
+
+def _parity_rtol(variant: str, compute: str) -> float:
+    return PARITY_RTOL.get(variant, _DEFAULT_RTOL)[compute]
 
 
 def _mk(key, M, K, N, dtype=jnp.float32):
@@ -109,6 +128,80 @@ def test_vmem_budget_fits():
     for v in VARIANTS:
         b = vmem_bytes(v, 128, 256, 512)
         assert b["total"] < 8 * 2**20, (v, b)
+
+
+@settings(max_examples=12, deadline=None)
+@given(variant=st.sampled_from(VARIANTS),
+       m=st.integers(1, 48), nsb=st.integers(1, 4),
+       n=st.integers(1, 260),
+       compute=st.sampled_from(["float32", "bfloat16"]),
+       seed=st.integers(0, 2**16))
+def test_property_pallas_matches_ref(variant, m, nsb, n, compute, seed):
+    """Every registered weight format, ragged (M, K, N), both compute
+    dtypes: fused Pallas kernel == dequant-matmul oracle within the
+    per-variant tolerance. Formats registered later are swept
+    automatically via F.WEIGHT_VARIANTS."""
+    K = 256 * nsb                       # super-block multiple fits ALL
+    x, w = _mk(seed, m, K, n)           # registered formats (q8_0 too)
+    t = Q.quantize(variant, w)
+    cd = jnp.dtype(compute)
+    o_ref = np.asarray(ref.matmul_ref(x, t))
+    o_pal = np.asarray(bfp_matmul_pallas(
+        x.astype(cd), t, interpret=True, compute_dtype=cd,
+        out_dtype=jnp.float32, block_m=16, block_n=128, block_k=256))
+    tol = _parity_rtol(variant, compute)
+    np.testing.assert_allclose(o_pal, o_ref, rtol=tol,
+                               atol=tol * (np.abs(o_ref).max() + 1e-9))
+
+
+@settings(max_examples=8, deadline=None)
+@given(m=st.integers(1, 20), nsb=st.integers(1, 3),
+       masked=st.integers(0, 1), seed=st.integers(0, 2**16))
+def test_property_q8k_batched_masked(m, nsb, masked, seed):
+    """Batched activation quantization over ragged row counts, with and
+    without the padded-row validity mask: kernel payloads match the jnp
+    reference, and masked rows are exactly zero everywhere."""
+    K = 256 * nsb
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(m, K)).astype(np.float32))
+    valid = jnp.asarray(rng.integers(0, 2, m).astype(bool)) if masked \
+        else None
+    qk = ops.q8k_quantize(x, valid=valid, impl="pallas", interpret=True)
+    qj = ops.q8k_quantize(x, valid=valid, impl="xla")
+    np.testing.assert_allclose(np.asarray(qk["d"]), np.asarray(qj["d"]),
+                               rtol=1e-6)
+    assert np.abs(np.asarray(qk["qs"], np.int32)
+                  - np.asarray(qj["qs"], np.int32)).max() <= 1
+    np.testing.assert_array_equal(
+        np.asarray(qk["qs"], np.int32).reshape(m, -1, 16).sum(-1),
+        np.asarray(qk["bsums"], np.int32))
+    if valid is not None:
+        dead = ~np.asarray(valid)
+        assert not np.asarray(qk["qs"])[dead].any()
+        assert not np.asarray(qk["d"])[dead].any()
+        assert not np.asarray(qk["bsums"])[dead].any()
+
+
+def test_choose_block_k_awkward_K_falls_back():
+    """Regression: K with no super-block-aligned divisor near the target
+    (e.g. 7*256 with target 384) must fall back to bk=sb, not raise."""
+    assert _choose_block_k(1792, 256, target=384) == 256
+    assert _choose_block_k(1792, 256, target=512) == 256
+    assert _choose_block_k(1024, 256, target=512) == 512
+    assert _choose_block_k(512, 256, target=512) == 512
+    assert _choose_block_k(96, 32, target=512) == 96      # K <= target
+    assert _choose_block_k(1792, 256, target=128) == 256  # target < sb
+    with pytest.raises(ValueError, match="super-block"):
+        _choose_block_k(100, 256)
+    # end to end: the awkward K actually runs and matches the oracle
+    x, w = _mk(11, 8, 1792, 64)
+    t = Q.quantize("q2_k", w)
+    o_pal = np.asarray(bfp_matmul_pallas(
+        x, t, interpret=True, compute_dtype=jnp.float32,
+        out_dtype=jnp.float32, block_m=8, block_n=64, block_k=384))
+    o_ref = np.asarray(ref.matmul_ref(x, t))
+    np.testing.assert_allclose(o_pal, o_ref, rtol=2e-5,
+                               atol=2e-5 * np.abs(o_ref).max())
 
 
 def test_pallas_under_jit():
