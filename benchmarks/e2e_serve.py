@@ -8,11 +8,16 @@ the quantity the on-device decode loop exists to minimize -- host syncs
 per request.  Prefill runs through the batched chunked admission pipeline
 (one fused prefill per group of up to ``max_slots`` requests).
 
+Speculative rows (queue depths 1 / 8 / 32, quantized params, prompt-lookup
+drafter over a repetitive prompt) report ``accept_rate`` and
+``spec_tok_per_s`` next to the plain columns; speculation-off rows are
+unchanged, so the regression gate still sees the plain decode path.
+
 Output: human CSV rows (``emit``) plus one machine-readable JSON blob
 (``--out`` to persist, default benchmarks/results/e2e_serve.json when run
 as a script) so future PRs can track the perf trajectory.  ``--smoke``
-runs the reduced sweep CI uses for regression gating (see
-scripts/check_bench_regression.py).
+runs the reduced sweep CI uses for regression gating -- including one
+spec-decode run (see scripts/check_bench_regression.py).
 """
 import argparse
 
@@ -30,18 +35,26 @@ PROMPT_LEN = 6            # paper workload
 NEW_TOKENS = 10
 QUEUE_DEPTHS = (1, 4, 8, 32)     # 4 = the seed benchmark's batch shape
 SMOKE_DEPTHS = (4, 8)            # CI regression sweep
+SPEC_DEPTHS = (1, 8, 32)         # speculative-decoding sweep
+SPEC_SMOKE_DEPTHS = (8,)         # CI spec smoke run
 MAX_SLOTS = 8
+DRAFT_K = 4
 
 
-def _bench_one(cfg, params, depth: int) -> dict:
+def _bench_one(cfg, params, depth: int, drafter: str = None) -> dict:
     slots = min(depth, MAX_SLOTS)
     eng = Engine(cfg, params, ServeConfig(
         max_new_tokens=NEW_TOKENS, max_slots=slots,
         decode_chunk=NEW_TOKENS, cache_len=32, prefill_bucket=8,
-        prefill_batch=slots))
+        prefill_batch=slots, drafter=drafter, draft_k=DRAFT_K))
     rng = np.random.default_rng(0)
-    prompts = [list(rng.integers(0, cfg.vocab_size, PROMPT_LEN))
-               for _ in range(depth)]
+    if drafter is None:
+        prompts = [list(rng.integers(0, cfg.vocab_size, PROMPT_LEN))
+                   for _ in range(depth)]
+    else:
+        # prompt-lookup's workload: repetitive prompts (cycled 2-grams)
+        prompts = [[int(a), int(b)] * (PROMPT_LEN // 2)
+                   for a, b in rng.integers(0, cfg.vocab_size, (depth, 2))]
     for _ in range(2):                         # compile + cache-donation warm
         eng.generate(prompts)
     stats = []
@@ -50,17 +63,24 @@ def _bench_one(cfg, params, depth: int) -> dict:
         assert all(len(o) == NEW_TOKENS for o in outs)
         stats.append(dict(eng.stats))
     s = sorted(stats, key=lambda d: d["decode_s"])[1]      # median run
-    return dict(queue_depth=depth, slots=slots,
-                tokens=int(s["tokens"]),
-                tok_per_s=round(s["tok_per_s"], 1),
-                prefill_tok_per_s=round(s["prefill_tok_per_s"], 1),
-                ttft_s=round(s["ttft_s"], 5),
-                prefill_s=round(s["prefill_s"], 4),
-                decode_s=round(s["decode_s"], 4),
-                host_syncs=int(s["host_syncs"]),
-                syncs_per_request=round(s["host_syncs"] / depth, 2),
-                prefill_groups=int(s["prefill_groups"]),
-                chunks=int(s["chunks"]))
+    rec = dict(queue_depth=depth, slots=slots,
+               tokens=int(s["tokens"]),
+               tok_per_s=round(s["tok_per_s"], 1),
+               prefill_tok_per_s=round(s["prefill_tok_per_s"], 1),
+               ttft_s=round(s["ttft_s"], 5),
+               prefill_s=round(s["prefill_s"], 4),
+               decode_s=round(s["decode_s"], 4),
+               host_syncs=int(s["host_syncs"]),
+               syncs_per_request=round(s["host_syncs"] / depth, 2),
+               prefill_groups=int(s["prefill_groups"]),
+               chunks=int(s["chunks"]))
+    if drafter is not None:
+        rec["drafter"] = drafter
+        rec["draft_k"] = DRAFT_K
+        rec["accept_rate"] = round(s["accept_rate"], 4)
+        rec["spec_tok_per_s"] = rec["tok_per_s"]
+        rec["spec_rounds"] = int(s["spec_rounds"])
+    return rec
 
 
 def run(out_path: str = None, smoke: bool = False) -> dict:
@@ -68,12 +88,15 @@ def run(out_path: str = None, smoke: bool = False) -> dict:
     params = T.init_params(cfg, jax.random.PRNGKey(0))
     qp, _ = quantize_params(params, get_policy("paper_llama_mix"))
     depths = SMOKE_DEPTHS if smoke else QUEUE_DEPTHS
+    spec_depths = SPEC_SMOKE_DEPTHS if smoke else SPEC_DEPTHS
 
     results = dict(
         benchmark="e2e_serve",
         arch="tinyllama-1.1b(reduced)",
         workload=dict(prompt_len=PROMPT_LEN, new_tokens=NEW_TOKENS,
-                      queue_depths=list(depths), max_slots=MAX_SLOTS,
+                      queue_depths=list(depths),
+                      spec_queue_depths=list(spec_depths),
+                      draft_k=DRAFT_K, max_slots=MAX_SLOTS,
                       smoke=smoke),
         runs=[],
     )
@@ -89,6 +112,16 @@ def run(out_path: str = None, smoke: bool = False) -> dict:
                  f"ttft_s={rec['ttft_s']} "
                  f"host_syncs={rec['host_syncs']} "
                  f"({rec['syncs_per_request']}/req)")
+    for depth in spec_depths:
+        rec = _bench_one(cfg, qp, depth, drafter="ngram")
+        rec["params"] = "fbfq_mixed_q2q3_spec_ngram"
+        results["runs"].append(rec)
+        emit(f"e2e_serve_spec_ngram_d{depth}",
+             rec["decode_s"] / max(rec["tokens"], 1) * 1e6,
+             f"spec_tok/s={rec['spec_tok_per_s']} "
+             f"accept_rate={rec['accept_rate']} "
+             f"rounds={rec['spec_rounds']} "
+             f"ttft_s={rec['ttft_s']}")
     emit_json(results, out_path)
     return results
 
@@ -102,7 +135,8 @@ if __name__ == "__main__":
                          "sweep can never clobber the baseline)")
     ap.add_argument("--smoke", action="store_true",
                     help="quick sweep (CI regression gate): depths "
-                         f"{SMOKE_DEPTHS} only")
+                         f"{SMOKE_DEPTHS} plus one spec run at depth "
+                         f"{SPEC_SMOKE_DEPTHS[0]}")
     args = ap.parse_args()
     out = args.out
     if out is None:

@@ -81,6 +81,7 @@ class QuantFormat:
 #   Q3_K : 2 + 1 + 8/16 + 16/256                = 3.5625  (gguf: 3.4375; we
 #           store the 6-bit block scales byte-aligned for lane-conflict-free
 #           access -- +0.125 b/w)
+#   Q4_0 : 4 + 16/32                            = 4.5     (gguf: 4.5, exact)
 #   Q4_K : 4 + 2*8/32 + 2*16/256                = 4.625   (gguf: 4.5)
 #   Q5_K : 5 + 2*8/32 + 2*16/256                = 5.625   (gguf: 5.5)
 #   Q6_K : 4 + 2 + 8/16 + 16/256                = 6.5625  (gguf: 6.5625, exact)
@@ -141,6 +142,16 @@ Q6_K = QuantFormat(
         ArraySpec("d", 256, "float16"),
     ))
 
+Q4_0 = QuantFormat(
+    # llama.cpp's classic 32-block symmetric 4-bit format: one fp16 scale
+    # per 32 values, d pinned by the abs-max element mapping to code 0
+    name="q4_0", bits_per_weight=4.5, bits_per_weight_gguf=4.5,
+    block=BLOCK32, super_block=BLOCK32,
+    arrays=(
+        ArraySpec("qs", 2, "uint8"),       # 2 x 4-bit per byte
+        ArraySpec("d", 32, "float16"),
+    ))
+
 Q8_0 = QuantFormat(
     # llama.cpp fallback for tensors whose K is not a multiple of 256
     name="q8_0", bits_per_weight=8.5, bits_per_weight_gguf=8.5,
@@ -162,13 +173,13 @@ Q8_K = QuantFormat(
     is_weight_format=False)
 
 FORMATS: Dict[str, QuantFormat] = {
-    f.name: f for f in (Q2_K, Q3_K, Q4_K, Q5_K, Q6_K, Q8_0, Q8_K)
+    f.name: f for f in (Q2_K, Q3_K, Q4_0, Q4_K, Q5_K, Q6_K, Q8_0, Q8_K)
 }
 
 # variants the paper's accelerator supports natively
 PAPER_VARIANTS = ("q2_k", "q3_k")
 # variants listed as the paper's future work, implemented here
-EXTENDED_VARIANTS = ("q4_k", "q5_k", "q6_k", "q8_0")
+EXTENDED_VARIANTS = ("q4_0", "q4_k", "q5_k", "q6_k", "q8_0")
 WEIGHT_VARIANTS = PAPER_VARIANTS + EXTENDED_VARIANTS
 
 

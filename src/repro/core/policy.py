@@ -113,7 +113,8 @@ EXTENDED_MIX = make_policy("extended_mix", (
 POLICIES = {
     p.name: p for p in (
         PAPER_LLAMA_MIX, PAPER_GPT2_MIX, DEFAULT_SERVE_MIX, EXTENDED_MIX,
-        pure("q2_k"), pure("q3_k"), pure("q4_k"), pure("q6_k"))
+        pure("q2_k"), pure("q3_k"), pure("q4_0"), pure("q4_k"),
+        pure("q6_k"))
 }
 
 

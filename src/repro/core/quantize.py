@@ -253,6 +253,35 @@ def dequantize_q6_k(t: QTensor, dtype=jnp.float32) -> jnp.ndarray:
 
 
 # ---------------------------------------------------------------------------
+# Q4_0 (classic 32-block symmetric 4-bit, fp16 scale)
+# ---------------------------------------------------------------------------
+
+def quantize_q4_0(w: jnp.ndarray) -> QTensor:
+    """llama.cpp sign convention: d = (signed abs-max element) / -8, so
+    the extreme value maps exactly to code 0 (-8 on the grid) and the
+    grid's asymmetric [-8, 7] range points toward it."""
+    K, N = w.shape
+    assert K % 32 == 0, K
+    x = w.astype(jnp.float32).reshape(K // 32, 32, N)
+    imax = jnp.argmax(jnp.abs(x), axis=1)                    # (K//32, N)
+    mval = jnp.take_along_axis(x, imax[:, None], axis=1)[:, 0]
+    d = mval / -8.0
+    inv = jnp.where(d != 0, 1.0 / jnp.where(d != 0, d, 1.0), 0.0)
+    q = jnp.clip(_nearest(x * inv[:, None]) + 8, 0, 15)
+    q = q.astype(jnp.uint8).reshape(K, N)
+    return QTensor("q4_0", (K, N), dict(
+        qs=slab_pack(q, 4, 32), d=d.astype(jnp.float16)))
+
+
+def dequantize_q4_0(t: QTensor, dtype=jnp.float32) -> jnp.ndarray:
+    K, N = t.shape
+    q = slab_unpack(t.data["qs"], 4, 32).astype(jnp.float32) - 8.0
+    d = t.data["d"].astype(jnp.float32)[:, None]             # (K//32, 1, N)
+    w = d * q.reshape(K // 32, 32, N)
+    return w.reshape(K, N).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
 # Q8_0 (fallback for K % 256 != 0; blocks of 32, fp16 scale)
 # ---------------------------------------------------------------------------
 
@@ -307,12 +336,15 @@ def dequantize_q8_k(qx: Dict[str, jnp.ndarray], dtype=jnp.float32) -> jnp.ndarra
 # ---------------------------------------------------------------------------
 
 _QUANTIZE = {
-    "q2_k": quantize_q2_k, "q3_k": quantize_q3_k, "q4_k": quantize_q4_k,
-    "q5_k": quantize_q5_k, "q6_k": quantize_q6_k, "q8_0": quantize_q8_0,
+    "q2_k": quantize_q2_k, "q3_k": quantize_q3_k, "q4_0": quantize_q4_0,
+    "q4_k": quantize_q4_k, "q5_k": quantize_q5_k, "q6_k": quantize_q6_k,
+    "q8_0": quantize_q8_0,
 }
 _DEQUANTIZE = {
-    "q2_k": dequantize_q2_k, "q3_k": dequantize_q3_k, "q4_k": dequantize_q4_k,
-    "q5_k": dequantize_q5_k, "q6_k": dequantize_q6_k, "q8_0": dequantize_q8_0,
+    "q2_k": dequantize_q2_k, "q3_k": dequantize_q3_k,
+    "q4_0": dequantize_q4_0, "q4_k": dequantize_q4_k,
+    "q5_k": dequantize_q5_k, "q6_k": dequantize_q6_k,
+    "q8_0": dequantize_q8_0,
 }
 
 

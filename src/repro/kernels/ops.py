@@ -1,4 +1,7 @@
-"""Public fused BFP-matmul entry points (jit-friendly).
+"""Public fused BFP-matmul entry points (jit-friendly), plus the
+ring-buffer gather/restore primitives the serving engine's speculative
+decode uses to snapshot and rewind KV-cache rows (``ring_gather`` /
+``ring_restore``).
 
 ``impl`` selects the datapath:
   * "pallas" -- the fused Pallas TPU kernel (HBM traffic stays packed).
@@ -58,6 +61,45 @@ def bfp_matmul(x: jnp.ndarray, t: QTensor, *, impl: str = "auto",
     else:
         raise ValueError(f"unknown impl {impl!r}")
     return out.reshape(lead + (t.shape[1],))
+
+
+def ring_gather(arr: jnp.ndarray, slots: jnp.ndarray, *,
+                ring_axis: int) -> jnp.ndarray:
+    """Gather ring-buffer rows: snapshot ``slots`` (B, S) of a per-slot ring.
+
+    ``arr`` carries the batch dimension at ``ring_axis - 1`` and the ring
+    (cache position) dimension at ``ring_axis`` -- e.g. a KV ring
+    (L, B, T, KH, Dh) with ring_axis=2, or a position ring (B, T) with
+    ring_axis=1. Returns ``arr`` with the ring axis replaced by S: the
+    pre-write contents of the rows a speculative draft block is about to
+    overwrite (the paper-side analogue is a scratch accumulator the DSBP
+    can discard without a writeback)."""
+    B, S = slots.shape
+    idx = slots.reshape((1,) * (ring_axis - 1) + (B, S)
+                        + (1,) * (arr.ndim - ring_axis - 1))
+    return jnp.take_along_axis(arr, idx, axis=ring_axis)
+
+
+def ring_restore(arr: jnp.ndarray, snap: jnp.ndarray, slots: jnp.ndarray,
+                 keep, *, ring_axis: int) -> jnp.ndarray:
+    """Cache position rewind: un-write rejected speculative entries.
+
+    Scatters snapshot column ``j`` (taken by ``ring_gather`` from the same
+    ``slots``) back into the ring for every ``j >= keep[b]``; columns
+    ``j < keep[b]`` keep their freshly written (accepted) values. ``keep``
+    is traced, so one compiled program serves every per-slot acceptance
+    count. Rows steered out of range are dropped, mirroring the masked
+    scatter convention of the prefill pipeline."""
+    B, S = slots.shape
+    T = arr.shape[ring_axis]
+    j = jnp.arange(S, dtype=slots.dtype)[None, :]
+    sel = jnp.where(j >= keep[:, None], slots, T)        # T = drop (kept)
+    bidx = jnp.arange(B)[:, None]
+    if ring_axis == 1:
+        return arr.at[bidx, sel].set(snap, mode="drop")
+    if ring_axis == 2:
+        return arr.at[:, bidx, sel].set(snap, mode="drop")
+    raise ValueError(f"unsupported ring_axis {ring_axis}")
 
 
 def q8k_quantize(x: jnp.ndarray, *, valid: jnp.ndarray = None,

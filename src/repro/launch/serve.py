@@ -48,6 +48,23 @@ def main() -> None:
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--stream", action="store_true",
                     help="print tokens as they are emitted")
+    ap.add_argument("--drafter", default=None,
+                    choices=("ngram", "self"),
+                    help="enable speculative decoding with this drafter "
+                         "(greedy output stays bit-identical to plain "
+                         "decode)")
+    ap.add_argument("--draft-k", type=int, default=4,
+                    help="drafted tokens per verify round")
+    ap.add_argument("--draft-layers", type=int, default=2,
+                    help="self-drafter: how many leading target-model "
+                         "layers draft (same quantized weights)")
+    ap.add_argument("--draft-ngram", type=int, default=2,
+                    help="ngram drafter: match gram length")
+    ap.add_argument("--draft-verify", default="scan",
+                    choices=("scan", "batched"),
+                    help="verify datapath: 'scan' is bit-exact vs plain "
+                         "decode, 'batched' scores the whole draft block "
+                         "in one masked forward")
     args = ap.parse_args()
 
     cfg = get_arch(args.arch, reduced=args.reduced)
@@ -71,12 +88,18 @@ def main() -> None:
               f" {counts}; packed {sizes['packed']/2**20:.1f} MiB + residual "
               f"{sizes['unpacked']/2**20:.1f} MiB")
 
+    decode_chunk = args.chunk or args.tokens
+    if args.drafter is not None:
+        decode_chunk = max(decode_chunk, args.draft_k + 1)
     engine = Engine(cfg, qp, ServeConfig(
         max_new_tokens=args.tokens, temperature=args.temperature,
         eos_id=args.eos_id, cache_len=args.cache_len, seed=args.seed,
-        max_slots=args.slots, decode_chunk=args.chunk or args.tokens,
+        max_slots=args.slots, decode_chunk=decode_chunk,
         prefill_batch=args.prefill_batch, prefill_chunk=args.prefill_chunk,
-        prefill_bucket=args.prefill_bucket))
+        prefill_bucket=args.prefill_bucket,
+        drafter=args.drafter, draft_k=args.draft_k,
+        draft_layers=args.draft_layers, draft_ngram=args.draft_ngram,
+        draft_verify=args.draft_verify))
 
     on_token = None
     if args.stream:
@@ -90,6 +113,11 @@ def main() -> None:
     for rid in ids[:4]:
         print(f"req {rid}: {results[rid]}")
     s = engine.stats
+    spec = ""
+    if args.drafter is not None:
+        spec = (f", spec accept {s['accept_rate']:.0%} "
+                f"({s['draft_accepted']:.0f}/{s['draft_tokens']:.0f} "
+                f"drafts over {s['spec_rounds']:.0f} rounds)")
     print(f"prefill {s['prefill_s']:.3f}s "
           f"({s['prefill_tok_per_s']:.1f} tok/s, "
           f"{s['prefill_groups']:.0f} fused groups, "
@@ -97,7 +125,7 @@ def main() -> None:
           f"decode {s['decode_s']:.3f}s, "
           f"{s['tok_per_s']:.1f} tok/s ({s['tokens']} tokens, "
           f"{s['host_syncs']} host syncs / {s['requests']} requests, "
-          f"{s['chunks']} fused chunks)")
+          f"{s['chunks']} fused chunks{spec})")
 
 
 if __name__ == "__main__":

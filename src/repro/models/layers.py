@@ -238,6 +238,60 @@ def prefill_attention(q, k_cache, v_cache, slot_pos, k_new, v_new,
                            q_positions=positions, kv_positions=kv_pos)
 
 
+def verify_attention(q, k_cache, v_cache, slot_pos, k_new, v_new,
+                     positions, valid, *, window=None, scale=None,
+                     softcap=None):
+    """Draft-block verify attention (speculative decoding): BIT-identical
+    to running ``decode_attention`` once per token.
+
+    ``prefill_attention`` would be semantically correct here, but it sums
+    the block's own keys at the END of the concatenated KV axis, while
+    plain decode sums each new key in-place at its ring slot -- a
+    different f32 accumulation order, i.e. logits that differ by an ulp
+    and can flip a greedy argmax on a near-tie. Greedy speculative decode
+    promises *bit-identical* output to plain decode, so verify replays
+    decode's exact dataflow instead: scan the block's columns, write each
+    valid column's K/V into the ring carry at ``position % T``, then run
+    the very same ``decode_attention`` program on the updated ring. Every
+    column sees the ring laid out exactly as plain decode would have laid
+    it out at that step (accepted drafts resident at their slots, not
+    appended), column shapes match decode's (B, 1, H, D), and the
+    summation order is identical -- so the scores are too.
+
+    q: (B, S, H, D); k_new/v_new: (B, S, KH, D) at ring dtype semantics
+    (caller pre-rounds / pre-dequantizes exactly like the decode write
+    path); positions (B, S) per-row absolute; valid (B, S) marks columns
+    that run (col 0 only for a plain decode step riding the program).
+    Invalid columns leave the ring untouched and their outputs are
+    garbage the caller must ignore. Requires S <= T (distinct slots).
+    Returns (B, S, H, D)."""
+    B, S, H, D = q.shape
+    T = k_cache.shape[1]
+    bidx = jnp.arange(B)
+
+    def step(carry, xs):
+        kc, vc, sp = carry
+        qj, kj, vj, pj, okj = xs            # (B,H,D) (B,KH,D) ... (B,) (B,)
+        slot = pj % T
+        kw = jnp.where(okj[:, None, None], kj.astype(kc.dtype),
+                       kc[bidx, slot])
+        vw = jnp.where(okj[:, None, None], vj.astype(vc.dtype),
+                       vc[bidx, slot])
+        pw = jnp.where(okj, pj, sp[bidx, slot])
+        kc = kc.at[bidx, slot].set(kw)
+        vc = vc.at[bidx, slot].set(vw)
+        sp = sp.at[bidx, slot].set(pw)
+        o = decode_attention(qj[:, None], kc, vc, sp, pj, window=window,
+                             scale=scale, softcap=softcap)
+        return (kc, vc, sp), o[:, 0]
+
+    _, outs = jax.lax.scan(
+        step, (k_cache, v_cache, slot_pos),
+        (jnp.moveaxis(q, 1, 0), jnp.moveaxis(k_new, 1, 0),
+         jnp.moveaxis(v_new, 1, 0), positions.T, valid.T))
+    return jnp.moveaxis(outs, 0, 1)
+
+
 def decode_attention(q, k_cache, v_cache, slot_pos, q_pos, *,
                      window=None, scale=None, softcap=None):
     """Single-step decode. q: (B,1,H,D); caches: (B,T,KH,D);

@@ -23,6 +23,7 @@ import jax.numpy as jnp
 from repro.configs.base import ModelConfig
 from repro.core.quantize import QTensor, dequantize
 from repro.distributed import sharding as SH
+from repro.kernels import ops as kops
 from repro.models import layers as L
 from repro.models import mamba2 as M2
 from repro.models import moe as MOE
@@ -645,17 +646,69 @@ def prefill_chunk(params, cfg: ModelConfig, cache: Dict[str, Any], *,
     need logits for some rows/offsets should gather from the hidden states
     and apply ``lm_logits`` there.
     """
+    B, C = tokens.shape
+    positions = jnp.broadcast_to(
+        start + jnp.arange(C, dtype=jnp.int32)[None], (B, C))
+    valid = positions < lengths[:, None]
+    return _masked_chunk(params, cfg, cache, tokens, positions, valid,
+                         L.prefill_attention, interpret)
+
+
+def verify_chunk(params, cfg: ModelConfig, cache: Dict[str, Any], *,
+                 tokens, positions, valid, interpret: bool = False):
+    """Score a per-slot block of tokens against the decode cache in ONE
+    batched forward (the speculative-decoding verify pass).
+
+    Same masked program shape as ``prefill_chunk`` but ``positions``
+    (B, C) is explicit and per-row: slot b's block starts at its own
+    absolute position (its draft block), so a continuous batch can verify
+    k drafted tokens per speculating slot while plain slots run a 1-column
+    decode step through the same program. ``valid`` (B, C) masks the
+    columns that really run; invalid columns never write the KV ring and
+    never win attention. Writes for positions that later turn out to be
+    rejected drafts are un-done by ``cache_ring_rewind``."""
+    return _masked_chunk(params, cfg, cache, tokens, positions, valid,
+                         L.verify_attention, interpret)
+
+
+def verify_scan(params, cfg: ModelConfig, cache: Dict[str, Any], *,
+                tokens, positions, valid, interpret: bool = False):
+    """Bit-exact verify: scan ``decode_step`` over the block's columns.
+
+    Same signature/semantics as ``verify_chunk`` but returns per-column
+    LOGITS (B, S, V) directly and guarantees each column's numbers are
+    BIT-identical to plain decode's: every column runs the very same
+    (B,)-shaped decode_step graph plain decode runs, so XLA makes the
+    same fusion/rounding choices. The batched ``verify_chunk`` scores the
+    whole block in one masked forward -- higher arithmetic intensity, but
+    a differently-shaped program whose logits can differ from decode's by
+    a float ulp and flip a greedy argmax on a near-tie. Scan mode is what
+    backs the engine's greedy-parity guarantee; batched mode is the
+    throughput path. Both stay inside one jitted program per chunk."""
+    def body(c, xs):
+        tk, po, ok = xs
+        logits, c = decode_step(params, cfg, c, tokens=tk, position=po,
+                                live=ok, interpret=interpret)
+        return c, logits
+
+    cache, lgs = jax.lax.scan(body, cache,
+                              (tokens.T, positions.T, valid.T))
+    return jnp.moveaxis(lgs, 0, 1), cache
+
+
+def _masked_chunk(params, cfg: ModelConfig, cache, tokens, positions,
+                  valid, attn_fn, interpret):
+    """Shared body of prefill_chunk / verify_chunk: one (B, C) masked
+    chunk forward against the ring, writing valid columns at
+    ``positions % T``."""
     if cfg.family not in ("dense", "vlm", "audio", "moe", "gpt2"):
         raise NotImplementedError(
-            f"prefill_chunk is KV-cache-only; family {cfg.family!r} "
-            "prefills at exact length via forward_seq")
+            f"chunked prefill/verify is KV-cache-only; family "
+            f"{cfg.family!r} prefills at exact length via forward_seq")
     impl = cfg.kernel_impl
     B, C = tokens.shape
     T = cache["k"].shape[2]
     assert C <= T, (C, T)
-    positions = jnp.broadcast_to(
-        start + jnp.arange(C, dtype=jnp.int32)[None], (B, C))
-    valid = positions < lengths[:, None]
     h = _embed(params, cfg, tokens=tokens, positions=positions)
 
     cos_sin = None
@@ -701,10 +754,10 @@ def prefill_chunk(params, cfg: ModelConfig, cache: Dict[str, Any], *,
             kc_eff, vc_eff = kc, vc
             k_chunk = k.astype(kc.dtype)            # ring-dtype rounding,
             v_chunk = v.astype(vc.dtype)            # same reason as above
-        o = L.prefill_attention(q, kc_eff, vc_eff, old_pos, k_chunk,
-                                v_chunk, positions, valid,
-                                window=cfg.sliding_window,
-                                softcap=cfg.attn_logit_softcap)
+        o = attn_fn(q, kc_eff, vc_eff, old_pos, k_chunk,
+                    v_chunk, positions, valid,
+                    window=cfg.sliding_window,
+                    softcap=cfg.attn_logit_softcap)
         if quant:
             kall = upd(kall, kc.at[bidx, slot_w].set(kq, mode="drop"))
             vall = upd(vall, vc.at[bidx, slot_w].set(vq, mode="drop"))
@@ -913,3 +966,37 @@ def cache_set_slot(cache: Dict[str, Any], slot_cache: Dict[str, Any],
     recurrent-family exact-length prefill path and external callers)."""
     return cache_set_slots(cache, slot_cache,
                            jnp.asarray(index, jnp.int32)[None])
+
+
+def _ring_axis(key: str) -> int:
+    """Axis of the ring (cache position) dimension per cache entry: the
+    position ring ``pos`` is (B, T); every KV payload stacks layers first
+    (L, B, T, ...)."""
+    return 1 if key == "pos" else 2
+
+
+def cache_ring_snapshot(cache: Dict[str, Any],
+                        slots: jnp.ndarray) -> Dict[str, Any]:
+    """Snapshot ring rows ``slots`` (B, S) of every ring-indexed cache
+    entry (k/v, int8 scales, pos) before a speculative verify pass writes
+    them. Recurrent entries (conv/state) have no ring and are excluded --
+    speculation is a KV-cache-family feature (a dense recurrent state
+    cannot be rolled back by re-pointing positions)."""
+    return {k: kops.ring_gather(v, slots, ring_axis=_ring_axis(k))
+            for k, v in cache.items() if k not in ("conv", "state")}
+
+
+def cache_ring_rewind(cache: Dict[str, Any], snapshot: Dict[str, Any],
+                      slots: jnp.ndarray, keep) -> Dict[str, Any]:
+    """Un-write rejected speculative entries: restore snapshot column j
+    into ring row ``slots[b, j]`` for every j >= keep[b] (columns below
+    ``keep`` hold accepted tokens and stay). ``keep`` (B,) is traced, so
+    one compiled program serves every acceptance pattern. Exact for ring
+    wrap too: a rejected draft that overwrote a still-in-window entry gets
+    that entry back, so sliding-window decode after a rollback is
+    bit-identical to never having speculated."""
+    new = dict(cache)
+    for k, snap in snapshot.items():
+        new[k] = kops.ring_restore(cache[k], snap, slots, keep,
+                                   ring_axis=_ring_axis(k))
+    return new

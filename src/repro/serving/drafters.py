@@ -1,0 +1,173 @@
+"""Pluggable draft-token proposers for speculative decoding.
+
+Speculative decoding attacks the decode wall the F-BFQ paper measures
+tokens/second against: decode is inherently serial (one token per
+MatMul pass), but the quantized verify path has idle batch bandwidth --
+scoring k drafted tokens in one masked forward costs barely more than
+scoring one. A ``Drafter`` proposes those k tokens; the engine verifies
+them against the target model and accepts the longest correct prefix
+(greedy: bit-identical to plain decode; temperature: rejection
+sampling). Neither drafter here needs a second checkpoint:
+
+* ``ngram``  -- prompt-lookup drafting: match the sequence's most recent
+  n-gram against its own history (prompt + generated tokens) on device
+  and propose the continuation of the latest earlier occurrence.
+  Zero model cost per proposal; shines on repetitive/extractive text.
+* ``self``   -- truncated-layer self-drafting: run the first
+  ``draft_layers`` layers of the SAME model (same slab-packed quantized
+  weights -- the stacked QTensor payloads slice per layer like any
+  array), with an ephemeral draft KV cache re-carved from the main
+  cache's leading layers each round, then the shared final norm + LM
+  head. The draft cache is discarded after proposing, so rejected draft
+  state never needs unwinding.
+
+Both drafters are pure JAX on the device-resident state the engine
+threads through its jitted decode loop -- proposing never costs a host
+sync. Host-side state (admission fills) lives in plain numpy and is
+uploaded with the rest of the chunk carry.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+
+
+class NGramDrafter:
+    """Prompt-lookup drafter: device-side n-gram match over a per-slot
+    rolling history ring of the last ``draft_hist`` tokens."""
+
+    name = "ngram"
+    uses_history = True
+
+    def __init__(self, cfg: ModelConfig, scfg):
+        self.k = scfg.draft_k
+        self.n = scfg.draft_ngram
+        self.H = scfg.draft_hist
+        if self.H < self.n + 1:
+            raise ValueError(
+                f"draft_hist ({self.H}) must exceed draft_ngram ({self.n})")
+
+    # -- host-side state ----------------------------------------------------
+    def init_state_np(self, B: int) -> Dict[str, np.ndarray]:
+        return dict(hist=np.full((B, self.H), -1, np.int32),
+                    hpos=np.full((B, self.H), -1, np.int32),
+                    hcnt=np.zeros((B,), np.int32))
+
+    def admit_np(self, state: Dict[str, np.ndarray], slot: int,
+                 tokens) -> None:
+        """Fill a freshly admitted slot's history with prompt + first
+        token (in place; admission is already a host sync point)."""
+        H = self.H
+        toks = np.asarray(tokens, np.int32)
+        n = len(toks)
+        state["hist"][slot] = -1
+        state["hpos"][slot] = -1
+        pos = np.arange(max(0, n - H), n)
+        state["hist"][slot, pos % H] = toks[pos]
+        state["hpos"][slot, pos % H] = pos
+        state["hcnt"][slot] = n
+
+    # -- device-side propose/update (called inside the jitted loop) ---------
+    def propose(self, params, cfg, cache, state, tok, pos,
+                act) -> Tuple[jnp.ndarray, Any]:
+        """Latest earlier occurrence of the trailing n-gram; propose its
+        continuation. No match (or history shorter than n): fall back to
+        repeating the last token -- cheap, and verify fixes everything."""
+        hist, hpos, hcnt = state["hist"], state["hpos"], state["hcnt"]
+        B, H = hist.shape
+        n, k = self.n, self.k
+        # trailing query gram: absolute positions hcnt-n .. hcnt-1
+        qpos = hcnt[:, None] - n + jnp.arange(n, dtype=jnp.int32)[None]
+        qtok = jnp.take_along_axis(hist, qpos % H, 1)           # (B, n)
+        # candidate gram ends at every ring slot's absolute position
+        m = (hpos >= 0) & (hpos <= hcnt[:, None] - 2)           # strictly
+        for j in range(n):                                      # earlier
+            off = n - 1 - j
+            cpos = hpos - off
+            ctok = jnp.take_along_axis(hist, cpos % H, 1)
+            cchk = jnp.take_along_axis(hpos, cpos % H, 1)
+            m = m & (cchk == cpos) & (ctok == qtok[:, j:j + 1])
+        m = m & (hcnt[:, None] >= n)                            # query valid
+        best = jnp.max(jnp.where(m, hpos, -1), axis=1)          # (B,)
+        prop_pos = best[:, None] + 1 + jnp.arange(k, dtype=jnp.int32)[None]
+        ptok = jnp.take_along_axis(hist, prop_pos % H, 1)
+        ok = (best[:, None] >= 0) & (
+            jnp.take_along_axis(hpos, prop_pos % H, 1) == prop_pos)
+        return jnp.where(ok, ptok, tok[:, None]), state
+
+    def update(self, state, emit, e) -> Any:
+        """Append each slot's e accepted tokens (emit[:, :e]) to its
+        history ring -- a masked scatter, all on device."""
+        hist, hpos, hcnt = state["hist"], state["hpos"], state["hcnt"]
+        B, H = hist.shape
+        cols = jnp.arange(emit.shape[1], dtype=jnp.int32)[None]
+        wp = hcnt[:, None] + cols
+        sel = jnp.where(cols < e[:, None], wp % H, H)           # H = drop
+        bidx = jnp.arange(B)[:, None]
+        return dict(hist=hist.at[bidx, sel].set(emit, mode="drop"),
+                    hpos=hpos.at[bidx, sel].set(wp, mode="drop"),
+                    hcnt=hcnt + e)
+
+
+class SelfDrafter:
+    """Truncated-layer self-drafter: the first ``draft_layers`` of the
+    target model (sharing its packed weights), autoregressively greedy
+    for k steps over an ephemeral draft cache carved from the main
+    cache's leading layers."""
+
+    name = "self"
+    uses_history = False
+
+    def __init__(self, cfg: ModelConfig, scfg):
+        self.k = scfg.draft_k
+        self.dl = scfg.draft_layers
+        if not 1 <= self.dl <= cfg.n_layers:
+            raise ValueError(
+                f"draft_layers ({self.dl}) must be in [1, {cfg.n_layers}]")
+        self.cfg_draft = cfg.replace(n_layers=self.dl)
+
+    def init_state_np(self, B: int) -> Dict[str, np.ndarray]:
+        return {}
+
+    def admit_np(self, state, slot, tokens) -> None:
+        pass
+
+    def propose(self, params, cfg, cache, state, tok, pos,
+                act) -> Tuple[jnp.ndarray, Any]:
+        from repro.models import transformer as T
+        dl = self.dl
+        dparams = dict(params)
+        # stacked layer params (QTensor payloads included) slice per layer
+        dparams["layers"] = jax.tree.map(lambda a: a[:dl], params["layers"])
+        dcache = {k: (v if k == "pos" else v[:dl]) for k, v in cache.items()}
+        cur, p = tok, pos
+        outs = []
+        for _ in range(self.k):
+            logits, dcache = T.decode_step(dparams, self.cfg_draft, dcache,
+                                           tokens=cur, position=p, live=act)
+            cur = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+            p = p + 1
+            outs.append(cur)
+        # dcache (with the draft's own writes) is dropped here: the next
+        # round re-carves it from the verified main cache, so no rollback
+        return jnp.stack(outs, axis=1), state
+
+    def update(self, state, emit, e) -> Any:
+        return state
+
+
+DRAFTERS = {"ngram": NGramDrafter, "self": SelfDrafter}
+
+
+def make_drafter(name: str, cfg: ModelConfig, scfg):
+    try:
+        cls = DRAFTERS[name]
+    except KeyError:
+        raise ValueError(f"unknown drafter {name!r}; "
+                         f"known: {sorted(DRAFTERS)}") from None
+    return cls(cfg, scfg)

@@ -29,10 +29,26 @@ bottleneck is not the MatMul but host round-trips and under-filled batches
   (``decode_step(live=)``).
 * ``streaming``: each request may carry an ``on_token`` callback; tokens
   are delivered after every chunk (and the first token at admission).
+* ``speculative decoding``: with a ``Drafter`` configured (drafters.py:
+  n-gram prompt lookup, or a truncated-layer self-draft over the same
+  quantized weights), the decode chunk becomes draft -> verify -> accept
+  rounds: k drafted tokens are scored per slot in one fused verify pass,
+  the longest correct prefix is accepted (greedy) or rejection-sampled
+  (temperature), and the ring rows written for rejected drafts are
+  restored from a pre-verify snapshot (``cache_ring_rewind``). All of it
+  rides the jitted while_loop carry -- still ONE host sync per chunk --
+  and every decision is per-slot, so a continuous batch freely mixes
+  speculative and plain sequences (``submit(speculate=...)``).
+  ``draft_verify="scan"`` (default) replays decode_step per column and
+  makes greedy speculative output BIT-identical to plain decode;
+  ``"batched"`` scores the block in one masked prefill-style forward
+  (throughput datapath, equal to within float rounding).
 
 ``generate_reference`` keeps the pre-rewrite host-driven loop (one jitted
 step per token, same math) for parity tests and as readable documentation
-of the device loop's semantics.
+of the device loop's semantics; ``generate_spec_reference`` does the same
+for the speculative path with the acceptance/rollback bookkeeping
+re-implemented in numpy (the rejection-sampling oracle).
 """
 from __future__ import annotations
 
@@ -47,6 +63,7 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.models import transformer as T
+from repro.serving.drafters import make_drafter
 
 # families whose decode state is a KV ring -> batched chunked prefill;
 # everything else (recurrent state) prefills at exact length per request
@@ -65,6 +82,14 @@ class ServeConfig:
     prefill_bucket: int = 16            # prompt pad granularity (attention)
     prefill_batch: int = 8              # max requests per prefill group
     prefill_chunk: int = 64             # tokens per prefill chunk
+    # speculative decoding (None = off; "ngram" | "self", drafters.py)
+    drafter: Optional[str] = None
+    draft_k: int = 4                    # drafted tokens per verify round
+    draft_layers: int = 2               # "self": target-model prefix depth
+    draft_ngram: int = 2                # "ngram": match gram length
+    draft_hist: int = 64                # "ngram": history ring length
+    draft_verify: str = "scan"          # "scan" (bit-exact vs plain decode)
+                                        # | "batched" (one masked forward)
 
 
 @dataclasses.dataclass
@@ -73,6 +98,7 @@ class Request:
     prompt: List[int]
     max_new_tokens: int
     on_token: Optional[Callable[[int, int], None]] = None
+    speculate: bool = False
     tokens: List[int] = dataclasses.field(default_factory=list)
     done: bool = False
     cancelled: bool = False
@@ -99,6 +125,38 @@ class Engine:
         # write a cache_len-long update into a window-long ring
         self._T = T.attn_cache_len(cfg, serve_cfg.cache_len)
         self._kv_family = cfg.family in _KV_FAMILIES
+        self._drafter = None
+        if serve_cfg.drafter is not None:
+            if not self._kv_family:
+                raise ValueError(
+                    f"speculative decoding needs a KV-ring family (got "
+                    f"{cfg.family!r}): a dense recurrent state cannot be "
+                    "rolled back when drafts are rejected")
+            if serve_cfg.draft_k < 1:
+                raise ValueError("draft_k must be >= 1")
+            if serve_cfg.draft_k + 1 > serve_cfg.decode_chunk:
+                raise ValueError(
+                    f"decode_chunk ({serve_cfg.decode_chunk}) must fit a "
+                    f"whole verify round (draft_k + 1 = "
+                    f"{serve_cfg.draft_k + 1}) or speculating slots can "
+                    "never emit")
+            if serve_cfg.draft_k + 1 > self._T:
+                raise ValueError(
+                    f"draft_k + 1 ({serve_cfg.draft_k + 1}) exceeds the KV "
+                    f"ring ({self._T}); draft positions must map to "
+                    "distinct ring rows")
+            if serve_cfg.draft_verify not in ("scan", "batched"):
+                raise ValueError(
+                    f"draft_verify must be 'scan' or 'batched', got "
+                    f"{serve_cfg.draft_verify!r}")
+            self._drafter = make_drafter(serve_cfg.drafter, cfg, serve_cfg)
+            self._spec_chunk = jax.jit(self._spec_chunk_impl,
+                                       donate_argnums=(1,))
+            self._verify = jax.jit(self._verify_impl)
+            self._propose_ref = jax.jit(
+                lambda params, cache, ds, tok, pos, act:
+                self._drafter.propose(params, self.cfg, cache, ds, tok,
+                                      pos, act))
         self._prefill = jax.jit(self._prefill_impl)
         # caches are donated so XLA aliases the ring buffers call-to-call
         self._admit_cache = jax.jit(self._admit_cache_impl,
@@ -233,6 +291,164 @@ class Engine:
             cond, body, st)
         return cache, out, tok, pos, live, n_gen, key
 
+    # -- speculative decode (draft -> verify -> accept -> rewind) ------------
+    def _verify_impl(self, params, cache, tokens, positions, valid):
+        """One verify pass over a (B, k+1) block -> (logits, cache).
+
+        ``draft_verify="scan"`` (default) replays decode_step per column
+        -- bit-identical numbers to plain decode, the basis of the greedy
+        parity guarantee. ``"batched"`` scores the block in one masked
+        prefill-style forward -- the throughput datapath, equal to within
+        float rounding (a greedy argmax can flip on a near-tie)."""
+        if self.scfg.draft_verify == "scan":
+            return T.verify_scan(params, self.cfg, cache, tokens=tokens,
+                                 positions=positions, valid=valid)
+        h, cache = T.verify_chunk(params, self.cfg, cache, tokens=tokens,
+                                  positions=positions, valid=valid)
+        return T.lm_logits(params, self.cfg, h), cache
+
+    def _accept_impl(self, logits, drafts, spec_eff, k_u, k_fin):
+        """Per-slot draft acceptance. logits (B, k+1, V) scored over
+        [cur_tok, d_1..d_k]; drafts (B, k); spec_eff (B,) marks slots that
+        actually speculated this round (others accept 0 drafts and their
+        "final" token is a plain col-0 sample/argmax).
+
+        Greedy: accept the longest prefix where d_j == argmax; final token
+        is the argmax after the last accepted draft (replacement on first
+        mismatch, bonus when all k accepted) -- exactly the token chain
+        plain greedy decode would emit, which is the parity guarantee.
+
+        Temperature: rejection sampling against the point-mass draft
+        distribution: accept d_j with prob p_j(d_j); on first rejection
+        sample from p with the rejected draft's mass removed
+        (renormalized); on full acceptance sample the bonus from p_k."""
+        B, S, V = logits.shape
+        k = S - 1
+        if self.scfg.temperature > 0:
+            lt = (logits / self.scfg.temperature).astype(jnp.float32)
+            p = jax.nn.softmax(lt[:, :k], axis=-1)          # (B, k, V)
+            pd = jnp.take_along_axis(p, drafts[:, :, None], 2)[..., 0]
+            u = jax.random.uniform(k_u, (B, k))
+            ok = (u < pd) & spec_eff[:, None]
+            acc = jnp.sum(jnp.cumprod(ok.astype(jnp.int32), 1), 1)
+            pl = jnp.take_along_axis(lt, acc[:, None, None], 1)[:, 0]
+            pcol = jax.nn.softmax(pl, axis=-1)              # (B, V)
+            dcol = jnp.take_along_axis(
+                drafts, jnp.clip(acc, 0, k - 1)[:, None], 1)[:, 0]
+            rejected = spec_eff & (acc < k)
+            onehot = jnp.arange(V)[None] == dcol[:, None]
+            resid = jnp.where(rejected[:, None] & onehot, 0.0, pcol)
+            lr = jnp.where(resid > 0, jnp.log(resid), -jnp.inf)
+            fin = jax.random.categorical(k_fin, lr).astype(jnp.int32)
+            # degenerate guard: p put (numerically) ALL mass on the draft
+            fin = jnp.where(jnp.any(resid > 0, -1), fin, dcol)
+            return acc, fin
+        g = jnp.argmax(logits, axis=-1).astype(jnp.int32)   # (B, S)
+        ok = (drafts == g[:, :k]) & spec_eff[:, None]
+        acc = jnp.sum(jnp.cumprod(ok.astype(jnp.int32), 1), 1)
+        fin = jnp.take_along_axis(g, acc[:, None], 1)[:, 0]
+        return acc, fin
+
+    def _spec_chunk_impl(self, params, cache, tok, pos, live, spec, n_gen,
+                         budget, key, dstate):
+        """Speculative decode chunk: verify rounds inside one device loop.
+
+        Each round drafts k tokens per speculating slot, snapshots the
+        ring rows the draft block will write, scores [cur, d_1..d_k] in
+        ONE masked verify forward, accepts a per-slot prefix, rewinds the
+        rejected writes, and scatters the accepted tokens into the
+        per-slot output at that slot's own cursor. Non-speculating live
+        slots ride the same program as 1-column plain decode steps, so a
+        continuous batch freely mixes speculative and plain sequences.
+        The host still sees ONE sync per chunk.
+
+        ``out`` rows are dense prefixes (-1 beyond each cursor); a slot
+        pauses (stays live, stops emitting) when a whole verify round no
+        longer fits its remaining chunk capacity."""
+        C = self.scfg.decode_chunk
+        k = self.scfg.draft_k
+        S = k + 1
+        B = tok.shape[0]
+        Tring = self._T
+        eos = self.scfg.eos_id
+        cols = jnp.arange(S, dtype=jnp.int32)[None]
+        bidx = jnp.arange(B)[:, None]
+        out0 = jnp.full((B, C), -1, jnp.int32)
+        zero = jnp.zeros((), jnp.int32)
+
+        def spec_now(pos_):
+            # full-attention archs must not let draft positions wrap the
+            # ring (overwritten rows are still needed); slots within k of
+            # the ring end fall back to plain steps for their last tokens
+            return (spec if self.cfg.sliding_window
+                    else spec & (pos_ + k < Tring))
+
+        def active(live_, nout_, pos_):
+            need = jnp.where(spec_now(pos_), S, 1)
+            return live_ & (nout_ + need <= C)
+
+        def cond(st):
+            _, _, pos_, live_, _, _, nout_, _, _, _, _, _ = st
+            return jnp.any(active(live_, nout_, pos_))
+
+        def body(st):
+            (cache_, tok_, pos_, live_, n_gen_, out_, nout_, key_, ds_,
+             dtot_, dacc_, rounds_) = st
+            act = active(live_, nout_, pos_)
+            spec_ok = spec_now(pos_)
+            spec_eff = act & spec_ok
+            key_, k_u, k_fin = jax.random.split(key_, 3)
+            drafts, ds_ = self._drafter.propose(
+                params, self.cfg, cache_, ds_, tok_, pos_, spec_eff)
+            x = jnp.concatenate([tok_[:, None], drafts], axis=1)   # (B,S)
+            positions = pos_[:, None] + cols
+            valid = act[:, None] & ((cols == 0) | spec_eff[:, None])
+            slots = positions % Tring
+            snap = T.cache_ring_snapshot(cache_, slots)
+            logits, cache_ = self._verify_impl(params, cache_, x,
+                                               positions, valid)
+            acc, fin = self._accept_impl(logits, drafts, spec_eff,
+                                         k_u, k_fin)
+            # emitted block: accepted drafts then the final token
+            draftsp = jnp.concatenate([drafts, drafts[:, -1:]], 1)
+            emit = jnp.where(cols < acc[:, None], draftsp, fin[:, None])
+            e = jnp.minimum(acc + 1, budget - n_gen_)
+            if eos is not None:
+                hit = (emit == eos) & (cols < e[:, None])
+                has = jnp.any(hit, axis=1)
+                first = jnp.argmax(hit, axis=1).astype(jnp.int32)
+                e = jnp.where(has, jnp.minimum(e, first + 1), e)
+            e = jnp.where(act, e, 0)
+            # per-slot scatter at each row's own cursor
+            osel = jnp.where(cols < e[:, None], nout_[:, None] + cols, C)
+            out_ = out_.at[bidx, osel].set(emit, mode="drop")
+            # un-write rejected draft entries (t0 + acc accepted ones stay)
+            keep = jnp.where(act, 1 + acc, 0)
+            cache_ = T.cache_ring_rewind(cache_, snap, slots, keep)
+            n_gen_ = n_gen_ + e
+            pos_ = pos_ + e
+            last = jnp.take_along_axis(
+                emit, jnp.clip(e - 1, 0, S - 1)[:, None], 1)[:, 0]
+            tok_ = jnp.where(e > 0, last, tok_)
+            died = n_gen_ >= budget
+            if eos is not None:
+                died = died | jnp.any((emit == eos) & (cols < e[:, None]),
+                                      axis=1)
+            live_ = jnp.where(act, live_ & ~died, live_)
+            nout_ = nout_ + e
+            ds_ = self._drafter.update(ds_, emit, e)
+            dtot_ = dtot_ + jnp.sum(jnp.where(spec_eff, k, 0))
+            dacc_ = dacc_ + jnp.sum(jnp.where(spec_eff, acc, 0))
+            return (cache_, tok_, pos_, live_, n_gen_, out_, nout_, key_,
+                    ds_, dtot_, dacc_, rounds_ + 1)
+
+        st = (cache, tok, pos, live, n_gen, out0,
+              jnp.zeros((B,), jnp.int32), key, dstate, zero, zero, zero)
+        (cache, tok, pos, live, n_gen, out, _, key, dstate, dtot, dacc,
+         rounds) = jax.lax.while_loop(cond, body, st)
+        return (cache, out, tok, pos, live, n_gen, key, dstate, dtot,
+                dacc, rounds)
+
     def _ref_step_impl(self, params, cache, tok, pos, live, key):
         """One host-driven decode step (reference path)."""
         logits, cache = T.decode_step(params, self.cfg, cache, tokens=tok,
@@ -245,6 +461,7 @@ class Engine:
         B = self._B
         self._queue: collections.deque = collections.deque()
         self._slots: List[Optional[Request]] = [None] * B
+        self._admitting: List[Request] = []
         self._results: Dict[int, Request] = {}
         self._next_id = 0
         self._key = jax.random.PRNGKey(self.scfg.seed)
@@ -253,6 +470,9 @@ class Engine:
         self._live = np.zeros(B, bool)
         self._ngen = np.zeros(B, np.int32)
         self._budget = np.full(B, self.scfg.max_new_tokens, np.int32)
+        self._spec = np.zeros(B, bool)
+        self._dstate: Dict[str, np.ndarray] = (
+            self._drafter.init_state_np(B) if self._drafter else {})
         self._run_t0: Optional[float] = None
         self.stats = self._fresh_stats(0)
 
@@ -261,19 +481,28 @@ class Engine:
         return dict(prefill_s=0.0, decode_s=0.0, tokens=0, tok_per_s=0.0,
                     host_syncs=0, admissions=0, chunks=0,
                     requests=requests, prefill_groups=0, prefill_tokens=0,
-                    prefill_tok_per_s=0.0, ttft_s=0.0)
+                    prefill_tok_per_s=0.0, ttft_s=0.0,
+                    draft_tokens=0, draft_accepted=0, accept_rate=0.0,
+                    spec_rounds=0)
 
     def submit(self, prompt: List[int],
                max_new_tokens: Optional[int] = None,
-               on_token: Optional[Callable[[int, int], None]] = None) -> int:
+               on_token: Optional[Callable[[int, int], None]] = None,
+               speculate: Optional[bool] = None) -> int:
         """Queue a request; returns its id. Tokens stream via ``on_token``
-        (called as on_token(request_id, token)) if given."""
+        (called as on_token(request_id, token)) if given. ``speculate``
+        toggles speculative decoding per request (default: on whenever the
+        engine has a drafter configured)."""
         if not prompt:
             raise ValueError("empty prompt")
         budget = (self.scfg.max_new_tokens if max_new_tokens is None
                   else max_new_tokens)
         if budget < 1:
             raise ValueError(f"max_new_tokens must be >= 1, got {budget}")
+        if speculate is None:
+            speculate = self._drafter is not None
+        elif speculate and self._drafter is None:
+            raise ValueError("speculate=True needs ServeConfig.drafter")
         if (self.cfg.family != "ssm" and not self.cfg.sliding_window
                 and len(prompt) + budget > self._T):
             # full-attention archs must not wrap the KV ring (that would
@@ -283,7 +512,8 @@ class Engine:
                 f"prompt ({len(prompt)}) + max_new_tokens ({budget}) "
                 f"exceeds cache_len {self._T}; raise ServeConfig.cache_len")
         req = Request(id=self._next_id, prompt=list(prompt),
-                      max_new_tokens=budget, on_token=on_token)
+                      max_new_tokens=budget, on_token=on_token,
+                      speculate=speculate)
         self._next_id += 1
         self._queue.append(req)
         return req.id
@@ -304,6 +534,15 @@ class Engine:
             if req is not None and req.id == request_id:
                 self._live[i] = False
                 self._slots[i] = None
+                req.done = req.cancelled = True
+                self._results[req.id] = req
+                return True
+        # mid-admission: a group-mate's first-token callback cancels a
+        # request whose prefill already ran but whose slot is not bound
+        # yet -- it never binds and never emits (same observable result as
+        # cancelling it while queued)
+        for req in self._admitting:
+            if req.id == request_id and not req.done:
                 req.done = req.cancelled = True
                 self._results[req.id] = req
                 return True
@@ -330,6 +569,12 @@ class Engine:
         self._live[slot] = True
         self._ngen[slot] = 1
         self._budget[slot] = req.max_new_tokens
+        self._spec[slot] = req.speculate
+        if self._drafter is not None:
+            # drafter history covers prompt + first token for EVERY slot
+            # (cheap, and per-request speculation toggles stay honest)
+            self._drafter.admit_np(self._dstate, slot,
+                                   req.prompt + [first_tok])
         req._emit(first_tok)
         if self._slots[slot] is not req:        # cancelled during emit
             return True
@@ -412,13 +657,20 @@ class Engine:
         self.stats["admissions"] += G
         self.stats["prefill_tokens"] += sum(lens)
         self.stats["prefill_s"] += time.perf_counter() - t0
+        self._admitting = reqs
         for i, req in enumerate(reqs):
+            if req.cancelled:
+                # cancelled from a group-mate's on_token callback after
+                # its prefill but before its slot bound: never binds,
+                # never emits (its scattered cache row is inert garbage)
+                continue
             if bound[i] is None:
                 self._note_first_token(req)
                 req._emit(int(firsts[i]))
                 self._finish(req)
             else:
                 self._start_slot(bound[i], req, int(firsts[i]), lens[i])
+        self._admitting = []
 
     # -- admission: exact-length single-request prefill (recurrent) ----------
     def _admit_request(self, slot: int, req: Request) -> None:
@@ -455,21 +707,41 @@ class Engine:
 
     def _run_chunk(self) -> None:
         t0 = time.perf_counter()
-        self._cache, out_d, tok_d, pos_d, live_d, ngen_d, self._key = \
-            self._decode_chunk(self.params, self._cache,
-                               jnp.asarray(self._tok),
-                               jnp.asarray(self._pos),
-                               jnp.asarray(self._live),
-                               jnp.asarray(self._ngen),
-                               jnp.asarray(self._budget), self._key)
-        out, tok, pos, live, ngen = jax.device_get(
-            (out_d, tok_d, pos_d, live_d, ngen_d))  # THE sync of this chunk
+        if self._drafter is not None:
+            dstate_d = {k: jnp.asarray(v) for k, v in self._dstate.items()}
+            (self._cache, out_d, tok_d, pos_d, live_d, ngen_d, self._key,
+             ds_d, dtot_d, dacc_d, rounds_d) = self._spec_chunk(
+                self.params, self._cache, jnp.asarray(self._tok),
+                jnp.asarray(self._pos), jnp.asarray(self._live),
+                jnp.asarray(self._spec), jnp.asarray(self._ngen),
+                jnp.asarray(self._budget), self._key, dstate_d)
+            out, tok, pos, live, ngen, ds, dtot, dacc, rounds = \
+                jax.device_get((out_d, tok_d, pos_d, live_d, ngen_d, ds_d,
+                                dtot_d, dacc_d, rounds_d))  # THE sync
+            self._dstate = {k: np.array(v) for k, v in ds.items()}
+            self.stats["draft_tokens"] += int(dtot)
+            self.stats["draft_accepted"] += int(dacc)
+            self.stats["spec_rounds"] += int(rounds)
+        else:
+            self._cache, out_d, tok_d, pos_d, live_d, ngen_d, self._key = \
+                self._decode_chunk(self.params, self._cache,
+                                   jnp.asarray(self._tok),
+                                   jnp.asarray(self._pos),
+                                   jnp.asarray(self._live),
+                                   jnp.asarray(self._ngen),
+                                   jnp.asarray(self._budget), self._key)
+            out, tok, pos, live, ngen = jax.device_get(
+                (out_d, tok_d, pos_d, live_d, ngen_d))  # THE chunk sync
         # device_get hands back read-only buffers; admission mutates these
         self._tok, self._pos = np.array(tok), np.array(pos)
         self._live, self._ngen = np.array(live), np.array(ngen)
         self.stats["host_syncs"] += 1
         self.stats["chunks"] += 1
         self.stats["decode_s"] += time.perf_counter() - t0
+        self._emit_chunk(out)
+
+    def _emit_chunk(self, out: np.ndarray) -> None:
+        """Stream each slot's dense token prefix; free finished slots."""
         for i, req in enumerate(self._slots):
             if req is None:
                 continue
@@ -491,6 +763,9 @@ class Engine:
         ttfts = [r.ttft_s for r in self._results.values()
                  if r.ttft_s is not None]
         self.stats["ttft_s"] = sum(ttfts) / len(ttfts) if ttfts else 0.0
+        self.stats["accept_rate"] = (
+            self.stats["draft_accepted"] / self.stats["draft_tokens"]
+            if self.stats["draft_tokens"] else 0.0)
 
     def run(self) -> Dict[int, List[int]]:
         """Drive batched admission + fused decode chunks until queue and
@@ -563,6 +838,141 @@ class Engine:
                     self._live[i] = False
                     self._finish(req)
                     self._slots[i] = None
+        self.stats["decode_s"] += time.perf_counter() - t0
+        res = {rid: req.tokens for rid, req in self._results.items()}
+        self._finalize_stats(res)
+        self._results = {}
+        self._run_t0 = None
+        return [res[i] for i in ids]
+
+    def generate_spec_reference(self,
+                                prompts: List[List[int]]) -> List[List[int]]:
+        """Host-driven speculative oracle: one verify ROUND per host trip,
+        with acceptance, rejection sampling, truncation and rollback
+        bookkeeping re-implemented in numpy against the raw logits. Same
+        key-split discipline as the fused loop, so the two must agree
+        token-for-token -- this is the validation target for temperature
+        mode, where plain decode is no longer a token-level oracle.
+        O(tokens) syncs; a parity tool, not a serving path."""
+        if self._drafter is None:
+            raise RuntimeError("generate_spec_reference needs a drafter")
+        if len(prompts) > self._B:
+            raise ValueError("reference path has no queue; "
+                             f"need <= {self._B} prompts")
+        if self._queue:
+            raise RuntimeError(
+                f"{len(self._queue)} submitted request(s) pending; call "
+                "run() to drain them before generate_spec_reference()")
+        self._reset()
+        ids = [self.submit(list(p)) for p in prompts]
+        self.stats["requests"] = len(ids)
+        self._run_t0 = time.perf_counter()
+        self._admit_pending()
+        C = self.scfg.decode_chunk
+        k = self.scfg.draft_k
+        S = k + 1
+        B = self._B
+        eos = self.scfg.eos_id
+        temp = self.scfg.temperature
+        cols = np.arange(S)[None]
+        t0 = time.perf_counter()
+        while self._live.any():
+            nout = np.zeros(B, np.int32)            # fresh chunk capacity
+            progressed = False
+            while True:
+                spec_ok = (self._spec if self.cfg.sliding_window
+                           else self._spec & (self._pos + k < self._T))
+                need = np.where(spec_ok, S, 1)
+                act = self._live & (nout + need <= C)
+                if not act.any():
+                    break
+                progressed = True
+                spec_eff = act & spec_ok
+                self._key, k_u, k_fin = jax.random.split(self._key, 3)
+                ds_d = {kk: jnp.asarray(v)
+                        for kk, v in self._dstate.items()}
+                drafts_d, ds_d = self._propose_ref(
+                    self.params, self._cache, ds_d,
+                    jnp.asarray(self._tok), jnp.asarray(self._pos),
+                    jnp.asarray(spec_eff))
+                drafts = np.asarray(jax.device_get(drafts_d))
+                x = np.concatenate([self._tok[:, None], drafts], axis=1)
+                positions = self._pos[:, None] + cols
+                valid = act[:, None] & ((cols == 0) | spec_eff[:, None])
+                slots_d = jnp.asarray(positions % self._T)
+                snap = T.cache_ring_snapshot(self._cache, slots_d)
+                logits_d, self._cache = self._verify(
+                    self.params, self._cache, jnp.asarray(x),
+                    jnp.asarray(positions), jnp.asarray(valid))
+                logits = np.asarray(jax.device_get(logits_d), np.float32)
+                self.stats["host_syncs"] += 1
+                # -- host acceptance (independent numpy re-implementation)
+                if temp > 0:
+                    lt = logits / temp
+                    pm = np.exp(lt[:, :k]
+                                - lt[:, :k].max(-1, keepdims=True))
+                    pm = pm / pm.sum(-1, keepdims=True)
+                    pd = np.take_along_axis(
+                        pm, drafts[:, :, None], 2)[..., 0]
+                    u = np.asarray(jax.random.uniform(k_u, (B, k)))
+                    ok = (u < pd) & spec_eff[:, None]
+                    acc = np.cumprod(ok, axis=1).sum(axis=1).astype(np.int32)
+                    pl = np.take_along_axis(lt, acc[:, None, None], 1)[:, 0]
+                    pcol = np.exp(pl - pl.max(-1, keepdims=True))
+                    pcol = pcol / pcol.sum(-1, keepdims=True)
+                    dcol = np.take_along_axis(
+                        drafts, np.clip(acc, 0, k - 1)[:, None], 1)[:, 0]
+                    rejected = spec_eff & (acc < k)
+                    resid = pcol.copy()
+                    resid[np.arange(B), dcol] = np.where(
+                        rejected, 0.0, resid[np.arange(B), dcol])
+                    with np.errstate(divide="ignore"):
+                        lr = np.where(resid > 0, np.log(resid), -np.inf)
+                    fin = np.asarray(jax.random.categorical(
+                        k_fin, jnp.asarray(lr))).astype(np.int32)
+                    fin = np.where((resid > 0).any(-1), fin, dcol)
+                else:
+                    g = logits.argmax(-1).astype(np.int32)
+                    ok = (drafts == g[:, :k]) & spec_eff[:, None]
+                    acc = np.cumprod(ok, axis=1).sum(axis=1).astype(np.int32)
+                    fin = np.take_along_axis(g, acc[:, None], 1)[:, 0]
+                draftsp = np.concatenate([drafts, drafts[:, -1:]], axis=1)
+                emit = np.where(cols < acc[:, None], draftsp, fin[:, None])
+                e = np.minimum(acc + 1, self._budget - self._ngen)
+                if eos is not None:
+                    hit = (emit == eos) & (cols < e[:, None])
+                    has = hit.any(1)
+                    first = hit.argmax(1).astype(np.int32)
+                    e = np.where(has, np.minimum(e, first + 1), e)
+                e = np.where(act, e, 0)
+                keep = np.where(act, 1 + acc, 0)
+                self._cache = T.cache_ring_rewind(
+                    self._cache, snap, slots_d, jnp.asarray(keep))
+                ds_d = self._drafter.update(ds_d, jnp.asarray(emit),
+                                            jnp.asarray(e))
+                self._dstate = {kk: np.array(v) for kk, v in
+                                jax.device_get(ds_d).items()}
+                self.stats["draft_tokens"] += int(spec_eff.sum()) * k
+                self.stats["draft_accepted"] += int(acc[spec_eff].sum())
+                self.stats["spec_rounds"] += 1
+                for i, req in enumerate(self._slots):
+                    if req is None or e[i] == 0:
+                        continue
+                    for t in emit[i, :e[i]].tolist():
+                        req._emit(int(t))
+                    self._ngen[i] += int(e[i])
+                    self._pos[i] += int(e[i])
+                    self._tok[i] = int(emit[i, e[i] - 1])
+                    died = self._ngen[i] >= self._budget[i]
+                    if eos is not None:
+                        died = died or eos in emit[i, :e[i]].tolist()
+                    if died:
+                        self._live[i] = False
+                        self._finish(req)
+                        self._slots[i] = None
+                nout = nout + e
+            if not progressed:
+                break
         self.stats["decode_s"] += time.perf_counter() - t0
         res = {rid: req.tokens for rid, req in self._results.items()}
         self._finalize_stats(res)

@@ -3,9 +3,12 @@
 Loaded by conftest.py ONLY when the real package is missing (offline /
 hermetic environments); CI installs the real one via
 ``pip install -e .[test]``.  Implements just the surface the test suite
-uses -- ``given``/``settings`` and the ``floats``/``integers``/
-``sampled_from`` strategies -- with examples drawn from an RNG seeded by
+uses -- ``given``/``settings`` (any kwargs accepted and ignored beyond
+``max_examples``, in either decorator order), the ``floats``/
+``integers``/``booleans``/``sampled_from``/``just``/``lists``/``tuples``
+strategies and ``assume`` -- with examples drawn from an RNG seeded by
 the test name, so runs are reproducible (no shrinking, no database).
+Suites written against real hypothesis must collect and run unchanged.
 """
 import types
 import zlib
@@ -30,20 +33,70 @@ def integers(min_value, max_value, **_):
                                                   max_value + 1)))
 
 
+def booleans(**_):
+    return _Strategy(lambda rng: bool(rng.integers(0, 2)))
+
+
 def sampled_from(options):
     opts = list(options)
     return _Strategy(lambda rng: opts[int(rng.integers(len(opts)))])
 
 
+def just(value):
+    return _Strategy(lambda rng: value)
+
+
+def lists(elements, min_size=0, max_size=10, **_):
+    def draw(rng):
+        n = int(rng.integers(min_size, max_size + 1))
+        return [elements.sample(rng) for _ in range(n)]
+    return _Strategy(draw)
+
+
+def tuples(*strats):
+    return _Strategy(lambda rng: tuple(s.sample(rng) for s in strats))
+
+
 strategies = types.ModuleType("hypothesis.strategies")
-strategies.floats = floats
-strategies.integers = integers
-strategies.sampled_from = sampled_from
+for _name in ("floats", "integers", "booleans", "sampled_from", "just",
+              "lists", "tuples"):
+    setattr(strategies, _name, globals()[_name])
+
+
+class _Unsatisfied(Exception):
+    """Raised by assume(False); the example is skipped and redrawn."""
+
+
+def assume(condition):
+    if not condition:
+        raise _Unsatisfied()
+    return True
+
+
+class HealthCheck:
+    """Attribute sink: ``suppress_health_check=[HealthCheck.x]`` for any
+    x must parse under the stub."""
+    def __getattr__(self, name):                 # pragma: no cover
+        return name
+
+
+HealthCheck = HealthCheck()
 
 
 def settings(max_examples=10, deadline=None, **_):
+    """Accept and ignore every real-hypothesis kwarg (deadline,
+    suppress_health_check, derandomize, ...); only max_examples matters.
+    Works above or below @given: the attribute is copied through."""
     def deco(fn):
         fn._stub_max_examples = max_examples
+        return fn
+    return deco
+
+
+def example(*_a, **_k):
+    """@example pins explicit cases in real hypothesis; the stub ignores
+    them (the seeded RNG sweep stands in)."""
+    def deco(fn):
         return fn
     return deco
 
@@ -68,6 +121,9 @@ def given(**strats):
         runner.__name__ = fn.__name__
         runner.__doc__ = fn.__doc__
         runner.__module__ = fn.__module__
+        # @settings below @given (applied to fn first) must still count
+        if hasattr(fn, "_stub_max_examples"):
+            runner._stub_max_examples = fn._stub_max_examples
         return runner
     return deco
 
@@ -75,6 +131,17 @@ def given(**strats):
 def _drive(runner, fn, strats, fixture_kwargs):
     n = getattr(runner, "_stub_max_examples", 10)
     rng = np.random.default_rng(zlib.adler32(fn.__name__.encode()))
-    for _ in range(n):
-        fn(**fixture_kwargs,
-           **{k: s.sample(rng) for k, s in strats.items()})
+    done = tries = 0
+    while done < n and tries < 50 * n:           # assume() may discard
+        tries += 1
+        try:
+            fn(**fixture_kwargs,
+               **{k: s.sample(rng) for k, s in strats.items()})
+        except _Unsatisfied:
+            continue
+        done += 1
+    if done == 0:
+        # mirror real hypothesis's Unsatisfiable: a test whose assume()
+        # rejects every draw must not silently pass with zero examples
+        raise AssertionError(
+            f"{fn.__name__}: assume() discarded all {tries} examples")

@@ -1,13 +1,22 @@
-"""Engine fuzz: randomized submit/cancel/EOS schedules with a parity
-oracle.
+"""Engine fuzz: randomized submit/cancel/EOS/speculation schedules with a
+parity oracle.
 
 Two engines over the same weights -- one admitting in batched prefill
 groups, one strictly one-request-at-a-time -- are driven through identical
-randomized schedules (waves of ragged submits, cancels of queued requests,
-EOS on or off, greedy or temperature sampling). Every wave must produce
-token-for-token identical results, including across batched-admission
-boundaries (queues deeper than the slot count force mid-stream admission
-into freed slots).
+randomized schedules (waves of ragged submits incl. prompts long enough
+to force multi-chunk prefill, cancels of queued requests, per-request
+speculation toggles, EOS on or off, greedy or temperature sampling).
+Every wave must produce token-for-token identical results, including
+across batched-admission boundaries (queues deeper than the slot count
+force mid-stream admission into freed slots).
+
+A second fuzz drives IN-FLIGHT cancels: on_token callbacks cancel random
+victims at random trigger points, so cancels land while victims are
+queued, mid-admission (between a long prompt's prefill chunks and its
+slot binding), or running. Greedy only -- greedy tokens are slot-layout
+independent, so batched and sequential admission must still agree even
+though a mid-admission cancel perturbs the two schedulers' slot
+assignments differently.
 
 A third check pins the batched engine to ``generate_reference`` (the
 host-driven per-token loop), closing the triangle: batched == sequential
@@ -26,6 +35,7 @@ from repro.models import transformer as T
 from repro.serving.engine import Engine, ServeConfig
 
 MAX_NEW = 6
+MAX_PROMPT = 22          # > prefill_chunk: long prompts stream in chunks
 
 
 @pytest.fixture(scope="module")
@@ -34,7 +44,9 @@ def pairs():
 
     Built once: reusing engine instances across fuzz examples keeps every
     example on already-compiled programs, and both members of a pair see
-    identical schedules so their PRNG streams stay in lockstep."""
+    identical schedules so their PRNG streams stay in lockstep. The
+    greedy and EOS pairs carry an ngram drafter so schedules can toggle
+    speculation per request."""
     cfg = get_arch("tinyllama-1.1b", reduced=True)
     params = T.init_params(cfg, jax.random.PRNGKey(0))
 
@@ -45,13 +57,14 @@ def pairs():
         return (Engine(cfg, params, ServeConfig(prefill_batch=3, **base)),
                 Engine(cfg, params, ServeConfig(prefill_batch=1, **base)))
 
+    spec = dict(drafter="ngram", draft_k=3)
     # an EOS id that greedy decode actually emits (probe run), so EOS
     # schedules really cut sequences short mid-stream
     probe, _ = mk()
     eos = probe.generate([[7, 3, 11]])[0][1]
     return dict(cfg=cfg,
-                greedy=mk(),
-                eos=mk(eos_id=eos),
+                greedy=mk(**spec),
+                eos=mk(eos_id=eos, **spec),
                 temp=mk(temperature=0.9, seed=11))
 
 
@@ -61,16 +74,20 @@ def pairs():
 def test_fuzz_schedule_parity(pairs, seed, mode):
     cfg = pairs["cfg"]
     batched, seq = pairs[mode]
+    has_drafter = batched.scfg.drafter is not None
     rng = np.random.default_rng(seed)
     for _wave in range(int(rng.integers(1, 3))):
         n = int(rng.integers(1, 9))
         ids_b, ids_s = [], []
         for _ in range(n):
             prompt = rng.integers(0, cfg.vocab_size,
-                                  int(rng.integers(1, 13))).tolist()
+                                  int(rng.integers(1, MAX_PROMPT))).tolist()
             budget = int(rng.integers(1, MAX_NEW + 1))
-            ids_b.append(batched.submit(prompt, max_new_tokens=budget))
-            ids_s.append(seq.submit(prompt, max_new_tokens=budget))
+            spec = bool(rng.integers(0, 2)) if has_drafter else None
+            ids_b.append(batched.submit(prompt, max_new_tokens=budget,
+                                        speculate=spec))
+            ids_s.append(seq.submit(prompt, max_new_tokens=budget,
+                                    speculate=spec))
         # cancel a random subset while still queued (same ids on both
         # sides: submit order is identical, so id counters are too)
         for i in rng.permutation(n)[:int(rng.integers(0, n))]:
@@ -83,16 +100,107 @@ def test_fuzz_schedule_parity(pairs, seed, mode):
             assert len(res_b[rid]) <= MAX_NEW
 
 
+@settings(max_examples=5, deadline=None)
+@given(seed=st.integers(0, 2**20))
+def test_fuzz_inflight_cancels_parity(pairs, seed):
+    """Callback-driven cancels at random trigger points: victims may be
+    queued, between a long prompt's prefill chunks and slot binding
+    (mid-admission), or running with a partial stream. Greedy, so the
+    slot-layout perturbation a mid-admission cancel causes cannot change
+    any surviving request's tokens -- batched and sequential admission
+    must agree request-for-request (cancelled prefixes included)."""
+    cfg = pairs["cfg"]
+    batched, seq = pairs["greedy"]
+    rng = np.random.default_rng(seed)
+    n = int(rng.integers(3, 8))
+    prompts = [rng.integers(0, cfg.vocab_size,
+                            int(rng.integers(1, MAX_PROMPT))).tolist()
+               for _ in range(n)]
+    spec = [bool(rng.integers(0, 2)) for _ in range(n)]
+    # ONE canceller per wave: before any cancel both schedulers are in
+    # lockstep, so the cancel lands at an identical logical state; a
+    # mid-admission cancel may perturb the two engines' subsequent slot
+    # layouts, which greedy tokens don't observe -- but a SECOND cancel's
+    # within-chunk ordering could, so waves carry a single cancel
+    plans = {int(rng.integers(0, n)):
+             (int(rng.integers(0, n)),                  # victim index
+              int(rng.integers(1, MAX_NEW + 1)))}       # trigger count
+
+    def run(eng):
+        counts = {}
+        ids = []
+
+        def mk_cb(idx):
+            def cb(rid, tok):
+                c = counts[rid] = counts.get(rid, 0) + 1
+                victim, trig = plans.get(idx, (None, None))
+                if victim is not None and c == trig:
+                    eng.cancel(ids[victim])
+            return cb
+        for i, p in enumerate(prompts):
+            ids.append(eng.submit(p, on_token=mk_cb(i),
+                                  speculate=spec[i]))
+        res = eng.run()
+        return ids, res
+
+    ids_b, res_b = run(batched)
+    ids_s, res_s = run(seq)
+    assert [res_b[i] for i in ids_b] == [res_s[i] for i in ids_s]
+    assert set(res_b) == set(ids_b)
+    for rid in ids_b:
+        assert len(res_b[rid]) <= MAX_NEW
+    # both engines drain cleanly afterwards
+    assert batched.generate([[1, 2, 3]]) == seq.generate([[1, 2, 3]])
+
+
+def test_cancel_between_prefill_chunks_of_long_prompt(pairs):
+    """Deterministic pin of the mid-admission window: request A's
+    first-token callback cancels long-prompt request B. Sequentially B is
+    still queued; batched, B's multi-chunk prefill has already run inside
+    A's admission group but its slot is not bound yet -- both must report
+    cancel()==True, emit nothing for B, and leave everyone else
+    untouched."""
+    cfg = pairs["cfg"]
+    batched, seq = pairs["greedy"]
+    rng = np.random.default_rng(123)
+    long_prompt = rng.integers(0, cfg.vocab_size, 21).tolist()  # 3 chunks
+    short = rng.integers(0, cfg.vocab_size, 3).tolist()
+
+    def run(eng):
+        ids = {}
+        cancelled = {}
+        def cb(rid, tok):
+            if not cancelled:
+                cancelled[0] = eng.cancel(ids["b"])
+        ids["a"] = eng.submit(short, on_token=cb)
+        ids["b"] = eng.submit(long_prompt)
+        ids["c"] = eng.submit(short)
+        res = eng.run()
+        return ids, res, cancelled[0]
+
+    ids_b, res_b, ok_b = run(batched)
+    ids_s, res_s, ok_s = run(seq)
+    assert ok_b and ok_s
+    assert res_b[ids_b["b"]] == res_s[ids_s["b"]] == []
+    assert res_b[ids_b["a"]] == res_s[ids_s["a"]]
+    assert res_b[ids_b["c"]] == res_s[ids_s["c"]]
+    assert len(res_b[ids_b["a"]]) == MAX_NEW
+
+
 @settings(max_examples=4, deadline=None)
 @given(seed=st.integers(0, 2**20))
 def test_fuzz_parity_with_reference_loop(pairs, seed):
     """Batched engine vs the host-driven per-token reference on random
-    ragged batches (<= max_slots, the reference path has no queue)."""
+    ragged batches (<= max_slots, the reference path has no queue).
+    Speculation off for the wave: generate_reference is the PLAIN decode
+    oracle (greedy spec parity vs plain decode lives in
+    test_spec_decode.py)."""
     cfg = pairs["cfg"]
     batched, _ = pairs["greedy"]
     rng = np.random.default_rng(seed)
     prompts = [rng.integers(0, cfg.vocab_size,
                             int(rng.integers(1, 13))).tolist()
                for _ in range(int(rng.integers(1, 4)))]
-    assert batched.generate(prompts) == \
-        batched.generate_reference(prompts)
+    ids = [batched.submit(list(p), speculate=False) for p in prompts]
+    res = batched.run()
+    assert [res[i] for i in ids] == batched.generate_reference(prompts)

@@ -9,8 +9,9 @@ pack-and-store whose every payload byte we can predict by hand -- any
 layout drift (slab order, nibble packing, scale bias) fails loudly
 instead of hiding inside a tolerance.
 
-Covers the paper's native variants (Q2_K, Q3_K) and a beyond-paper one
-(Q6_K), plus Q8_0 and an independent re-implementation of the slab rule.
+Covers the paper's native variants (Q2_K, Q3_K), the headline 4-bit
+variants (Q4_0, Q4_K), a beyond-paper one (Q6_K), plus Q8_0 and an
+independent re-implementation of the slab rule.
 """
 import jax.numpy as jnp
 import numpy as np
@@ -124,6 +125,58 @@ def test_golden_q6_k_superblock_beyond_paper():
                                   _slab_pack_ref(stored & 15, 4, 256))
     np.testing.assert_array_equal(np.asarray(t.data["qh"]),
                                   _slab_pack_ref(stored >> 4, 2, 256))
+    np.testing.assert_array_equal(np.asarray(Q.dequantize(t)), w)
+
+
+def test_golden_q4_0_blocks():
+    # block b: d pinned by the signed abs-max element mapping to code 0
+    # (llama.cpp convention d = mval / -8): block 0 has a negative
+    # extreme (d = +0.5), block 1 a positive extreme (d = -0.25 -- the
+    # sign convention is part of the contract); in-block pattern covers
+    # every 4-bit code
+    qpat = np.tile(np.arange(16), 2)            # (32,) codes 0..15
+    d_blocks = np.array([0.5, -0.25])
+    w1 = (d_blocks[:, None] * (qpat[None, :] - 8.0)).reshape(64)
+    w = _col_dup(w1)
+    t = Q.quantize("q4_0", jnp.asarray(w, jnp.float32))
+    assert t.variant == "q4_0" and t.shape == (64, 2)
+    np.testing.assert_array_equal(
+        np.asarray(t.data["d"], np.float32),
+        np.stack([d_blocks, 2 * d_blocks], axis=1))
+    qkn = np.repeat(qpat[None].repeat(2, 0).reshape(64)[:, None].astype(
+        np.uint8), 2, axis=1)
+    np.testing.assert_array_equal(np.asarray(t.data["qs"]),
+                                  _slab_pack_ref(qkn, 4, 32))
+    np.testing.assert_array_equal(np.asarray(Q.dequantize(t)), w)  # exact
+
+
+def test_golden_q4_k_superblock():
+    # 8 blocks of 32: 6-bit scale code 63-8b (63 pins d = 0.25), 6-bit
+    # min code 8b+7 (63 pins dmin = 0.125); in-block pattern [0..15]*2
+    # pins bmax/bmin to the exact affine grid ends
+    d, dmin = 0.25, 0.125
+    sc_q = 63 - 8 * np.arange(8)                # 63..7, all > 0
+    m_q = 8 * np.arange(8) + 7                  # 7..63
+    qpat = np.tile(np.arange(16), 2)            # (32,) values 0..15
+    w1 = ((d * sc_q)[:, None] * qpat[None, :]
+          - (dmin * m_q)[:, None])              # (8, 32)
+    w = _col_dup(w1.reshape(256))
+    t = Q.quantize("q4_k", jnp.asarray(w, jnp.float32))
+    assert t.variant == "q4_k" and t.shape == (256, 2)
+    np.testing.assert_array_equal(
+        np.asarray(t.data["scales"]),
+        np.repeat(sc_q.astype(np.uint8)[:, None], 2, axis=1))
+    np.testing.assert_array_equal(
+        np.asarray(t.data["mins"]),
+        np.repeat(m_q.astype(np.uint8)[:, None], 2, axis=1))
+    np.testing.assert_array_equal(np.asarray(t.data["d"], np.float32),
+                                  [[d, 2 * d]])
+    np.testing.assert_array_equal(np.asarray(t.data["dmin"], np.float32),
+                                  [[dmin, 2 * dmin]])
+    stored = np.repeat(qpat.astype(np.uint8)[None, :]
+                       .repeat(8, 0).reshape(256)[:, None], 2, axis=1)
+    np.testing.assert_array_equal(np.asarray(t.data["qs"]),
+                                  _slab_pack_ref(stored, 4, 256))
     np.testing.assert_array_equal(np.asarray(Q.dequantize(t)), w)
 
 

@@ -1,0 +1,321 @@
+"""Speculative decoding parity suite.
+
+THE oracle: greedy speculative decode must be TOKEN-IDENTICAL to plain
+(non-speculative) decode -- for every drafter, across attention families
+(causal, sliding-window/ring-wrap, int8-KV), through EOS landing inside
+an accepted draft block, mid-stream cancel(), ragged budgets, and mixed
+speculative/plain batches. Temperature mode has no plain-decode oracle
+(the key stream differs by construction), so it is validated against
+``generate_spec_reference`` -- a host-driven loop that re-implements the
+rejection-sampling/acceptance bookkeeping in numpy over the same raw
+logits and keys.
+
+The guarantee is backed by ``draft_verify="scan"`` (the default), which
+replays the exact decode_step program per draft column; the "batched"
+masked-forward datapath is checked for determinism and well-formedness
+(its logits are equal only to within float rounding, so a greedy argmax
+may flip on a near-tie -- documented, not promised)."""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs.base import get_arch
+from repro.models import transformer as T
+from repro.serving.engine import Engine, ServeConfig
+
+DRAFTERS = ("ngram", "self")
+
+
+def _prompts(cfg, n, lo=2, hi=12, seed=0, repetitive_first=True):
+    rng = np.random.default_rng(seed)
+    ps = [list(rng.integers(0, cfg.vocab_size, int(m)))
+          for m in rng.integers(lo, hi, n)]
+    if repetitive_first:
+        ps[0] = [7, 11] * 4          # prompt-lookup's home turf
+    return ps
+
+
+@pytest.fixture(scope="module")
+def causal():
+    cfg = get_arch("tinyllama-1.1b", reduced=True)
+    return cfg, T.init_params(cfg, jax.random.PRNGKey(0))
+
+
+@pytest.fixture(scope="module")
+def windowed():
+    cfg = get_arch("h2o-danube-1.8b", reduced=True)      # window = 64
+    return cfg, T.init_params(cfg, jax.random.PRNGKey(0))
+
+
+@pytest.fixture(scope="module")
+def int8kv():
+    cfg = get_arch("llama3.2-1b", reduced=True).replace(
+        kv_cache_quant=True, dtype="float32")
+    return cfg, T.init_params(cfg, jax.random.PRNGKey(0))
+
+
+def _mk(model, drafter=None, **kw):
+    cfg, params = model
+    base = dict(max_new_tokens=8, cache_len=64, decode_chunk=10,
+                max_slots=3, prefill_bucket=4, prefill_chunk=8,
+                drafter=drafter, draft_k=3)
+    base.update(kw)
+    return Engine(cfg, params, ServeConfig(**base))
+
+
+# ---------------------------------------------------------------------------
+# greedy parity: spec == plain, token for token
+# ---------------------------------------------------------------------------
+
+def test_greedy_parity_causal(causal):
+    prompts = _prompts(causal[0], 5)
+    ref = _mk(causal).generate(prompts)
+    for drafter in DRAFTERS:
+        eng = _mk(causal, drafter=drafter)
+        assert eng.generate(prompts) == ref, drafter
+        assert eng.stats["spec_rounds"] > 0
+        assert eng.stats["draft_tokens"] > 0
+
+
+def test_greedy_parity_sliding_window_ring_wrap(windowed):
+    """Drafts written (and rolled back) across the ring-wrap boundary:
+    prompts longer than the 64-slot ring force mid-block wrap, and the
+    rewind must restore the overwritten still-in-window entries."""
+    cfg, _ = windowed
+    rng = np.random.default_rng(3)
+    prompts = [list(rng.integers(0, cfg.vocab_size, 90)),   # 90 > ring 64
+               [3, 5] * 10]
+    ref = _mk(windowed, max_slots=2, prefill_chunk=16).generate(prompts)
+    for drafter in DRAFTERS:
+        eng = _mk(windowed, drafter=drafter, max_slots=2, prefill_chunk=16)
+        assert eng.generate(prompts) == ref, drafter
+
+
+def test_greedy_parity_int8_kv(int8kv):
+    prompts = _prompts(int8kv[0], 4, seed=2)
+    ref = _mk(int8kv, max_new_tokens=6).generate(prompts)
+    for drafter in DRAFTERS:
+        eng = _mk(int8kv, drafter=drafter, max_new_tokens=6,
+                  draft_layers=1)
+        assert eng.generate(prompts) == ref, drafter
+
+
+def test_greedy_parity_full_attention_ring_end(causal):
+    """Full-attention slots within draft_k of the ring end must fall back
+    to plain steps (draft positions may never wrap a full-attention
+    ring); output stays identical to plain decode right up to a
+    completely full ring (prompt + budget == cache_len)."""
+    cfg, _ = causal
+    rng = np.random.default_rng(4)
+    prompts = [list(rng.integers(0, cfg.vocab_size, 8))]   # 8 + 8 == 16
+    ref = _mk(causal, cache_len=16, max_slots=1).generate(prompts)
+    for drafter in DRAFTERS:
+        eng = _mk(causal, drafter=drafter, cache_len=16, max_slots=1)
+        assert eng.generate(prompts) == ref, drafter
+
+
+def test_greedy_parity_mixed_spec_and_plain_slots(causal):
+    """A continuous batch mixing speculate=True/False requests matches
+    plain decode for every request -- and toggling is per-request, not
+    per-engine."""
+    prompts = _prompts(causal[0], 6, seed=5)
+    plain = _mk(causal)
+    ref_ids = [plain.submit(p) for p in prompts]
+    ref = plain.run()
+    eng = _mk(causal, drafter="ngram")
+    ids = [eng.submit(p, speculate=(i % 2 == 0))
+           for i, p in enumerate(prompts)]
+    res = eng.run()
+    assert [res[i] for i in ids] == [ref[i] for i in ref_ids]
+
+
+def test_greedy_host_oracle_agrees(causal):
+    """The host-driven spec reference loop (numpy acceptance over the
+    same logits/keys) emits exactly what the fused device loop emits."""
+    prompts = _prompts(causal[0], 3, seed=6)
+    for drafter in DRAFTERS:
+        a = _mk(causal, drafter=drafter)
+        b = _mk(causal, drafter=drafter)
+        assert a.generate(prompts) == b.generate_spec_reference(prompts)
+
+
+# ---------------------------------------------------------------------------
+# EOS / budget / cancel inside draft blocks
+# ---------------------------------------------------------------------------
+
+def test_eos_inside_accepted_draft_block(causal):
+    """Pick an EOS id greedy decode emits mid-stream and use the
+    full-depth self-drafter (acceptance == 1.0), so the EOS token arrives
+    INSIDE an accepted block: emission must stop exactly at the EOS, the
+    slot must free, and everything must equal plain decode with the same
+    EOS."""
+    cfg, _ = causal
+    prompts = _prompts(cfg, 4, seed=7)
+    free = _mk(causal, max_new_tokens=12, decode_chunk=13).generate(prompts)
+    eos = free[0][2]                       # emitted early by greedy decode
+    ref_eng = _mk(causal, max_new_tokens=12, decode_chunk=13, eos_id=eos)
+    ref = ref_eng.generate(prompts)
+    assert any(len(o) < 12 for o in ref)               # EOS really fired
+    eng = _mk(causal, drafter="self", draft_layers=cfg.n_layers,
+              max_new_tokens=12, decode_chunk=13, eos_id=eos)
+    outs = eng.generate(prompts)
+    assert outs == ref
+    assert eng.stats["accept_rate"] > 0.9              # blocks were accepted
+    for o in outs:
+        if eos in o:
+            assert o.index(eos) == len(o) - 1          # EOS ends its seq
+
+
+def test_ragged_budgets_and_instant_finish(causal):
+    """Per-request budgets not aligned to draft_k truncate accepted
+    blocks exactly; budget-1 requests finish at admission and never
+    speculate."""
+    cfg, _ = causal
+    prompts = _prompts(cfg, 5, seed=8)
+    budgets = [1, 2, 5, 7, 8]
+    plain = _mk(causal)
+    rids = [plain.submit(p, max_new_tokens=b)
+            for p, b in zip(prompts, budgets)]
+    ref = plain.run()
+    eng = _mk(causal, drafter="ngram")
+    ids = [eng.submit(p, max_new_tokens=b)
+           for p, b in zip(prompts, budgets)]
+    res = eng.run()
+    assert [res[i] for i in ids] == [ref[i] for i in rids]
+    assert all(len(res[i]) == b for i, b in zip(ids, budgets))
+
+
+def test_midstream_cancel_during_speculation(causal):
+    """cancel() from an on_token callback mid-speculation keeps the
+    streamed prefix, frees the slot, and leaves the other sequences
+    bit-identical to plain decode."""
+    cfg, _ = causal
+    prompts = _prompts(cfg, 3, seed=9)
+
+    def run(drafter):
+        eng = _mk(causal, drafter=drafter, max_new_tokens=10,
+                  decode_chunk=11)
+        seen = []
+
+        def cb(rid, tok):
+            seen.append(tok)
+            if len(seen) == 3:
+                eng.cancel(rid)
+        a = eng.submit(prompts[0], on_token=cb)
+        b = eng.submit(prompts[1])
+        c = eng.submit(prompts[2])
+        res = eng.run()
+        return res[a], res[b], res[c]
+
+    ref = run(None)
+    for drafter in DRAFTERS:
+        got = run(drafter)
+        # the cancelled stream stops within one chunk of the callback;
+        # its kept prefix and both survivors must match plain decode
+        assert got[0] == ref[0][:len(got[0])] and len(got[0]) >= 3
+        assert got[1:] == ref[1:]
+        # drain cleanly afterwards
+    # cancel() of a still-queued request under speculation never runs
+    eng = _mk(causal, drafter="ngram", max_slots=1)
+    x = eng.submit(prompts[0])
+    y = eng.submit(prompts[1])
+    assert eng.cancel(y)
+    res = eng.run()
+    assert res[y] == [] and len(res[x]) == 8
+
+
+# ---------------------------------------------------------------------------
+# temperature: rejection sampling vs the host oracle
+# ---------------------------------------------------------------------------
+
+def test_temperature_matches_host_rejection_oracle(causal):
+    prompts = _prompts(causal[0], 3, seed=10)
+    for drafter in DRAFTERS:
+        a = _mk(causal, drafter=drafter, temperature=0.8, seed=11)
+        b = _mk(causal, drafter=drafter, temperature=0.8, seed=11)
+        oa = a.generate(prompts)
+        ob = b.generate_spec_reference(prompts)
+        assert oa == ob, drafter
+        # seed-fixed determinism of the speculative temperature path
+        assert oa == a.generate(prompts)
+
+
+def test_temperature_seed_sensitivity(causal):
+    prompts = _prompts(causal[0], 2, seed=12)
+    a = _mk(causal, drafter="ngram", temperature=0.9, seed=1)
+    b = _mk(causal, drafter="ngram", temperature=0.9, seed=2)
+    assert a.generate(prompts) != b.generate(prompts)
+
+
+# ---------------------------------------------------------------------------
+# acceptance accounting, batched verify mode, validation
+# ---------------------------------------------------------------------------
+
+def test_full_depth_self_drafter_accepts_everything(causal):
+    """draft_layers == n_layers makes the draft model THE target model:
+    greedy acceptance must be exactly 1.0 (the strongest internal
+    consistency check on the verify/accept path)."""
+    cfg, _ = causal
+    eng = _mk(causal, drafter="self", draft_layers=cfg.n_layers)
+    eng.generate(_prompts(cfg, 3, seed=13))
+    assert eng.stats["accept_rate"] == 1.0
+    assert eng.stats["draft_accepted"] == eng.stats["draft_tokens"] > 0
+    # each round serves every slot: k+1 tokens/slot/round at full
+    # acceptance, i.e. FAR fewer verify rounds than tokens
+    assert eng.stats["tokens"] <= (eng.stats["spec_rounds"]
+                                   * (eng.scfg.draft_k + 1)
+                                   * eng.scfg.max_slots)
+    assert eng.stats["spec_rounds"] < eng.stats["tokens"]
+
+
+def test_batched_verify_mode_deterministic(causal):
+    """The one-masked-forward verify datapath: deterministic run-to-run,
+    budget-exact, and its host-visible accounting is sane. (Bit-parity
+    with plain decode is only promised by draft_verify='scan'.)"""
+    prompts = _prompts(causal[0], 4, seed=14)
+    eng = _mk(causal, drafter="ngram", draft_verify="batched")
+    o1 = eng.generate(prompts)
+    o2 = eng.generate(prompts)
+    assert o1 == o2
+    assert all(len(o) == 8 for o in o1)
+    assert eng.stats["draft_tokens"] > 0
+
+
+def test_spec_config_validation(causal):
+    cfg, params = causal
+    with pytest.raises(ValueError, match="decode_chunk"):
+        Engine(cfg, params, ServeConfig(drafter="ngram", draft_k=8,
+                                        decode_chunk=8))
+    with pytest.raises(ValueError, match="draft_verify"):
+        Engine(cfg, params, ServeConfig(drafter="ngram",
+                                        draft_verify="nope"))
+    with pytest.raises(ValueError, match="unknown drafter"):
+        Engine(cfg, params, ServeConfig(drafter="oracle"))
+    with pytest.raises(ValueError, match="draft_layers"):
+        Engine(cfg, params, ServeConfig(drafter="self", draft_layers=99))
+    with pytest.raises(ValueError, match="draft_hist"):
+        Engine(cfg, params, ServeConfig(drafter="ngram", draft_ngram=9,
+                                        draft_hist=8))
+    ssm = get_arch("mamba2-2.7b", reduced=True)
+    with pytest.raises(ValueError, match="recurrent"):
+        Engine(ssm, T.init_params(ssm, jax.random.PRNGKey(0)),
+               ServeConfig(drafter="ngram"))
+    eng = _mk(causal)                       # no drafter configured
+    with pytest.raises(ValueError, match="drafter"):
+        eng.submit([1, 2], speculate=True)
+
+
+def test_quantized_params_spec_parity(causal):
+    """The whole point of the paper: the SAME packed BFP weights serve
+    both the draft prefix and the verify pass. Greedy parity must hold
+    on a quantized model too."""
+    from repro.core.policy import get_policy
+    from repro.core.qlinear import quantize_params
+    cfg, params = causal
+    qp, _ = quantize_params(params, get_policy("paper_llama_mix"))
+    prompts = _prompts(cfg, 3, seed=15)
+    ref = _mk((cfg, qp), max_new_tokens=6).generate(prompts)
+    for drafter in DRAFTERS:
+        eng = _mk((cfg, qp), drafter=drafter, max_new_tokens=6,
+                  draft_layers=1)
+        assert eng.generate(prompts) == ref, drafter
