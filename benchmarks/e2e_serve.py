@@ -13,6 +13,13 @@ drafter over a repetitive prompt) report ``accept_rate`` and
 ``spec_tok_per_s`` next to the plain columns; speculation-off rows are
 unchanged, so the regression gate still sees the plain decode path.
 
+Shared-prefix rows (queue depths 8 / 32) drive the shared-system-prompt
+workload -- every request is a 48-token shared prefix plus a unique
+suffix -- once with the paged KV prefix cache off (the ttft baseline on
+that workload) and once with it on (warm radix tree, suffix-only
+prefill), reporting ``prefix_hit_rate``, ``prefix_tokens_reused`` and
+``prefix_evictions``.
+
 Output: human CSV rows (``emit``) plus one machine-readable JSON blob
 (``--out`` to persist, default benchmarks/results/e2e_serve.json when run
 as a script) so future PRs can track the perf trajectory.  ``--smoke``
@@ -37,18 +44,34 @@ QUEUE_DEPTHS = (1, 4, 8, 32)     # 4 = the seed benchmark's batch shape
 SMOKE_DEPTHS = (4, 8)            # CI regression sweep
 SPEC_DEPTHS = (1, 8, 32)         # speculative-decoding sweep
 SPEC_SMOKE_DEPTHS = (8,)         # CI spec smoke run
+PREFIX_DEPTHS = (8, 32)          # shared-system-prompt sweep
+PREFIX_SMOKE_DEPTHS = (8,)       # CI prefix smoke run
+SHARED_PREFIX_LEN = 48           # shared system prompt tokens
+UNIQUE_LEN = 6                   # per-request unique suffix tokens
 MAX_SLOTS = 8
 DRAFT_K = 4
 
 
-def _bench_one(cfg, params, depth: int, drafter: str = None) -> dict:
+def _bench_one(cfg, params, depth: int, drafter: str = None,
+               prefix: bool = None) -> dict:
+    """One engine sweep. ``prefix`` selects the shared-system-prompt
+    workload (every request = SHARED_PREFIX_LEN shared tokens + a unique
+    suffix): False runs it with the prefix cache OFF (the ttft baseline),
+    True with it ON -- the warm-up generates populate the radix tree, so
+    the measured runs hit."""
     slots = min(depth, MAX_SLOTS)
     eng = Engine(cfg, params, ServeConfig(
         max_new_tokens=NEW_TOKENS, max_slots=slots,
-        decode_chunk=NEW_TOKENS, cache_len=32, prefill_bucket=8,
-        prefill_batch=slots, drafter=drafter, draft_k=DRAFT_K))
+        decode_chunk=NEW_TOKENS,
+        cache_len=64 if prefix is not None else 32, prefill_bucket=8,
+        prefill_batch=slots, drafter=drafter, draft_k=DRAFT_K,
+        prefix_cache=bool(prefix), prefix_page=8))
     rng = np.random.default_rng(0)
-    if drafter is None:
+    if prefix is not None:
+        shared = list(rng.integers(0, cfg.vocab_size, SHARED_PREFIX_LEN))
+        prompts = [shared + list(rng.integers(0, cfg.vocab_size, UNIQUE_LEN))
+                   for _ in range(depth)]
+    elif drafter is None:
         prompts = [list(rng.integers(0, cfg.vocab_size, PROMPT_LEN))
                    for _ in range(depth)]
     else:
@@ -80,6 +103,11 @@ def _bench_one(cfg, params, depth: int, drafter: str = None) -> dict:
         rec["accept_rate"] = round(s["accept_rate"], 4)
         rec["spec_tok_per_s"] = rec["tok_per_s"]
         rec["spec_rounds"] = int(s["spec_rounds"])
+    if prefix is not None:
+        rec["shared_prefix_len"] = SHARED_PREFIX_LEN
+        rec["prefix_hit_rate"] = round(s["prefix_hits"] / depth, 4)
+        rec["prefix_tokens_reused"] = int(s["prefix_tokens_reused"])
+        rec["prefix_evictions"] = int(s["prefix_evictions"])
     return rec
 
 
@@ -89,6 +117,7 @@ def run(out_path: str = None, smoke: bool = False) -> dict:
     qp, _ = quantize_params(params, get_policy("paper_llama_mix"))
     depths = SMOKE_DEPTHS if smoke else QUEUE_DEPTHS
     spec_depths = SPEC_SMOKE_DEPTHS if smoke else SPEC_DEPTHS
+    prefix_depths = PREFIX_SMOKE_DEPTHS if smoke else PREFIX_DEPTHS
 
     results = dict(
         benchmark="e2e_serve",
@@ -96,6 +125,9 @@ def run(out_path: str = None, smoke: bool = False) -> dict:
         workload=dict(prompt_len=PROMPT_LEN, new_tokens=NEW_TOKENS,
                       queue_depths=list(depths),
                       spec_queue_depths=list(spec_depths),
+                      prefix_queue_depths=list(prefix_depths),
+                      shared_prefix_len=SHARED_PREFIX_LEN,
+                      unique_len=UNIQUE_LEN,
                       draft_k=DRAFT_K, max_slots=MAX_SLOTS,
                       smoke=smoke),
         runs=[],
@@ -122,6 +154,19 @@ def run(out_path: str = None, smoke: bool = False) -> dict:
              f"accept_rate={rec['accept_rate']} "
              f"rounds={rec['spec_rounds']} "
              f"ttft_s={rec['ttft_s']}")
+    # shared-system-prompt workload: prefix cache off (ttft baseline on
+    # the SAME prompts) vs on (warm radix tree -> suffix-only prefill)
+    for depth in prefix_depths:
+        for tag, on in (("prefix_off", False), ("prefix_on", True)):
+            rec = _bench_one(cfg, qp, depth, prefix=on)
+            rec["params"] = f"fbfq_mixed_q2q3_{tag}"
+            results["runs"].append(rec)
+            emit(f"e2e_serve_{tag}_d{depth}",
+                 rec["decode_s"] / max(rec["tokens"], 1) * 1e6,
+                 f"prefill_tok/s={rec['prefill_tok_per_s']} "
+                 f"ttft_s={rec['ttft_s']} "
+                 + (f"prefix_hit_rate={rec['prefix_hit_rate']} "
+                    f"reused={rec['prefix_tokens_reused']}" if on else ""))
     emit_json(results, out_path)
     return results
 

@@ -21,7 +21,11 @@ much noisier across runner generations than decode, so their default
 tolerances are wider (and CI retries the whole sweep; a real regression
 fails every attempt, a noisy neighbor does not). Speculative rows also
 report acceptance rate for context (not gated -- it is a property of the
-drafter/workload pair, not of the code path's speed).
+drafter/workload pair, not of the code path's speed). Shared-prefix rows
+gate ``prefix_hit_rate > 0`` whenever the baseline row hits: the radix
+tree matching is deterministic for that workload, so a zero hit rate
+means the prefix cache structurally stopped working (their ttft rides
+the ordinary ttft gate).
 """
 from __future__ import annotations
 
@@ -51,10 +55,19 @@ def compare(new: dict, baseline: dict, tol: float, tol_prefill: float,
         t_ceil = (1.0 + tol_ttft) * b.get("ttft_s", 0)
         if b.get("ttft_s", 0) > 0 and r.get("ttft_s", 0) > t_ceil:
             bad.append("ttft")
+        # prefix rows: the radix tree must actually hit on the
+        # shared-system-prompt workload -- a structural gate (hit rate is
+        # deterministic for this workload), not a wall-clock one
+        if b.get("prefix_hit_rate", 0) > 0 and r.get("prefix_hit_rate",
+                                                     0) <= 0:
+            bad.append("prefix_hit_rate")
         status = "OK " if not bad else "FAIL"
         accept = (f" accept_rate {r['accept_rate']:.2f} vs "
                   f"{b.get('accept_rate', 0):.2f}"
                   if "accept_rate" in r else "")
+        if "prefix_hit_rate" in r:
+            accept += (f" prefix_hit_rate {r['prefix_hit_rate']:.2f} vs "
+                       f"{b.get('prefix_hit_rate', 0):.2f}")
         print(f"{status} {key[0]:>26} d{key[1]:<3} decode tok/s "
               f"{r['tok_per_s']:>8.1f} vs {b['tok_per_s']:>8.1f} "
               f"(floor {floor:.1f}) | prefill tok/s "

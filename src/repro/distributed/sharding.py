@@ -32,30 +32,68 @@ from repro.core.quantize import QTensor
 # extra data parallelism (pure FSDP) -- the right regime for small dense
 # models where TP all-reduces dominate (see EXPERIMENTS.md §Perf H3). The
 # physical production mesh is unchanged; only the role mapping moves.
+#
+# Context state is an explicit frame STACK, not a saved-and-restored module
+# dict: each __enter__ pushes a frame and remembers its depth, each
+# __exit__ pops back to that depth. That makes the contexts reentrant (the
+# same context object can be entered while already active -- the old
+# per-instance ``_saved`` slot was silently clobbered on re-entry, leaving
+# the outer exit to "restore" the inner snapshot) and keeps nested or
+# interleaved enters from corrupting each other's saved state.
 # --------------------------------------------------------------------------
-_TP_OFF = {"v": False}
+_TP_STACK = [False]
 
 
-class tp_off:
+class _StackedContext:
+    """Reentrant context manager over a module-level frame stack."""
+
+    _stack: list          # subclasses point this at their frame stack
+
+    def __init__(self):
+        self._depths = []
+
+    def _frame(self):
+        raise NotImplementedError
+
     def __enter__(self):
-        self._saved = _TP_OFF["v"]
-        _TP_OFF["v"] = True
+        self._stack.append(self._frame())
+        self._depths.append(len(self._stack))
         return self
 
     def __exit__(self, *exc):
-        _TP_OFF["v"] = self._saved
+        if not self._depths:
+            raise RuntimeError(
+                f"{type(self).__name__}.__exit__ without matching __enter__")
+        depth = self._depths.pop()
+        # pop back to this enter's depth; an out-of-order (interleaved)
+        # exit also drops the frames stacked above it, restoring a
+        # coherent state instead of resurrecting a stale snapshot
+        del self._stack[depth - 1:]
         return False
 
 
+class tp_off(_StackedContext):
+    def __init__(self):
+        super().__init__()
+        self._stack = _TP_STACK
+
+    def _frame(self):
+        return True
+
+
+def _tp_is_off() -> bool:
+    return _TP_STACK[-1]
+
+
 def model_axis(mesh: Mesh):
-    if _TP_OFF["v"] or "model" not in mesh.axis_names:
+    if _tp_is_off() or "model" not in mesh.axis_names:
         return None
     return "model"
 
 
 def dp_axes(mesh: Mesh) -> Tuple[str, ...]:
     axes = [a for a in ("pod", "data") if a in mesh.axis_names]
-    if _TP_OFF["v"] and "model" in mesh.axis_names:
+    if _tp_is_off() and "model" in mesh.axis_names:
         axes.append("model")
     return tuple(axes)
 
@@ -295,40 +333,39 @@ def named(tree_specs, mesh: Mesh):
 # tests and interpret-mode kernels are unaffected.
 # ---------------------------------------------------------------------------
 
-_ACT: Dict[str, Any] = {"enabled": False, "dp": None, "model": None,
-                        "dp_size": 1, "model_size": 1}
+_ACT_STACK = [
+    {"enabled": False, "dp": None, "model": None,
+     "dp_size": 1, "model_size": 1},
+]
 
 
-class activation_axes:
+class activation_axes(_StackedContext):
     def __init__(self, mesh: Mesh):
+        super().__init__()
+        self._stack = _ACT_STACK
         self.dp = dp_axes(mesh)
         self.model = model_axis(mesh)
         self.dp_size = axis_size(mesh, self.dp)
         self.model_size = axis_size(mesh, self.model) if self.model else 1
 
-    def __enter__(self):
-        self._saved = dict(_ACT)
-        _ACT.update(enabled=True, dp=self.dp, model=self.model,
-                    dp_size=self.dp_size, model_size=self.model_size)
-        return self
-
-    def __exit__(self, *exc):
-        _ACT.update(self._saved)
-        return False
+    def _frame(self):
+        return {"enabled": True, "dp": self.dp, "model": self.model,
+                "dp_size": self.dp_size, "model_size": self.model_size}
 
 
 def constrain(x, *dims):
     """with_sharding_constraint with symbolic 'dp'/'model' axis names.
     Identity unless a launcher activated axes; non-divisible dims degrade
     to unsharded."""
-    if not _ACT["enabled"]:
+    act = _ACT_STACK[-1]
+    if not act["enabled"]:
         return x
     resolved = []
     for size, d in zip(x.shape, dims):
-        if d == "dp" and _ACT["dp"] and size % _ACT["dp_size"] == 0:
-            resolved.append(_ACT["dp"])
-        elif d == "model" and _ACT["model"] and size % _ACT["model_size"] == 0:
-            resolved.append(_ACT["model"])
+        if d == "dp" and act["dp"] and size % act["dp_size"] == 0:
+            resolved.append(act["dp"])
+        elif d == "model" and act["model"] and size % act["model_size"] == 0:
+            resolved.append(act["model"])
         else:
             resolved.append(None)
     return jax.lax.with_sharding_constraint(x, P(*resolved))

@@ -1,7 +1,8 @@
 """Public fused BFP-matmul entry points (jit-friendly), plus the
 ring-buffer gather/restore primitives the serving engine's speculative
 decode uses to snapshot and rewind KV-cache rows (``ring_gather`` /
-``ring_restore``).
+``ring_restore``) and the page-block gather/scatter primitives the paged
+KV prefix cache copies pages with (``page_gather`` / ``page_scatter``).
 
 ``impl`` selects the datapath:
   * "pallas" -- the fused Pallas TPU kernel (HBM traffic stays packed).
@@ -99,6 +100,46 @@ def ring_restore(arr: jnp.ndarray, snap: jnp.ndarray, slots: jnp.ndarray,
         return arr.at[bidx, sel].set(snap, mode="drop")
     if ring_axis == 2:
         return arr.at[:, bidx, sel].set(snap, mode="drop")
+    raise ValueError(f"unsupported ring_axis {ring_axis}")
+
+
+def page_gather(arr: jnp.ndarray, rows: jnp.ndarray, cols: jnp.ndarray, *,
+                ring_axis: int) -> jnp.ndarray:
+    """Gather page-shaped row blocks out of a per-slot ring.
+
+    ``arr`` carries the batch dimension at ``ring_axis - 1`` and the ring
+    (cache position) dimension at ``ring_axis`` -- the same convention as
+    ``ring_gather``. ``rows`` (n,) are batch rows, ``cols`` (n, page) the
+    ring slots of each page's entries (a position ``p`` lives at slot
+    ``p % T``, so a page that sits across the sliding-window wrap still
+    gathers its true rows). Returns the (batch, ring) dims replaced by
+    (n, page): e.g. a KV ring (L, B, T, KH, Dh) with ring_axis=2 yields
+    (L, n, page, KH, Dh). Out-of-range indices clamp -- callers drop pad
+    entries at the paired scatter instead."""
+    if ring_axis == 1:
+        return arr[rows[:, None], cols]
+    if ring_axis == 2:
+        return arr[:, rows[:, None], cols]
+    raise ValueError(f"unsupported ring_axis {ring_axis}")
+
+
+def page_scatter(arr: jnp.ndarray, pages: jnp.ndarray, rows: jnp.ndarray,
+                 cols: jnp.ndarray, *, ring_axis: int) -> jnp.ndarray:
+    """Scatter page-shaped row blocks into a per-slot ring (inverse of
+    ``page_gather``; same layout convention).
+
+    ``pages`` is shaped like ``page_gather``'s output. An entry of
+    ``cols`` >= T drops that element (mode="drop"), which is how callers
+    express batch padding AND partial pages: a prefix-cache hit that ends
+    mid-page scatters only the matched leading rows and leaves the rest
+    for recompute -- copy-on-write at row granularity, since the source
+    page itself is never touched. Callers must steer distinct (row, col)
+    destinations (the ring guarantees it for positions within one ring
+    length); duplicate scatter destinations are undefined in XLA."""
+    if ring_axis == 1:
+        return arr.at[rows[:, None], cols].set(pages, mode="drop")
+    if ring_axis == 2:
+        return arr.at[:, rows[:, None], cols].set(pages, mode="drop")
     raise ValueError(f"unsupported ring_axis {ring_axis}")
 
 

@@ -65,6 +65,20 @@ def main() -> None:
                     help="verify datapath: 'scan' is bit-exact vs plain "
                          "decode, 'batched' scores the whole draft block "
                          "in one masked forward")
+    ap.add_argument("--prefix-cache", action="store_true",
+                    help="enable the paged KV prefix cache: admission "
+                         "reuses the longest cached token prefix and "
+                         "prefills only the suffix (greedy output stays "
+                         "token-identical to a cold prefill)")
+    ap.add_argument("--prefix-page", type=int, default=16,
+                    help="positions per KV page (clamped to a divisor of "
+                         "the ring length)")
+    ap.add_argument("--prefix-bytes", type=int, default=64 << 20,
+                    help="device byte budget for the page pool (LRU "
+                         "eviction of zero-ref pages beyond it)")
+    ap.add_argument("--shared-prefix", type=int, default=0,
+                    help="prepend this many shared system-prompt tokens "
+                         "to every request (the prefix-cache workload)")
     args = ap.parse_args()
 
     cfg = get_arch(args.arch, reduced=args.reduced)
@@ -99,25 +113,39 @@ def main() -> None:
         prefill_bucket=args.prefill_bucket,
         drafter=args.drafter, draft_k=args.draft_k,
         draft_layers=args.draft_layers, draft_ngram=args.draft_ngram,
-        draft_verify=args.draft_verify))
+        draft_verify=args.draft_verify,
+        prefix_cache=args.prefix_cache, prefix_page=args.prefix_page,
+        prefix_bytes=args.prefix_bytes))
 
     on_token = None
     if args.stream:
         on_token = lambda rid, tok: print(f"  [req {rid}] += {tok}")
     rng = np.random.default_rng(args.seed)
-    ids = [engine.submit(list(rng.integers(0, cfg.vocab_size,
-                                           args.prompt_len)),
+    shared = list(rng.integers(0, cfg.vocab_size, args.shared_prefix))
+    ids = [engine.submit(shared + list(rng.integers(0, cfg.vocab_size,
+                                                    args.prompt_len)),
                          on_token=on_token)
            for _ in range(args.requests)]
     results = engine.run()
     for rid in ids[:4]:
         print(f"req {rid}: {results[rid]}")
+
+    # rates print 0 on empty denominators (a queue whose every request is
+    # cancelled from its on_token callback never decodes; spec_rounds may
+    # be 0): the engine's _finalize_stats carries the same guards, and
+    # every ratio derived HERE goes through _rate too
+    _rate = lambda n, d: n / d if d else 0.0
     s = engine.stats
     spec = ""
     if args.drafter is not None:
         spec = (f", spec accept {s['accept_rate']:.0%} "
                 f"({s['draft_accepted']:.0f}/{s['draft_tokens']:.0f} "
                 f"drafts over {s['spec_rounds']:.0f} rounds)")
+    prefix = ""
+    if args.prefix_cache:
+        prefix = (f", prefix hits {_rate(s['prefix_hits'], s['admissions']):.0%} "
+                  f"({s['prefix_tokens_reused']:.0f} tokens reused, "
+                  f"{s['prefix_evictions']:.0f} evictions)")
     print(f"prefill {s['prefill_s']:.3f}s "
           f"({s['prefill_tok_per_s']:.1f} tok/s, "
           f"{s['prefill_groups']:.0f} fused groups, "
@@ -125,7 +153,8 @@ def main() -> None:
           f"decode {s['decode_s']:.3f}s, "
           f"{s['tok_per_s']:.1f} tok/s ({s['tokens']} tokens, "
           f"{s['host_syncs']} host syncs / {s['requests']} requests, "
-          f"{s['chunks']} fused chunks{spec})")
+          f"{_rate(s['host_syncs'], s['requests']):.1f}/req, "
+          f"{s['chunks']} fused chunks{spec}{prefix})")
 
 
 if __name__ == "__main__":

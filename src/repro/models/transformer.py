@@ -19,6 +19,7 @@ from typing import Any, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.core.quantize import QTensor, dequantize
@@ -625,7 +626,8 @@ def lm_logits(params, cfg: ModelConfig, h, *, interpret: bool = False):
 
 
 def prefill_chunk(params, cfg: ModelConfig, cache: Dict[str, Any], *,
-                  tokens, start, lengths, interpret: bool = False):
+                  tokens, start, lengths, cached_lengths=None,
+                  interpret: bool = False):
     """One batched prefill chunk against a decode cache (attention families).
 
     tokens: (B, C) int32, right-padded; start: () int32 absolute position of
@@ -634,6 +636,15 @@ def prefill_chunk(params, cfg: ModelConfig, cache: Dict[str, Any], *,
     positions >= lengths are padding: they run the math (static shapes) but
     never write the KV ring and never win attention (write index driven out
     of range -> scatter drop). A row with length 0 is a group-padding dummy.
+
+    cached_lengths: optional (B,) -- row ``b``'s positions below
+    ``cached_lengths[b]`` are ALREADY resident in the ring (scattered from
+    a prefix cache, bit-for-bit the values a cold prefill would have
+    written). Those columns are masked out exactly like padding: they
+    neither rewrite the ring nor act as in-chunk keys, while the suffix's
+    queries still attend them through the ring -- the same dataflow a
+    later chunk of a cold multi-chunk prefill uses for earlier chunks'
+    keys, which is what keeps warm prefill token-identical to cold.
 
     Feeding a prompt through successive chunks is exact: each chunk's
     queries attend the pre-chunk ring plus the chunk's own keys (see
@@ -650,6 +661,8 @@ def prefill_chunk(params, cfg: ModelConfig, cache: Dict[str, Any], *,
     positions = jnp.broadcast_to(
         start + jnp.arange(C, dtype=jnp.int32)[None], (B, C))
     valid = positions < lengths[:, None]
+    if cached_lengths is not None:
+        valid = valid & (positions >= cached_lengths[:, None])
     return _masked_chunk(params, cfg, cache, tokens, positions, valid,
                          L.prefill_attention, interpret)
 
@@ -984,6 +997,65 @@ def cache_ring_snapshot(cache: Dict[str, Any],
     cannot be rolled back by re-pointing positions)."""
     return {k: kops.ring_gather(v, slots, ring_axis=_ring_axis(k))
             for k, v in cache.items() if k not in ("conv", "state")}
+
+
+# ---------------------------------------------------------------------------
+# page-granular cache copy (prefix cache)
+# ---------------------------------------------------------------------------
+
+# ring-payload entries a KV page carries (``pos`` is derived from the
+# page's start position at scatter time, never stored)
+_PAGE_KEYS = ("k", "v", "k_scale", "v_scale")
+
+
+def cache_page_pool(cfg: ModelConfig, n_pages: int, page: int,
+                    dtype=jnp.bfloat16) -> Dict[str, Any]:
+    """Device page pool for the prefix cache: every ring-payload cache
+    entry with the batch-slot axis reinterpreted as a page index and the
+    ring axis shortened to ``page`` rows -- e.g. ``k``:
+    (L, n_pages, page, KH, Dh). Same dtypes as the live ring (int8 + f32
+    scales under kv_cache_quant), so page copies are bit-for-bit."""
+    tmpl = init_cache(cfg, n_pages, page, dtype=dtype)
+    return {k: v for k, v in tmpl.items() if k in _PAGE_KEYS}
+
+
+def cache_page_bytes(cfg: ModelConfig, page: int) -> int:
+    """Device bytes one KV page occupies (all payload arrays, all layers)."""
+    shapes = jax.eval_shape(lambda: cache_page_pool(cfg, 1, page))
+    return sum(int(np.prod(v.shape)) * jnp.dtype(v.dtype).itemsize
+               for v in shapes.values())
+
+
+def cache_gather_pages(cache: Dict[str, Any], rows: jnp.ndarray,
+                       cols: jnp.ndarray) -> Dict[str, Any]:
+    """Copy page-shaped row blocks out of a decode cache: ``rows`` (n,)
+    batch slots, ``cols`` (n, page) ring slots (position % T, so pages
+    sitting across a sliding-window wrap read their true rows). Returns
+    pool-layout payloads (the per-entry (batch, ring) dims become
+    (n, page))."""
+    return {k: kops.page_gather(cache[k], rows, cols,
+                                ring_axis=_ring_axis(k))
+            for k in _PAGE_KEYS if k in cache}
+
+
+def cache_scatter_pages(cache: Dict[str, Any], pages: Dict[str, Any],
+                        rows: jnp.ndarray, cols: jnp.ndarray,
+                        positions: jnp.ndarray) -> Dict[str, Any]:
+    """Scatter pool pages into a decode cache and stamp their absolute
+    positions into the ``pos`` ring. ``cols`` entries >= T drop that
+    element -- batch padding, and the copy-on-write path: a partial-page
+    hit scatters only its matched leading rows, the suffix prefill then
+    recomputes (overwrites) the divergent tail in the ring while the
+    source pool page stays intact. Exact through ring wrap and int8-KV
+    scale payloads (all entries are copied bit-for-bit)."""
+    new = dict(cache)
+    for k, pg in pages.items():
+        if k in cache:
+            new[k] = kops.page_scatter(cache[k], pg, rows, cols,
+                                       ring_axis=_ring_axis(k))
+    new["pos"] = kops.page_scatter(cache["pos"], positions, rows, cols,
+                                   ring_axis=1)
+    return new
 
 
 def cache_ring_rewind(cache: Dict[str, Any], snapshot: Dict[str, Any],

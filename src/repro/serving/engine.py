@@ -43,6 +43,15 @@ bottleneck is not the MatMul but host round-trips and under-filled batches
   makes greedy speculative output BIT-identical to plain decode;
   ``"batched"`` scores the block in one masked prefill-style forward
   (throughput datapath, equal to within float rounding).
+* ``prefix caching`` (``prefix_cache=True``): a host-side radix tree over
+  token-ID prefixes maps to a refcounted device page pool
+  (serving/prefix_cache.py). Admission matches each queued request's
+  longest cached prefix, scatters those pages into its group-cache row
+  (bit-for-bit KV copies, copy-on-write for partial-page hits) and runs
+  chunked prefill only over the uncached suffix; freshly computed prompt
+  pages are inserted back, with LRU eviction of zero-ref (childless)
+  pages under a byte budget. Greedy output is token-identical to running
+  with the cache off, and admission still costs ONE host sync per group.
 
 ``generate_reference`` keeps the pre-rewrite host-driven loop (one jitted
 step per token, same math) for parity tests and as readable documentation
@@ -64,6 +73,7 @@ import numpy as np
 from repro.configs.base import ModelConfig
 from repro.models import transformer as T
 from repro.serving.drafters import make_drafter
+from repro.serving.prefix_cache import PrefixCache
 
 # families whose decode state is a KV ring -> batched chunked prefill;
 # everything else (recurrent state) prefills at exact length per request
@@ -90,6 +100,13 @@ class ServeConfig:
     draft_hist: int = 64                # "ngram": history ring length
     draft_verify: str = "scan"          # "scan" (bit-exact vs plain decode)
                                         # | "batched" (one masked forward)
+    # paged KV prefix cache (radix tree over token-ID prefixes; admission
+    # reuses the longest cached prefix and prefills only the suffix --
+    # greedy output stays token-identical to a cold prefill)
+    prefix_cache: bool = False
+    prefix_page: int = 16               # positions per page (clamped to a
+                                        # divisor of the KV ring length)
+    prefix_bytes: int = 64 << 20        # device byte budget for the pool
 
 
 @dataclasses.dataclass
@@ -157,6 +174,29 @@ class Engine:
                 lambda params, cache, ds, tok, pos, act:
                 self._drafter.propose(params, self.cfg, cache, ds, tok,
                                       pos, act))
+        self._prefix: Optional[PrefixCache] = None
+        if serve_cfg.prefix_cache:
+            if not self._kv_family:
+                raise ValueError(
+                    f"prefix caching needs a KV-ring family (got "
+                    f"{cfg.family!r}): recurrent state is not positional "
+                    "and cannot be paged")
+            if serve_cfg.prefix_page < 1:
+                raise ValueError("prefix_page must be >= 1")
+            # pages must tile the ring exactly so a page never wraps
+            # internally (position p % T stays page-contiguous)
+            page = max(1, min(serve_cfg.prefix_page, self._T))
+            while self._T % page:
+                page -= 1
+            self._page = page
+            cap = max(2, int(serve_cfg.prefix_bytes)
+                      // T.cache_page_bytes(cfg, page))
+            self._prefix = PrefixCache(page, cap)
+            self._pool = None           # device pool, allocated on 1st use
+            self._prefix_scatter = jax.jit(self._prefix_scatter_impl,
+                                           donate_argnums=(0,))
+            self._prefix_insert = jax.jit(self._prefix_insert_impl,
+                                          donate_argnums=(0,))
         self._prefill = jax.jit(self._prefill_impl)
         # caches are donated so XLA aliases the ring buffers call-to-call
         self._admit_cache = jax.jit(self._admit_cache_impl,
@@ -207,18 +247,36 @@ class Engine:
     def _admit_caches_impl(self, cache, group_cache, indices):
         return T.cache_set_slots(cache, group_cache, indices)
 
+    def _prefix_scatter_impl(self, gcache, pool, idx, rows, cols,
+                             positions):
+        """Copy pool pages ``idx`` (n,) into group-cache rows ``rows`` at
+        ring slots ``cols`` (n, page), stamping ``positions``. Entries
+        with cols >= T drop (batch padding / partial-page tails)."""
+        pages = {k: v[:, idx] for k, v in pool.items()}
+        return T.cache_scatter_pages(gcache, pages, rows, cols, positions)
+
+    def _prefix_insert_impl(self, pool, gcache, idx, rows, cols):
+        """Copy freshly prefilled pages out of the group cache into pool
+        rows ``idx`` (n,); idx >= capacity drops (batch padding)."""
+        pages = T.cache_gather_pages(gcache, rows, cols)
+        return {k: pool[k].at[:, idx].set(pages[k], mode="drop")
+                for k in pool}
+
     def _prefill_chunk_impl(self, params, gcache, tokens, start, lengths,
-                            last_logits):
+                            last_logits, cached):
         """One (G, C) prefill chunk + ragged last-token logit capture.
 
         ``start`` is traced, so every chunk index reuses one compilation.
         ``last_logits`` accumulates each row's logits at its true last
         prompt token (rows whose last token is not in this chunk pass
         through); the LM head runs on ONE gathered row per sequence, never
-        on the full (G, C, V) block."""
+        on the full (G, C, V) block. ``cached`` (G,) marks each row's
+        prefix-cache horizon: columns below it are already resident in
+        the ring and are masked out of compute exactly like padding."""
         C = tokens.shape[1]
         h, gcache = T.prefill_chunk(params, self.cfg, gcache, tokens=tokens,
-                                    start=start, lengths=lengths)
+                                    start=start, lengths=lengths,
+                                    cached_lengths=cached)
         last = lengths - 1
         off = jnp.clip(last - start, 0, C - 1)
         hr = jnp.take_along_axis(h, off[:, None, None], axis=1)[:, 0]
@@ -483,7 +541,8 @@ class Engine:
                     requests=requests, prefill_groups=0, prefill_tokens=0,
                     prefill_tok_per_s=0.0, ttft_s=0.0,
                     draft_tokens=0, draft_accepted=0, accept_rate=0.0,
-                    spec_rounds=0)
+                    spec_rounds=0, prefix_hits=0, prefix_tokens_reused=0,
+                    prefix_evictions=0)
 
     def submit(self, prompt: List[int],
                max_new_tokens: Optional[int] = None,
@@ -605,18 +664,113 @@ class Engine:
         Gp = 1 << max(len(lens) - 1, 0).bit_length()
         return P, C, min(max(Gp, 1), max(self.scfg.prefill_batch, 1))
 
+    def _match_prefixes(self, reqs: List[Request]):
+        """Radix-match every request's longest cached prefix. Returns
+        (per-request matched lengths, page-scatter jobs) where each job is
+        (group_row, pool_idx, start_pos, take): rows [0, take) of that
+        page land in the ring (take < page is a partial-page hit)."""
+        matches, jobs = [], []
+        for i, r in enumerate(reqs):
+            m, pages = self._prefix.match(r.prompt)
+            # insertion is gated at prompt <= ring length, so a match can
+            # never exceed the ring: every matched position has a live
+            # slot and the batched scatter's destinations stay distinct
+            assert m <= self._T, (m, self._T)
+            matches.append(m)
+            if not m:
+                continue
+            self.stats["prefix_hits"] += 1
+            self.stats["prefix_tokens_reused"] += m
+            for pidx, p0, take in pages:
+                jobs.append((i, pidx, p0, take))
+        return matches, jobs
+
+    def _scatter_prefix_pages(self, gcache, jobs):
+        """One batched gather->scatter of matched pool pages into the
+        group cache (the copy in copy-on-write: slot rings only ever hold
+        page copies, so later suffix writes never touch the pool)."""
+        self._ensure_pool()
+        page = self._page
+        n = 1 << max(len(jobs) - 1, 0).bit_length()     # bucketed shapes
+        idx = np.full(n, self._prefix.capacity, np.int32)
+        rows = np.zeros(n, np.int32)
+        cols = np.full((n, page), self._T, np.int32)    # T = drop
+        pos = np.zeros((n, page), np.int32)
+        ar = np.arange(page)
+        for j, (row, pidx, p0, take) in enumerate(jobs):
+            idx[j], rows[j] = pidx, row
+            cols[j] = np.where(ar < take, (p0 + ar) % self._T, self._T)
+            pos[j] = p0 + ar
+        return self._prefix_scatter(gcache, self._pool, jnp.asarray(idx),
+                                    jnp.asarray(rows), jnp.asarray(cols),
+                                    jnp.asarray(pos))
+
+    def _insert_prefix_pages(self, gcache, reqs, lens) -> None:
+        """Record every request's full prompt pages in the radix tree and
+        copy newly allocated ones out of the freshly prefilled group
+        cache (async dispatch -- no host sync). Prompts longer than the
+        ring skip insertion: their early pages were already overwritten
+        by ring wrap."""
+        ev0 = self._prefix.evictions
+        jobs = []
+        protect: set = set()        # shared across the group: one request's
+        for i, r in enumerate(reqs):  # eviction must not recycle a pool
+            if lens[i] <= self._T:    # index a group-mate just allocated
+                jobs += [(i, pidx, p0)
+                         for pidx, p0 in self._prefix.insert(r.prompt,
+                                                             protect)]
+        self.stats["prefix_evictions"] += self._prefix.evictions - ev0
+        if not jobs:
+            return
+        self._ensure_pool()
+        page = self._page
+        n = 1 << max(len(jobs) - 1, 0).bit_length()
+        idx = np.full(n, self._prefix.capacity, np.int32)   # cap = drop
+        rows = np.zeros(n, np.int32)
+        cols = np.zeros((n, page), np.int32)
+        ar = np.arange(page)
+        for j, (row, pidx, p0) in enumerate(jobs):
+            idx[j], rows[j] = pidx, row
+            cols[j] = p0 + ar           # full in-ring pages never wrap
+        self._pool = self._prefix_insert(self._pool, gcache,
+                                         jnp.asarray(idx),
+                                         jnp.asarray(rows),
+                                         jnp.asarray(cols))
+
+    def _ensure_pool(self) -> None:
+        if self._pool is None:
+            self._pool = T.cache_page_pool(self.cfg, self._prefix.capacity,
+                                           self._page)
+
     def _admit_group(self, slots: List[int], reqs: List[Request]) -> None:
         """Prefill ``reqs`` as one right-padded batch and scatter all their
-        caches into ``slots`` with a single cache_set_slots call."""
+        caches into ``slots`` with a single cache_set_slots call.
+
+        With the prefix cache enabled, each request's longest cached
+        prefix is scattered into its group-cache row page by page and the
+        chunked prefill covers only [min cached length, padded max): the
+        chunk grid starts at the group-wide reuse horizon, rows whose own
+        horizon lies further right mask the overlap columns out of
+        compute (``cached_lengths``), and the suffix length (not the full
+        prompt) picks the bucketed chunk shape -- so shared-prefix groups
+        skip most of their MatMul work while still emitting bit-identical
+        KV rows and logits."""
         t0 = time.perf_counter()
         G = len(reqs)
         lens = [len(r.prompt) for r in reqs]
-        P, C, Gp = self._group_shape(lens)
-        toks = np.zeros((Gp, P), np.int32)
+        if self._prefix is not None:
+            matches, pjobs = self._match_prefixes(reqs)
+            s0 = min(matches)
+        else:
+            matches, pjobs, s0 = [0] * G, [], 0
+        P, C, Gp = self._group_shape([n - s0 for n in lens])
+        toks = np.zeros((Gp, s0 + P), np.int32)
         lengths = np.zeros(Gp, np.int32)            # dummy rows: length 0
+        cached = np.zeros(Gp, np.int32)
         for i, r in enumerate(reqs):
             toks[i, :lens[i]] = r.prompt
             lengths[i] = lens[i]
+            cached[i] = matches[i]
         # split one key per request IN QUEUE ORDER -- exactly the stream a
         # sequential (prefill_batch=1) admission loop would consume, so the
         # two schedules sample identical first tokens
@@ -628,12 +782,17 @@ class Engine:
         if self._cache is None:
             self._cache = T.init_cache(self.cfg, self._B, self._T)
         gcache = T.init_cache(self.cfg, Gp, self._T)
+        if pjobs:
+            gcache = self._scatter_prefix_pages(gcache, pjobs)
         last_logits = jnp.zeros((Gp, self.cfg.vocab_size), jnp.float32)
         lengths_d = jnp.asarray(lengths)
+        cached_d = jnp.asarray(cached)
         for j in range(P // C):
+            start = s0 + j * C
             gcache, last_logits = self._prefill_chunk(
-                self.params, gcache, jnp.asarray(toks[:, j * C:(j + 1) * C]),
-                jnp.asarray(j * C, jnp.int32), lengths_d, last_logits)
+                self.params, gcache, jnp.asarray(toks[:, start:start + C]),
+                jnp.asarray(start, jnp.int32), lengths_d, last_logits,
+                cached_d)
         first_d = self._sample_first(last_logits, jnp.stack(subs))
         budgets = np.zeros(Gp, np.int32)            # dummies: 0 -> unbound
         budgets[:G] = [r.max_new_tokens for r in reqs]
@@ -645,6 +804,10 @@ class Engine:
         idx_d = self._bind_slots(first_d, jnp.asarray(budgets),
                                  jnp.asarray(free_arr))
         self._cache = self._admit_caches(self._cache, gcache, idx_d)
+        if self._prefix is not None:
+            # record this group's prompt pages (async dispatch, rides the
+            # same device queue -- admission stays one host sync)
+            self._insert_prefix_pages(gcache, reqs, lens)
         firsts = np.asarray(jax.device_get(first_d))   # 1 sync / GROUP
         # host-side mirror of _bind_slots_impl for the bookkeeping below
         free_iter = iter(slots)
@@ -754,18 +917,26 @@ class Engine:
                 self._slots[i] = None               # slot freed -> eviction
 
     def _finalize_stats(self, done: Dict[int, List[int]]) -> None:
+        """Derive rate stats with explicit zero-denominator guards: a run
+        whose every request is cancelled from an ``on_token`` callback at
+        admission never decodes (decode_s == 0 with tokens > 0 -- the old
+        ``max(x, 1e-9)`` guard reported absurd rates there), and
+        spec_rounds == 0 leaves draft_tokens at 0. All rates report 0.0
+        in those cases."""
         ntok = sum(len(t) for t in done.values())
         self.stats["tokens"] = ntok
-        self.stats["tok_per_s"] = ntok / max(self.stats["decode_s"], 1e-9)
+        self.stats["tok_per_s"] = (
+            ntok / self.stats["decode_s"]
+            if self.stats["decode_s"] > 0 else 0.0)
         self.stats["prefill_tok_per_s"] = (
-            self.stats["prefill_tokens"] / max(self.stats["prefill_s"],
-                                               1e-9))
+            self.stats["prefill_tokens"] / self.stats["prefill_s"]
+            if self.stats["prefill_s"] > 0 else 0.0)
         ttfts = [r.ttft_s for r in self._results.values()
                  if r.ttft_s is not None]
         self.stats["ttft_s"] = sum(ttfts) / len(ttfts) if ttfts else 0.0
         self.stats["accept_rate"] = (
             self.stats["draft_accepted"] / self.stats["draft_tokens"]
-            if self.stats["draft_tokens"] else 0.0)
+            if self.stats["draft_tokens"] > 0 else 0.0)
 
     def run(self) -> Dict[int, List[int]]:
         """Drive batched admission + fused decode chunks until queue and

@@ -90,6 +90,59 @@ def test_cache_specs_adaptive():
     assert specs3["k"][2] in ("data", ("data",))
 
 
+def test_nested_and_reentrant_role_contexts():
+    """tp_off / activation_axes are stacked contexts: nesting tp_off
+    inside an active activation_axes, re-entering the SAME context
+    object, and sequential reuse must all restore state exactly
+    (regression: the old per-instance ``_saved`` slot was clobbered on
+    re-entry, leaving the module-level role dicts corrupted)."""
+    mesh = FakeMesh({"data": 2, "model": 2})
+    assert SH.model_axis(mesh) == "model"
+
+    # nested tp_off inside activation_axes: the inner context must not
+    # disturb the outer's activation frame on exit
+    with SH.activation_axes(mesh):
+        assert SH._ACT_STACK[-1]["enabled"]
+        outer_frame = dict(SH._ACT_STACK[-1])
+        with SH.tp_off():
+            assert SH.model_axis(mesh) is None
+            assert SH.dp_axes(mesh) == ("data", "model")
+            assert SH._ACT_STACK[-1] == outer_frame       # untouched
+        assert SH.model_axis(mesh) == "model"             # tp restored
+        assert SH._ACT_STACK[-1] == outer_frame
+    assert not SH._ACT_STACK[-1]["enabled"]
+    assert len(SH._ACT_STACK) == 1 and len(SH._TP_STACK) == 1
+
+    # re-entering the SAME context object (the old code restored the
+    # inner snapshot and left tp permanently off)
+    ctx = SH.tp_off()
+    with ctx:
+        with ctx:
+            assert SH.model_axis(mesh) is None
+        assert SH.model_axis(mesh) is None                # outer active
+    assert SH.model_axis(mesh) == "model"
+    assert len(SH._TP_STACK) == 1
+
+    # sequential reuse of one activation_axes object stays balanced
+    act = SH.activation_axes(mesh)
+    for _ in range(2):
+        with act:
+            assert SH._ACT_STACK[-1]["enabled"]
+        assert not SH._ACT_STACK[-1]["enabled"]
+    assert len(SH._ACT_STACK) == 1
+
+    # interleaved (out-of-order) exits still converge to a clean base
+    a, b = SH.tp_off(), SH.tp_off()
+    a.__enter__()
+    b.__enter__()
+    a.__exit__(None, None, None)                          # out of order
+    b.__exit__(None, None, None)
+    assert len(SH._TP_STACK) == 1 and SH.model_axis(mesh) == "model"
+
+    with pytest.raises(RuntimeError, match="without matching"):
+        SH.tp_off().__exit__(None, None, None)
+
+
 def test_constrain_noop_outside_context():
     x = jnp.ones((4, 4))
     assert SH.constrain(x, "dp", None) is x

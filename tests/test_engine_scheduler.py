@@ -283,6 +283,28 @@ def test_cancel_queued_and_running(model):
     assert res2[d] == res2[d][:1] and len(res2[d]) == 1
 
 
+def test_stats_all_requests_cancelled_at_first_token(model):
+    """Every request cancels itself from its first on_token callback, so
+    decode never runs: rate stats must come back 0 (not the absurd
+    ntok/1e-9 the old max() guard produced, and no ZeroDivisionError),
+    with accept_rate 0 when spec_rounds == 0."""
+    cfg, _ = model
+    eng = _engine(model, max_new_tokens=8, decode_chunk=4)
+    cb = lambda rid, tok: eng.cancel(rid)
+    ids = [eng.submit(p, on_token=cb) for p in _prompts(cfg, 3)]
+    res = eng.run()
+    assert all(len(res[i]) == 1 for i in ids)       # first token kept
+    s = eng.stats
+    assert s["decode_s"] == 0.0 and s["tokens"] == 3
+    assert s["tok_per_s"] == 0.0                    # guarded, not ~3e9
+    assert s["accept_rate"] == 0.0 and s["spec_rounds"] == 0
+    assert np.isfinite([s["tok_per_s"], s["prefill_tok_per_s"],
+                        s["ttft_s"], s["accept_rate"]]).all()
+    # a run() with nothing submitted finalizes all-zero rates too
+    assert eng.run() == {}
+    assert eng.stats["tok_per_s"] == eng.stats["prefill_tok_per_s"] == 0.0
+
+
 def test_prefill_chunk_boundary_invariance(model):
     """Where chunk boundaries fall must not change a single token: the
     chunk's own keys are attended at ring dtype (the value decode would

@@ -154,6 +154,43 @@ def test_property_pallas_matches_ref(variant, m, nsb, n, compute, seed):
                                atol=tol * (np.abs(o_ref).max() + 1e-9))
 
 
+@settings(max_examples=16, deadline=None)
+@given(variant=st.sampled_from(VARIANTS),
+       nsb=st.integers(1, 3), n=st.integers(1, 200),
+       pad=st.integers(1, 190), seed=st.integers(0, 2**16))
+def test_property_packed_lane_padding_is_inert(variant, nsb, n, pad, seed):
+    """The fused kernel pads every packed payload array with zero bytes
+    along the lane (N) axis when N is not a block multiple. That is only
+    sound if zero payloads dequantize to EXACTLY 0.0 in every registered
+    format -- including the offset-coded ones: Q3_K stores block scales
+    biased by +32 (a zero byte decodes to scale -32) and Q4_0 pins
+    ``d = mval / -8`` (a zero-weight block quantizes to d == -0.0, codes
+    8), so inertness leans on the zeroed super-scale d (and dmin for the
+    affine formats) annihilating the decoded fields. Property: for every
+    format, zero-padded lane columns dequantize to +/-0.0 exactly, and
+    the padded matmul's real columns are bit-identical to the unpadded
+    run -- non-multiple-of-128 N never perturbs real outputs."""
+    K = 256 * nsb
+    x, w = _mk(seed, 4, K, n)
+    t = Q.quantize(variant, w)
+    padded = Q.QTensor(t.variant, (K, n + pad),
+                       {k: jnp.pad(v, ((0, 0), (0, pad)))
+                        for k, v in t.data.items()})
+    wp = np.asarray(Q.dequantize(padded, dtype=jnp.float32))
+    assert wp.shape == (K, n + pad)
+    np.testing.assert_array_equal(wp[:, n:], 0.0)           # inert columns
+    np.testing.assert_array_equal(
+        wp[:, :n], np.asarray(Q.dequantize(t, dtype=jnp.float32)))
+    o = np.asarray(bfp_matmul_pallas(
+        x, t, interpret=True, compute_dtype=jnp.float32,
+        out_dtype=jnp.float32, block_m=16, block_n=128, block_k=256))
+    o_pad = np.asarray(bfp_matmul_pallas(
+        x, padded, interpret=True, compute_dtype=jnp.float32,
+        out_dtype=jnp.float32, block_m=16, block_n=128, block_k=256))
+    np.testing.assert_array_equal(o_pad[:, :n], o)
+    np.testing.assert_array_equal(o_pad[:, n:], 0.0)
+
+
 @settings(max_examples=8, deadline=None)
 @given(m=st.integers(1, 20), nsb=st.integers(1, 3),
        masked=st.integers(0, 1), seed=st.integers(0, 2**16))

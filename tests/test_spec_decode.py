@@ -114,6 +114,44 @@ def test_greedy_parity_full_attention_ring_end(causal):
         assert eng.generate(prompts) == ref, drafter
 
 
+def test_ring_end_flush_boundary_sweep(causal):
+    """Exhaustive full-attention ring-end boundary: for every prompt
+    length p with p + budget == cache_len EXACTLY (a completely full ring
+    at the last token), both drafters, the spec engine must match plain
+    decode token for token. This sweeps the clamp's edge cases: the
+    draft_k fallback window engaging at different points mid-sequence
+    (pos + draft_k == T-1 vs == T), budget truncation landing inside an
+    accepted block right at the ring end, and prompts so close to the end
+    that speculation never activates (cache_len - p <= draft_k). A
+    verify round writes pos..pos+draft_k before rewinding, so the clamp
+    ``pos + draft_k < T`` is exactly the largest safe region -- this test
+    is the regression net for anyone re-deriving it."""
+    cfg, _ = causal
+    Tring = 16
+    rng = np.random.default_rng(7)
+    for p in (3, 8, 11, 13, 14):
+        prompts = [list(rng.integers(0, cfg.vocab_size, p))]
+        budget = Tring - p                       # flush: p + budget == T
+        ref_eng = _mk(causal, cache_len=Tring, max_slots=1,
+                      max_new_tokens=budget)
+        ref = ref_eng.generate(prompts)
+        assert ref == ref_eng.generate_reference(prompts)
+        for drafter in DRAFTERS:
+            eng = _mk(causal, drafter=drafter, cache_len=Tring,
+                      max_slots=1, max_new_tokens=budget)
+            assert eng.generate(prompts) == ref, (drafter, p)
+    # multi-slot: ragged prompts flushing against the ring at different
+    # steps, so some slots speculate while others are already clamped
+    prompts = [list(rng.integers(0, cfg.vocab_size, p))
+               for p in (3, 9, 13)]
+    ref = _mk(causal, cache_len=Tring, max_slots=3,
+              max_new_tokens=3).generate(prompts)
+    for drafter in DRAFTERS:
+        eng = _mk(causal, drafter=drafter, cache_len=Tring, max_slots=3,
+                  max_new_tokens=3)
+        assert eng.generate(prompts) == ref, drafter
+
+
 def test_greedy_parity_mixed_spec_and_plain_slots(causal):
     """A continuous batch mixing speculate=True/False requests matches
     plain decode for every request -- and toggling is per-request, not
