@@ -20,6 +20,13 @@ that workload) and once with it on (warm radix tree, suffix-only
 prefill), reporting ``prefix_hit_rate``, ``prefix_tokens_reused`` and
 ``prefix_evictions``.
 
+Tensor-parallel rows (tp=1 vs tp=2 at queue depth 8, quantized params)
+report the same decode/prefill/ttft columns under the shard_map TP
+engine; they need >= 2 devices, so on a CPU-only box set
+REPRO_FORCE_HOST_DEVICES=2 (honored below BEFORE jax initializes) and
+they are skipped otherwise (CI's 1-device smoke sweep never produces
+them, and the regression gate skips absent rows/metrics).
+
 Output: human CSV rows (``emit``) plus one machine-readable JSON blob
 (``--out`` to persist, default benchmarks/results/e2e_serve.json when run
 as a script) so future PRs can track the perf trajectory.  ``--smoke``
@@ -27,6 +34,11 @@ runs the reduced sweep CI uses for regression gating -- including one
 spec-decode run (see scripts/check_bench_regression.py).
 """
 import argparse
+import os
+
+from repro.launch.hostdev import force_host_devices
+
+force_host_devices(os.environ.get("REPRO_FORCE_HOST_DEVICES"))
 
 import jax
 import numpy as np
@@ -46,6 +58,7 @@ SPEC_DEPTHS = (1, 8, 32)         # speculative-decoding sweep
 SPEC_SMOKE_DEPTHS = (8,)         # CI spec smoke run
 PREFIX_DEPTHS = (8, 32)          # shared-system-prompt sweep
 PREFIX_SMOKE_DEPTHS = (8,)       # CI prefix smoke run
+TP_DEPTH = 8                     # tensor-parallel row (tp=1 vs tp=2)
 SHARED_PREFIX_LEN = 48           # shared system prompt tokens
 UNIQUE_LEN = 6                   # per-request unique suffix tokens
 MAX_SLOTS = 8
@@ -53,7 +66,7 @@ DRAFT_K = 4
 
 
 def _bench_one(cfg, params, depth: int, drafter: str = None,
-               prefix: bool = None) -> dict:
+               prefix: bool = None, tp: int = 1) -> dict:
     """One engine sweep. ``prefix`` selects the shared-system-prompt
     workload (every request = SHARED_PREFIX_LEN shared tokens + a unique
     suffix): False runs it with the prefix cache OFF (the ttft baseline),
@@ -65,7 +78,7 @@ def _bench_one(cfg, params, depth: int, drafter: str = None,
         decode_chunk=NEW_TOKENS,
         cache_len=64 if prefix is not None else 32, prefill_bucket=8,
         prefill_batch=slots, drafter=drafter, draft_k=DRAFT_K,
-        prefix_cache=bool(prefix), prefix_page=8))
+        prefix_cache=bool(prefix), prefix_page=8, tp=tp))
     rng = np.random.default_rng(0)
     if prefix is not None:
         shared = list(rng.integers(0, cfg.vocab_size, SHARED_PREFIX_LEN))
@@ -127,7 +140,7 @@ def run(out_path: str = None, smoke: bool = False) -> dict:
                       spec_queue_depths=list(spec_depths),
                       prefix_queue_depths=list(prefix_depths),
                       shared_prefix_len=SHARED_PREFIX_LEN,
-                      unique_len=UNIQUE_LEN,
+                      unique_len=UNIQUE_LEN, tp_depth=TP_DEPTH,
                       draft_k=DRAFT_K, max_slots=MAX_SLOTS,
                       smoke=smoke),
         runs=[],
@@ -154,6 +167,22 @@ def run(out_path: str = None, smoke: bool = False) -> dict:
              f"accept_rate={rec['accept_rate']} "
              f"rounds={rec['spec_rounds']} "
              f"ttft_s={rec['ttft_s']}")
+    # tensor-parallel rows: same workload/params at tp=1 vs tp=2 under
+    # the shard_map engine (padded datapath: token-identical output,
+    # replicated FLOPs -- on real multi-chip hardware the sliced
+    # datapath is the perf path; these rows track the TP engine's
+    # overhead). Skipped when the backend exposes a single device.
+    if not smoke and len(jax.devices()) >= 2:
+        for tp in (1, 2):
+            rec = _bench_one(cfg, qp, TP_DEPTH, tp=tp)
+            rec["params"] = f"fbfq_mixed_q2q3_tp{tp}"
+            rec["tp"] = tp
+            results["runs"].append(rec)
+            emit(f"e2e_serve_tp{tp}_d{TP_DEPTH}",
+                 rec["decode_s"] / max(rec["tokens"], 1) * 1e6,
+                 f"tok/s={rec['tok_per_s']} "
+                 f"prefill_tok/s={rec['prefill_tok_per_s']} "
+                 f"ttft_s={rec['ttft_s']}")
     # shared-system-prompt workload: prefix cache off (ttft baseline on
     # the SAME prompts) vs on (warm radix tree -> suffix-only prefill)
     for depth in prefix_depths:

@@ -10,7 +10,11 @@ Usage (what CI runs):
 Runs are matched on (params, queue_depth); only pairs present in BOTH
 files are compared, so the smoke sweep gates against the full committed
 baseline (and the spec-decode smoke run gates against the committed
-speculative row). Three metrics are gated:
+speculative row). A metric absent from the BASELINE row skips that gate
+instead of KeyError-ing (tensor-parallel rows, for instance, only exist
+in sweeps run with multiple forced devices, and older baselines predate
+some metrics); a metric the baseline has but the new run dropped is a
+reporting regression and FAILS. Three metrics are gated:
 
   * decode tok/s        -- fail if new < (1 - tol) * baseline
   * prefill tok/s       -- fail if new < (1 - tol-prefill) * baseline
@@ -46,15 +50,28 @@ def compare(new: dict, baseline: dict, tol: float, tol_prefill: float,
             continue
         compared += 1
         bad = []
-        floor = (1.0 - tol) * b["tok_per_s"]
-        if r["tok_per_s"] < floor:
-            bad.append("decode")
+        # a metric absent from the BASELINE skips that gate instead of
+        # KeyError-ing (old baselines predate some metrics; rows only a
+        # richer sweep produces -- e.g. the multi-device tensor-parallel
+        # rows -- are already handled by the pair matching above). A
+        # metric the baseline HAS but the new run LACKS is a reporting
+        # regression and fails: every engine row is expected to keep
+        # emitting tok_per_s/prefill_tok_per_s/ttft_s.
+        bt, rt = b.get("tok_per_s"), r.get("tok_per_s")
+        floor = (1.0 - tol) * bt if bt is not None else 0.0
+        if bt is not None and (rt is None or rt < floor):
+            bad.append("decode" if rt is not None else "decode-missing")
         p_floor = (1.0 - tol_prefill) * b.get("prefill_tok_per_s", 0)
-        if r.get("prefill_tok_per_s", 0) < p_floor:
-            bad.append("prefill")
+        if b.get("prefill_tok_per_s") is not None:
+            rp = r.get("prefill_tok_per_s")
+            if rp is None or rp < p_floor:
+                bad.append("prefill" if rp is not None
+                           else "prefill-missing")
         t_ceil = (1.0 + tol_ttft) * b.get("ttft_s", 0)
-        if b.get("ttft_s", 0) > 0 and r.get("ttft_s", 0) > t_ceil:
-            bad.append("ttft")
+        if b.get("ttft_s", 0) > 0:
+            rtt = r.get("ttft_s")
+            if rtt is None or rtt > t_ceil:
+                bad.append("ttft" if rtt is not None else "ttft-missing")
         # prefix rows: the radix tree must actually hit on the
         # shared-system-prompt workload -- a structural gate (hit rate is
         # deterministic for this workload), not a wall-clock one
@@ -69,7 +86,7 @@ def compare(new: dict, baseline: dict, tol: float, tol_prefill: float,
             accept += (f" prefix_hit_rate {r['prefix_hit_rate']:.2f} vs "
                        f"{b.get('prefix_hit_rate', 0):.2f}")
         print(f"{status} {key[0]:>26} d{key[1]:<3} decode tok/s "
-              f"{r['tok_per_s']:>8.1f} vs {b['tok_per_s']:>8.1f} "
+              f"{r.get('tok_per_s', 0):>8.1f} vs {b.get('tok_per_s', 0):>8.1f} "
               f"(floor {floor:.1f}) | prefill tok/s "
               f"{r.get('prefill_tok_per_s', 0):>8.1f} vs "
               f"{b.get('prefill_tok_per_s', 0):>8.1f} "

@@ -18,6 +18,7 @@ shape compiles (elastic meshes; see launch/mesh.py).
 """
 from __future__ import annotations
 
+import dataclasses
 from typing import Any, Dict, Optional, Tuple
 
 import jax
@@ -369,3 +370,204 @@ def constrain(x, *dims):
         else:
             resolved.append(None)
     return jax.lax.with_sharding_constraint(x, P(*resolved))
+
+
+# ---------------------------------------------------------------------------
+# tensor-parallel serving (shard_map; engine.ServeConfig.tp)
+#
+# The serving engine runs its jitted programs through shard_map over a
+# 1-axis ("model",) mesh. Unlike the Megatron row/column pairing above
+# (psum of PARTIAL sums -- fast, but a different f32 accumulation order
+# than the single-device program), serving TP is *lane-only*: every
+# weight keeps its K rows whole per shard and shards only its lane (last,
+# N) axis, so each shard owns whole output columns and ONE collective
+# per projection (a tiled lane all-gather, kernels/ops.tp_gather_lanes)
+# assembles the replicated output. Shards are disjoint contiguous
+# blocks, so that gather is pure data movement (exact) -- and with the
+# "padded" matmul datapath (same-shaped gemm per shard, see
+# ServeTPPlan.matmul) the whole TP forward is bit-identical to the
+# single-device program,
+# which is what lets the parity suite pin greedy serving output
+# token-identical across mesh shapes {1, 2, 4}. For packed QTensors
+# lane-only sharding is also the layout rule: payload lanes slice freely
+# (packing runs along K), while K rows stay whole so super-block
+# boundaries never straddle devices.
+#
+# A ServeTPPlan decides, per weight block, shard-vs-replicate:
+#   * attn: q/k/v/o projections shard over heads (the KV cache co-shards
+#     over kv_heads) when n_heads, n_kv_heads and d_model all divide the
+#     mesh -- fused-qkv layouts interleave q/k/v lanes and stay
+#     replicated.
+#   * mlp:  gate/up/fc shard the ffn hidden, down/proj the d_model
+#     output, when d_ff and d_model divide. MoE expert stacks stay
+#     replicated (EP is a training-side concern; see param_specs).
+# Everything else (embeddings, norms, biases past a gather point) is
+# replicated. Every fallback degrades to replication, so any config
+# compiles at any tp degree -- it just stops saving work.
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeTPPlan:
+    size: int
+    axis: str = "model"
+    attn: bool = False          # shard heads + KV cache over kv_heads
+    mlp: bool = False           # shard the ffn hidden / down output
+    # projection datapath (see layers.tp_lane_dense):
+    #   "padded" -- zero-embed the local lanes into a full-width weight
+    #     and run the SAME-shaped gemm as the single-device program.
+    #     CPU gemms round shape-dependently (a lane-sliced dot differs
+    #     from the full dot's columns by an f32 ulp -- pinned by
+    #     test_tp_serving), so same-shape is the only way to a
+    #     GUARANTEED bit-identical forward: weights/cache stay sharded
+    #     (the memory win), matmul FLOPs are replicated. The parity
+    #     default.
+    #   "sliced" -- true lane-sliced gemm: per-shard FLOPs and packed
+    #     HBM traffic scale 1/size (the throughput datapath), output
+    #     equal to within float rounding only.
+    matmul: str = "padded"
+
+
+def make_serve_tp_plan(cfg, size: int, axis: str = "model",
+                       matmul: str = "padded") -> ServeTPPlan:
+    """Shard-vs-replicate decisions for serving ``cfg`` at tp degree
+    ``size`` (divisibility checks; see module comment)."""
+    if matmul not in ("padded", "sliced"):
+        raise ValueError(f"tp matmul must be 'padded' or 'sliced', got "
+                         f"{matmul!r}")
+    if size <= 1:
+        return ServeTPPlan(size=1, axis=axis, matmul=matmul)
+    attn = (not cfg.fused_qkv
+            and cfg.n_heads % size == 0
+            and cfg.n_kv_heads % size == 0
+            and cfg.d_model % size == 0)
+    mlp = (cfg.family != "moe"
+           and cfg.d_ff % size == 0
+           and cfg.d_model % size == 0)
+    return ServeTPPlan(size=size, axis=axis, attn=attn, mlp=mlp,
+                       matmul=matmul)
+
+
+_SERVE_TP_STACK: list = [None]
+
+
+class serve_tp(_StackedContext):
+    """Activates a ServeTPPlan for model code traced inside a shard_map
+    body: layers/transformer consult serve_tp_plan() to slice local head
+    counts and place the per-projection lane gathers."""
+
+    def __init__(self, plan: ServeTPPlan):
+        super().__init__()
+        self._stack = _SERVE_TP_STACK
+        self.plan = plan
+
+    def _frame(self):
+        return self.plan
+
+
+def serve_tp_plan() -> Optional[ServeTPPlan]:
+    return _SERVE_TP_STACK[-1]
+
+
+# serve-weight leaves that shard their lane (last) axis, by block
+_SERVE_ATTN_LANES = ("wq", "wk", "wv", "wo")
+_SERVE_MLP_LANES = ("w_gate", "w_up", "w_down", "c_fc", "c_proj", "b_fc")
+
+
+def _serve_lane_sharded(path: str, plan: ServeTPPlan) -> bool:
+    parts = path.split("/")
+    leaf = parts[-1]
+    block = parts[-2] if len(parts) >= 2 else ""
+    if block == "attn" and leaf in _SERVE_ATTN_LANES:
+        return plan.attn
+    # b_fc rides the mlp flag: it adds to the still-local ffn hidden
+    # (b_proj adds AFTER the output gather and stays replicated)
+    if block == "mlp" and leaf in _SERVE_MLP_LANES:
+        return plan.mlp
+    return False
+
+
+def serve_param_specs(params, plan: ServeTPPlan) -> Any:
+    """Pytree of PartitionSpec for serve-mode params: lane-only TP.
+
+    QTensor payloads shard their lane (last) axis -- K rows whole per
+    shard, so no super-block ever straddles devices; plain weights shard
+    the same way. Embeddings, norms, biases-after-gather, MoE stacks and
+    every non-divisible block replicate."""
+
+    def walk(node, prefix=""):
+        if isinstance(node, dict):
+            return {k: walk(v, f"{prefix}{k}/") for k, v in node.items()}
+        path = prefix[:-1]
+        shard = plan.size > 1 and _serve_lane_sharded(path, plan)
+        if isinstance(node, QTensor):
+            def qspec(arr):
+                if not shard:
+                    return P()
+                return P(*([None] * (len(arr.shape) - 1) + [plan.axis]))
+            return QTensor(node.variant, node.shape,
+                           {k: qspec(v) for k, v in node.data.items()})
+        if not shard or len(node.shape) < 2:
+            return P()
+        return P(*([None] * (len(node.shape) - 1) + [plan.axis]))
+
+    return walk(params)
+
+
+def serve_cache_specs(cache: Dict[str, Any],
+                      plan: ServeTPPlan) -> Dict[str, P]:
+    """Decode-cache / page-pool specs for TP serving: KV payloads (and
+    their int8 scales) shard over the kv_heads axis (always axis 3:
+    k/v are (L, B|n_pages, T|page, KH, Dh), scales (L, B, T, KH)) when
+    the plan shards attention; the position ring and recurrent entries
+    replicate."""
+    out: Dict[str, P] = {}
+    for k, v in cache.items():
+        if (plan.size > 1 and plan.attn
+                and k in ("k", "v", "k_scale", "v_scale")):
+            dims = [None] * len(v.shape)
+            dims[3] = plan.axis
+            out[k] = P(*dims)
+        else:
+            out[k] = P()
+    return out
+
+
+def lane_shard_qtensor(t: QTensor, index: int, n_shards: int) -> QTensor:
+    """The ``index``-th of ``n_shards`` lane shards of a packed QTensor:
+    every payload array sliced on its lane (last) axis, K rows whole.
+    This is exactly the local view a shard_map body sees under
+    serve_param_specs -- and, because packing runs along K, dequantizing
+    a shard is bit-identical to the matching columns of the unsharded
+    dequant (pinned by the test_kernels property suite)."""
+    K, N = t.shape
+    if N % n_shards:
+        raise ValueError(f"N={N} lanes not divisible into {n_shards} "
+                         "shards; lane-only TP requires N % shards == 0")
+    n = N // n_shards
+    lo = index * n
+    return QTensor(t.variant, (K, n),
+                   {k: v[..., lo:lo + n] for k, v in t.data.items()})
+
+
+def localize_serve_params(params, specs, size: int):
+    """Fix up QTensor aux shapes for the local views inside a shard_map
+    body: payload arrays arrive already sliced to N/size lanes, but the
+    static (K, N) aux rides in globally -- dequantize would reshape
+    against the wrong N. Plain arrays need nothing (shard_map hands them
+    over with local shapes)."""
+    if size <= 1:
+        return params
+
+    def fix(p, s):
+        if not isinstance(p, QTensor):
+            return p
+        sharded = any(len(sp) > 0 and sp[-1] is not None
+                      for sp in s.data.values())
+        if not sharded:
+            return p
+        K, N = p.shape
+        return QTensor(p.variant, (K, N // size), p.data)
+
+    return jax.tree.map(fix, params, specs,
+                        is_leaf=lambda x: isinstance(x, QTensor))

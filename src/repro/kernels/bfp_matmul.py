@@ -101,6 +101,18 @@ def bfp_matmul_pallas(x: jnp.ndarray, t: QTensor, *,
     Kt, N = t.shape
     assert K == Kt, (K, Kt)
     fmt = get_format(t.variant)
+    for name, arr in t.data.items():
+        # lane (last-axis) width must match the logical N: a QTensor whose
+        # payloads were lane-sharded (serving TP slices lanes per shard;
+        # K rows stay whole) but whose static aux shape still claims the
+        # global N would otherwise fail deep inside the unpack reshapes --
+        # shard_map callers must relocalize via
+        # distributed.sharding.localize_serve_params first
+        if arr.shape[-1] != N:
+            raise ValueError(
+                f"QTensor({t.variant}) payload {name!r} carries "
+                f"{arr.shape[-1]} lanes but aux shape says N={N}; "
+                "lane-sharded payloads need localize_serve_params")
     out_dtype = out_dtype or x.dtype
 
     bk = _choose_block_k(K, fmt.super_block, block_k)

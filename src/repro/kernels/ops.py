@@ -20,6 +20,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.quantize import QTensor, dequantize, quantize_q8_k
+from repro.distributed import sharding as SH
 from repro.kernels.bfp_matmul import bfp_matmul_pallas
 from repro.kernels.q8k_quant import q8k_quantize_pallas
 from repro.kernels import ref as _ref
@@ -62,6 +63,75 @@ def bfp_matmul(x: jnp.ndarray, t: QTensor, *, impl: str = "auto",
     else:
         raise ValueError(f"unknown impl {impl!r}")
     return out.reshape(lead + (t.shape[1],))
+
+
+def tp_gather_lanes(y: jnp.ndarray) -> jnp.ndarray:
+    """Assemble a tensor-parallel lane slice into the full, replicated
+    output with ONE collective per projection.
+
+    Inside a shard_map body with an active serve-TP plan, ``y`` is this
+    shard's (..., N/size) lane block (head outputs before the o-proj,
+    the ffn hidden before the down-proj, or a sliced-matmul output).
+    Shards own disjoint contiguous blocks in axis-index order, so a
+    tiled all_gather IS the assembled full output -- pure data movement,
+    bit-exact by definition, and it moves 1/size the bytes of the
+    equivalent zero-fill all-reduce formulation (each shard padding its
+    block into a full-width zero buffer and psumming; exact too, since
+    x + 0.0 == x, but full-width on the wire -- contrast a Megatron
+    row-parallel psum, which reorders the K reduction and is NOT exact).
+    Identity when no serve-TP plan is active, so single-device paths
+    never pay."""
+    plan = SH.serve_tp_plan()
+    if plan is None or plan.size == 1:
+        return y
+    return jax.lax.all_gather(y, plan.axis, axis=y.ndim - 1, tiled=True)
+
+
+def tp_embed_lanes(w):
+    """Zero-embed this shard's lane slice of a weight into its full-width
+    shape (the "padded" TP matmul datapath).
+
+    The projection then runs at the SAME gemm shape as the single-device
+    program -- CPU gemms round shape-dependently, so a lane-sliced dot's
+    columns can differ from the full dot's by an f32 ulp, and same-shape
+    is what makes TP serving bit-identical across mesh sizes BY
+    CONSTRUCTION: this shard's columns see exactly the single-device
+    values, off-shard columns multiply exact zeros. Works for plain
+    arrays and packed QTensors alike -- zero payload lanes dequantize to
+    exactly +-0.0 in every registered format (the lane-padding inertness
+    property test_kernels pins), so the embedded packed tensor is
+    numerically inert off-shard. The weight STORAGE stays sharded; only
+    the transient compute view is full-width (the price of guaranteed
+    parity -- the "sliced" datapath keeps per-shard FLOPs 1/size at
+    float-rounding fidelity)."""
+    plan = SH.serve_tp_plan()
+    if plan is None or plan.size == 1:
+        return w
+    i = jax.lax.axis_index(plan.axis)
+
+    def emb(a):
+        n = a.shape[-1]
+        buf = jnp.zeros(a.shape[:-1] + (n * plan.size,), a.dtype)
+        return jax.lax.dynamic_update_slice_in_dim(buf, a, i * n,
+                                                   a.ndim - 1)
+
+    if isinstance(w, QTensor):
+        K, n = w.shape
+        return QTensor(w.variant, (K, n * plan.size),
+                       {k: emb(v) for k, v in w.data.items()})
+    return emb(w)
+
+
+def tp_local_lanes(y: jnp.ndarray) -> jnp.ndarray:
+    """This shard's lane block of a full-width activation (inverse of
+    ``tp_gather_lanes``; used by the padded datapath to drop the off-shard
+    zero columns a ``tp_embed_lanes`` matmul produced)."""
+    plan = SH.serve_tp_plan()
+    if plan is None or plan.size == 1:
+        return y
+    n = y.shape[-1] // plan.size
+    i = jax.lax.axis_index(plan.axis)
+    return jax.lax.dynamic_slice_in_dim(y, i * n, n, y.ndim - 1)
 
 
 def ring_gather(arr: jnp.ndarray, slots: jnp.ndarray, *,

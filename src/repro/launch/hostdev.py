@@ -1,0 +1,36 @@
+"""Force N fake host devices for CPU tensor-parallel testing.
+
+XLA only reads ``--xla_force_host_platform_device_count`` when the
+backend initializes, so this must run BEFORE the process's first
+``import jax``. This module deliberately imports nothing but ``os`` --
+entry points import it first, call :func:`force_host_devices`, and only
+then import jax (see launch/serve.py and benchmarks/e2e_serve.py).
+"""
+import os
+
+_FLAG = "--xla_force_host_platform_device_count"
+
+
+def force_host_devices(n) -> None:
+    """Append ``--xla_force_host_platform_device_count=n`` to XLA_FLAGS.
+
+    ``n`` may be an int or a numeric string (e.g. straight from the
+    REPRO_FORCE_HOST_DEVICES env var); falsy values AND 0 (the natural
+    "disabled" spelling) are a no-op, anything non-numeric is a clear
+    error instead of a raw int() traceback. An already-forced count is
+    left alone so nesting entry points (a test runner exporting
+    XLA_FLAGS around a launcher that also asks) never stacks duplicate
+    flags."""
+    if n is None or n == "":
+        return
+    try:
+        count = int(n)
+    except (TypeError, ValueError):
+        raise ValueError(
+            f"force_host_devices needs an integer device count, got {n!r}")
+    if count <= 0:
+        return
+    cur = os.environ.get("XLA_FLAGS", "")
+    if any(tok.startswith(_FLAG) for tok in cur.split()):
+        return
+    os.environ["XLA_FLAGS"] = f"{cur} {_FLAG}={count}".strip()

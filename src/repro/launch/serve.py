@@ -4,11 +4,43 @@ analogue of the paper's evaluation.
 
   PYTHONPATH=src python -m repro.launch.serve --arch tinyllama-1.1b \
       --reduced --policy paper_llama_mix --tokens 32 --requests 8 --slots 4
+
+Tensor-parallel serving (``--tp N``) runs every jitted engine program
+through shard_map over a ("model",) mesh; on a CPU-only box add
+``--force-host-devices N`` (or XLA_FLAGS=--xla_force_host_platform_
+device_count=N) to split the host into N fake devices for testing.
 """
 from __future__ import annotations
 
 import argparse
+import os
+import sys
 import time
+
+
+from repro.launch.hostdev import force_host_devices
+
+
+def _forced_host_devices():
+    """--force-host-devices must take effect BEFORE jax initializes its
+    backends, so peek argv (and the env) ahead of the argparse run.
+    Prefix matching mirrors argparse's abbreviation rule (no other flag
+    starts with --force); non-numeric values are left for argparse's own
+    type=int error instead of crashing pre-init."""
+    for i, a in enumerate(sys.argv):
+        if not a.startswith("--force"):
+            continue
+        if "=" in a:
+            val = a.split("=", 1)[1]
+        elif i + 1 < len(sys.argv):
+            val = sys.argv[i + 1]
+        else:
+            continue
+        return val if val.lstrip("-").isdigit() else None
+    return os.environ.get("REPRO_FORCE_HOST_DEVICES")
+
+
+force_host_devices(_forced_host_devices())
 
 import jax
 import numpy as np
@@ -79,6 +111,23 @@ def main() -> None:
     ap.add_argument("--shared-prefix", type=int, default=0,
                     help="prepend this many shared system-prompt tokens "
                          "to every request (the prefix-cache workload)")
+    ap.add_argument("--tp", type=int, default=1,
+                    help="tensor-parallel degree: run the engine's jitted "
+                         "programs via shard_map over a ('model',) mesh "
+                         "of this many devices (lane-only sharding; "
+                         "greedy output stays token-identical to --tp 1)")
+    ap.add_argument("--tp-matmul", default="padded",
+                    choices=("padded", "sliced"),
+                    help="TP projection datapath: 'padded' keeps the "
+                         "single-device gemm shape per shard (bit-exact "
+                         "parity; weights/KV still sharded), 'sliced' "
+                         "runs true lane-sliced gemms (1/N FLOPs per "
+                         "shard, equal to within an f32 ulp)")
+    ap.add_argument("--force-host-devices", type=int, default=None,
+                    help="split the host platform into this many fake "
+                         "devices for CPU TP testing (applied before "
+                         "jax init; also honored from the "
+                         "REPRO_FORCE_HOST_DEVICES env var)")
     args = ap.parse_args()
 
     cfg = get_arch(args.arch, reduced=args.reduced)
@@ -105,6 +154,9 @@ def main() -> None:
     decode_chunk = args.chunk or args.tokens
     if args.drafter is not None:
         decode_chunk = max(decode_chunk, args.draft_k + 1)
+    if args.tp > 1:
+        print(f"tensor-parallel: tp={args.tp} ({args.tp_matmul} matmul) "
+              f"over {len(jax.devices())} visible devices")
     engine = Engine(cfg, qp, ServeConfig(
         max_new_tokens=args.tokens, temperature=args.temperature,
         eos_id=args.eos_id, cache_len=args.cache_len, seed=args.seed,
@@ -115,7 +167,8 @@ def main() -> None:
         draft_layers=args.draft_layers, draft_ngram=args.draft_ngram,
         draft_verify=args.draft_verify,
         prefix_cache=args.prefix_cache, prefix_page=args.prefix_page,
-        prefix_bytes=args.prefix_bytes))
+        prefix_bytes=args.prefix_bytes,
+        tp=args.tp, tp_matmul=args.tp_matmul))
 
     on_token = None
     if args.stream:

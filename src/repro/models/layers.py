@@ -23,7 +23,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.quantize import QTensor
-from repro.distributed.sharding import constrain
+from repro.distributed.sharding import constrain, serve_tp_plan
 from repro.kernels import ops as kops
 
 NEG_INF = -1e30
@@ -318,7 +318,53 @@ def decode_attention(q, k_cache, v_cache, slot_pos, q_pos, *,
 # MLPs
 # ---------------------------------------------------------------------------
 
+def _tp_mlp_active() -> bool:
+    """Serve-TP lane sharding for the ffn block (shard_map body only)."""
+    plan = serve_tp_plan()
+    return plan is not None and plan.size > 1 and plan.mlp
+
+
+def tp_lane_dense(x, w, out: str, *, impl="auto", interpret=False):
+    """Serve-TP projection against a lane-sharded weight (``w`` is this
+    shard's (..., K, N/size) lane slice; K rows are whole, so every
+    output column is a full-K dot).
+
+    ``out="local"``: return this shard's lane block, NO collective --
+    q/k/v (the block IS this shard's heads) and gate/up/fc (the ffn
+    hidden stays sharded through the elementwise activation).
+    ``out="full"``: replicated full output via ONE collective -- o-proj
+    and down-proj, whose consumers (residual adds, norms) need the
+    replicated activation.
+
+    Datapath per ServeTPPlan.matmul: "padded" zero-embeds the slice and
+    runs the single-device gemm shape (bit-identical columns by
+    construction -- the parity default); "sliced" runs the true
+    lane-sliced gemm (FLOPs and packed HBM traffic 1/size per shard,
+    equal to within an f32 ulp: CPU gemms round shape-dependently)."""
+    plan = serve_tp_plan()
+    if plan is None or plan.size == 1:
+        return dense(x, w, impl=impl, interpret=interpret)
+    if plan.matmul == "padded":
+        y = kops.tp_local_lanes(
+            dense(x, kops.tp_embed_lanes(w), impl=impl, interpret=interpret))
+    else:
+        y = dense(x, w, impl=impl, interpret=interpret)
+    return y if out == "local" else kops.tp_gather_lanes(y)
+
+
 def swiglu_mlp(x, p: Dict, *, impl="auto", interpret=False):
+    if _tp_mlp_active():
+        # serve TP (shard_map): gate/up emit this shard's ffn lanes, the
+        # activation stays local, then ONE exact all-reduce gathers the
+        # hidden (w_down keeps its K rows whole per shard) and one more
+        # gathers the down output -- see tp_lane_dense
+        g = tp_lane_dense(x, p["w_gate"], "local", impl=impl,
+                          interpret=interpret)
+        u = tp_lane_dense(x, p["w_up"], "local", impl=impl,
+                          interpret=interpret)
+        h = kops.tp_gather_lanes(jax.nn.silu(g) * u)
+        return tp_lane_dense(h, p["w_down"], "full", impl=impl,
+                             interpret=interpret)
     g = dense(x, p["w_gate"], impl=impl, interpret=interpret)
     u = dense(x, p["w_up"], impl=impl, interpret=interpret)
     # Megatron-style TP: ffn hidden sharded over model on the ff dim;
@@ -331,6 +377,19 @@ def swiglu_mlp(x, p: Dict, *, impl="auto", interpret=False):
 
 
 def gelu_mlp(x, p: Dict, *, impl="auto", interpret=False):
+    if _tp_mlp_active():
+        h = tp_lane_dense(x, p["c_fc"], "local", impl=impl,
+                          interpret=interpret)
+        if "b_fc" in p:
+            # b_fc is lane-sharded with c_fc, so the add stays local;
+            # b_proj adds after the output gather and is replicated
+            h = h + p["b_fc"].astype(h.dtype)
+        h = kops.tp_gather_lanes(jax.nn.gelu(h, approximate=True))
+        o = tp_lane_dense(h, p["c_proj"], "full", impl=impl,
+                          interpret=interpret)
+        if "b_proj" in p:
+            o = o + p["b_proj"].astype(o.dtype)
+        return o
     h = dense(x, p["c_fc"], impl=impl, interpret=interpret)
     if "b_fc" in p:
         h = h + p["b_fc"].astype(h.dtype)

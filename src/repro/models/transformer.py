@@ -178,14 +178,35 @@ def _logits(params, cfg: ModelConfig, h, impl="auto", interpret=False):
     return out.astype(jnp.float32)
 
 
+def _tp_attn_shards(cfg: ModelConfig) -> int:
+    """Serve-TP shard count over attention heads (1 when inactive)."""
+    plan = SH.serve_tp_plan()
+    return plan.size if (plan is not None and plan.attn) else 1
+
+
 def _qkv(a_in, lp, cfg: ModelConfig, impl, interpret):
     B, S, _ = a_in.shape
     H, KH, Dh = cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    # serve TP (shard_map): wq/wk/wv are lane-sharded, so this shard's
+    # projection output block IS its contiguous run of whole heads -- no
+    # collective here; the KV cache co-shards over kv_heads and attention
+    # below runs shape-generically on the local head counts (slicing the
+    # head BATCH dim keeps each head's sub-problem the same shape, so
+    # per-head attention math is bit-identical across tp degrees)
+    s = _tp_attn_shards(cfg)
+    H, KH = H // s, KH // s
     attn = lp["attn"]
     if cfg.fused_qkv:
         qkv = L.dense(a_in, attn["c_attn"], impl=impl, interpret=interpret)
         qkv = qkv + attn["b_attn"].astype(qkv.dtype)
         q, k, v = jnp.split(qkv, 3, axis=-1)
+    elif s > 1:
+        q = L.tp_lane_dense(a_in, attn["wq"], "local", impl=impl,
+                            interpret=interpret)
+        k = L.tp_lane_dense(a_in, attn["wk"], "local", impl=impl,
+                            interpret=interpret)
+        v = L.tp_lane_dense(a_in, attn["wv"], "local", impl=impl,
+                            interpret=interpret)
     else:
         q = L.dense(a_in, attn["wq"], impl=impl, interpret=interpret)
         k = L.dense(a_in, attn["wk"], impl=impl, interpret=interpret)
@@ -202,15 +223,22 @@ def _qkv(a_in, lp, cfg: ModelConfig, impl, interpret):
 def _attn_out(o, lp, cfg, impl, interpret):
     B, S = o.shape[:2]
     o = SH.constrain(o, "dp", None, "model", None)
-    o = o.reshape(B, S, cfg.n_heads * cfg.d_head)
+    o = o.reshape(B, S, o.shape[2] * o.shape[3])    # local heads * Dh
     attn = lp["attn"]
+    if _tp_attn_shards(cfg) > 1:
+        # serve TP: wo keeps its K rows (all heads) whole per shard, so
+        # gather the head outputs (exact zero-fill all-reduce), then one
+        # more all-reduce assembles wo's d_model lanes
+        o = kops.tp_gather_lanes(o)
+        out = L.tp_lane_dense(o, attn["wo"], "full", impl=impl,
+                              interpret=interpret)
+        return SH.constrain(out, "dp", None, None)
     if cfg.fused_qkv:
         out = L.dense(o, attn["c_proj"], impl=impl, interpret=interpret)
         out = SH.constrain(out, "dp", None, None)
         return out + attn["b_proj"].astype(out.dtype)
-    return SH.constrain(
-        L.dense(o, attn["wo"], impl=impl, interpret=interpret),
-        "dp", None, None)
+    out = L.dense(o, attn["wo"], impl=impl, interpret=interpret)
+    return SH.constrain(out, "dp", None, None)
 
 
 def _seq_attention(q, k, v, cfg: ModelConfig, S: int):

@@ -43,6 +43,21 @@ bottleneck is not the MatMul but host round-trips and under-filled batches
   makes greedy speculative output BIT-identical to plain decode;
   ``"batched"`` scores the block in one masked prefill-style forward
   (throughput datapath, equal to within float rounding).
+* ``tensor parallelism`` (``tp=N``): every jitted program above runs via
+  ``shard_map`` over a ("model",) mesh. Weights shard lane-only (packed
+  QTensor payload lanes / attention heads / the ffn hidden; K rows stay
+  whole per shard so super-blocks never straddle devices), the KV cache
+  and prefix-cache page pool shard over kv_heads, and each projection
+  pays ONE collective (a tiled lane all-gather of disjoint blocks --
+  exact). The default "padded" matmul datapath keeps every
+  gemm at the single-device program shape (off-shard lanes zero-embedded
+  -- exact), so serving output is TOKEN-IDENTICAL across tp degrees, in
+  fp32 and quantized, with speculation and the prefix cache on
+  (tests/test_tp_serving.py); "sliced" trades that bitwise parity for
+  1/N per-shard FLOPs. Host-side scheduling is mesh-oblivious; the
+  ``generate_reference``/``generate_spec_reference`` oracles run their
+  plain jitted programs over the sharded params via GSPMD (correct, but
+  compare them at tp=1 where they are the pinned bitwise oracle).
 * ``prefix caching`` (``prefix_cache=True``): a host-side radix tree over
   token-ID prefixes maps to a refcounted device page pool
   (serving/prefix_cache.py). Admission matches each queued request's
@@ -69,11 +84,19 @@ from typing import Any, Callable, Dict, List, Optional
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import Mesh
 
 from repro.configs.base import ModelConfig
+from repro.distributed import sharding as SH
 from repro.models import transformer as T
 from repro.serving.drafters import make_drafter
 from repro.serving.prefix_cache import PrefixCache
+
+# jax.shard_map only exists as a top-level API in newer jax releases
+if hasattr(jax, "shard_map"):
+    _shard_map = jax.shard_map
+else:
+    from jax.experimental.shard_map import shard_map as _shard_map
 
 # families whose decode state is a KV ring -> batched chunked prefill;
 # everything else (recurrent state) prefills at exact length per request
@@ -107,6 +130,20 @@ class ServeConfig:
     prefix_page: int = 16               # positions per page (clamped to a
                                         # divisor of the KV ring length)
     prefix_bytes: int = 64 << 20        # device byte budget for the pool
+    # tensor parallelism: run every jitted serving program via shard_map
+    # over a ("model",) mesh of this many devices. Lane-only sharding
+    # (packed payload lanes / heads / ffn hidden over the mesh, K rows
+    # whole per shard) + one exact lane all-gather per projection
+    # keeps greedy output token-identical across tp degrees (see
+    # distributed/sharding.py). CPU testing: export
+    # XLA_FLAGS=--xla_force_host_platform_device_count=N first.
+    tp: int = 1
+    tp_matmul: str = "padded"           # "padded" (bit-exact vs tp=1: the
+                                        # gemm keeps the single-device
+                                        # shape; weights/cache sharded,
+                                        # FLOPs replicated) | "sliced"
+                                        # (1/size FLOPs per shard, equal
+                                        # to within an f32 ulp)
 
 
 @dataclasses.dataclass
@@ -130,7 +167,7 @@ class Request:
 class Engine:
     def __init__(self, cfg: ModelConfig, params, serve_cfg: ServeConfig):
         for field in ("max_slots", "decode_chunk", "max_new_tokens",
-                      "cache_len", "prefill_batch", "prefill_chunk"):
+                      "cache_len", "prefill_batch", "prefill_chunk", "tp"):
             if getattr(serve_cfg, field) < 1:
                 raise ValueError(f"ServeConfig.{field} must be >= 1, got "
                                  f"{getattr(serve_cfg, field)}")
@@ -142,6 +179,38 @@ class Engine:
         # write a cache_len-long update into a window-long ring
         self._T = T.attn_cache_len(cfg, serve_cfg.cache_len)
         self._kv_family = cfg.family in _KV_FAMILIES
+        # -- tensor parallelism: a ("model",) mesh every jitted serving
+        # program runs over via shard_map. Weights lane-shard (K whole
+        # per shard -- packed super-blocks never straddle devices), the
+        # KV cache shards over kv_heads, and each projection's output is
+        # assembled by one exact lane all-gather, so greedy output
+        # stays token-identical across tp degrees.
+        self._mesh = None
+        self._plan = SH.make_serve_tp_plan(cfg, 1,
+                                           matmul=serve_cfg.tp_matmul)
+        if serve_cfg.tp > 1:
+            if not self._kv_family:
+                raise ValueError(
+                    f"tensor-parallel serving needs a KV-ring family "
+                    f"(got {cfg.family!r}); recurrent state sharding is "
+                    "a training-side concern (distributed/sharding.py)")
+            devs = jax.devices()
+            if len(devs) < serve_cfg.tp:
+                raise ValueError(
+                    f"tp={serve_cfg.tp} needs {serve_cfg.tp} devices but "
+                    f"jax sees {len(devs)}; on CPU export XLA_FLAGS="
+                    "--xla_force_host_platform_device_count="
+                    f"{serve_cfg.tp} before importing jax")
+            self._plan = SH.make_serve_tp_plan(cfg, serve_cfg.tp,
+                                               matmul=serve_cfg.tp_matmul)
+            self._mesh = Mesh(np.asarray(devs[:serve_cfg.tp]),
+                              (self._plan.axis,))
+            self._pspecs = SH.serve_param_specs(params, self._plan)
+            self.params = jax.device_put(
+                params, SH.named(self._pspecs, self._mesh))
+            ctmpl = jax.eval_shape(
+                lambda: T.init_cache(cfg, self._B, self._T))
+            self._cspecs = SH.serve_cache_specs(ctmpl, self._plan)
         self._drafter = None
         if serve_cfg.drafter is not None:
             if not self._kv_family:
@@ -167,8 +236,14 @@ class Engine:
                     f"draft_verify must be 'scan' or 'batched', got "
                     f"{serve_cfg.draft_verify!r}")
             self._drafter = make_drafter(serve_cfg.drafter, cfg, serve_cfg)
-            self._spec_chunk = jax.jit(self._spec_chunk_impl,
-                                       donate_argnums=(1,))
+            P0 = jax.sharding.PartitionSpec()
+            dspec = jax.tree.map(lambda _: P0,
+                                 self._drafter.init_state_np(self._B))
+            self._spec_chunk = self._tp_jit(
+                self._spec_chunk_impl,
+                rest_in=("cache",) + (P0,) * 7 + (dspec,),
+                out_specs=("cache",) + (P0,) * 6 + (dspec,) + (P0,) * 3,
+                donate=(1,))
             self._verify = jax.jit(self._verify_impl)
             self._propose_ref = jax.jit(
                 lambda params, cache, ds, tok, pos, act:
@@ -205,16 +280,57 @@ class Engine:
         # never alias the (L,B,T,..) output, they'd just warn)
         self._admit_caches = jax.jit(self._admit_caches_impl,
                                      donate_argnums=(0,))
-        self._prefill_chunk = jax.jit(self._prefill_chunk_impl,
-                                      donate_argnums=(1, 5))
+        P0 = jax.sharding.PartitionSpec()
+        self._prefill_chunk = self._tp_jit(
+            self._prefill_chunk_impl, rest_in=("cache",) + (P0,) * 5,
+            out_specs=("cache", P0), donate=(1, 5))
         self._sample_first = jax.jit(self._sample_first_impl)
         self._bind_slots = jax.jit(self._bind_slots_impl)
-        self._decode_chunk = jax.jit(self._decode_chunk_impl,
-                                     donate_argnums=(1,))
+        self._decode_chunk = self._tp_jit(
+            self._decode_chunk_impl, rest_in=("cache",) + (P0,) * 6,
+            out_specs=("cache",) + (P0,) * 6, donate=(1,))
         self._ref_step = jax.jit(self._ref_step_impl)
         self._cache = None
         self.stats: Dict[str, float] = {}
         self._reset()
+
+    def _tp_jit(self, fn, rest_in, out_specs, donate=()):
+        """jit, or jit(shard_map(...)) when a TP mesh is configured.
+
+        ``fn`` must take ``params`` first; ``rest_in``/``out_specs`` are
+        PartitionSpec pytrees for the remaining args/outputs, with the
+        sentinel string "cache" standing for the decode-cache spec tree.
+        Inside the shard the params pytree holds lane-local views
+        (QTensor aux shapes relocalized to the lanes this shard owns) and
+        the serve-TP plan is active, so layer code slices its local head
+        counts and places the per-projection lane gathers."""
+        if self._mesh is None:
+            return jax.jit(fn, donate_argnums=donate)
+        plan, pspecs = self._plan, self._pspecs
+        sub = lambda s: self._cspecs if isinstance(s, str) else s
+        rest_in = tuple(sub(s) for s in rest_in)
+        out_specs = tuple(sub(s) for s in out_specs)
+
+        def body(params, *rest):
+            params = SH.localize_serve_params(params, pspecs, plan.size)
+            with SH.serve_tp(plan):
+                return fn(params, *rest)
+
+        return jax.jit(
+            _shard_map(body, mesh=self._mesh,
+                       in_specs=(pspecs,) + rest_in,
+                       out_specs=out_specs, check_rep=False),
+            donate_argnums=donate)
+
+    def _new_cache(self, B: int):
+        """Fresh decode cache for ``B`` slots, placed with the TP cache
+        sharding (KV payloads over kv_heads) when a mesh is configured so
+        donation aliases shard-to-shard instead of warning."""
+        cache = T.init_cache(self.cfg, B, self._T)
+        if self._mesh is not None:
+            cache = jax.device_put(cache,
+                                   SH.named(self._cspecs, self._mesh))
+        return cache
 
     # -- jitted internals ----------------------------------------------------
     def _sample(self, logits, key):
@@ -741,6 +857,12 @@ class Engine:
         if self._pool is None:
             self._pool = T.cache_page_pool(self.cfg, self._prefix.capacity,
                                            self._page)
+            if self._mesh is not None:
+                # page payloads co-shard with the ring (kv_heads axis) so
+                # page gather/scatter stays collective-free under GSPMD
+                pspec = SH.serve_cache_specs(self._pool, self._plan)
+                self._pool = jax.device_put(
+                    self._pool, SH.named(pspec, self._mesh))
 
     def _admit_group(self, slots: List[int], reqs: List[Request]) -> None:
         """Prefill ``reqs`` as one right-padded batch and scatter all their
@@ -780,8 +902,8 @@ class Engine:
             subs.append(sub)
         subs += [subs[-1]] * (Gp - G)               # dummies: never emitted
         if self._cache is None:
-            self._cache = T.init_cache(self.cfg, self._B, self._T)
-        gcache = T.init_cache(self.cfg, Gp, self._T)
+            self._cache = self._new_cache(self._B)
+        gcache = self._new_cache(Gp)
         if pjobs:
             gcache = self._scatter_prefix_pages(gcache, pjobs)
         last_logits = jnp.zeros((Gp, self.cfg.vocab_size), jnp.float32)
@@ -844,7 +966,7 @@ class Engine:
         first, slot_cache = self._prefill(self.params, jnp.asarray(toks),
                                           jnp.asarray(n, jnp.int32), sub)
         if self._cache is None:
-            self._cache = T.init_cache(self.cfg, self._B, self._T)
+            self._cache = self._new_cache(self._B)
         self._cache = self._admit_cache(self._cache, slot_cache,
                                         jnp.asarray(slot, jnp.int32))
         first_tok = int(first)                    # 1 host sync / admission

@@ -68,14 +68,10 @@ def pairs():
                 temp=mk(temperature=0.9, seed=11))
 
 
-@settings(max_examples=6, deadline=None)
-@given(seed=st.integers(0, 2**20), mode=st.sampled_from(
-    ["greedy", "eos", "temp"]))
-def test_fuzz_schedule_parity(pairs, seed, mode):
-    cfg = pairs["cfg"]
-    batched, seq = pairs[mode]
+def _drive_waves(cfg, batched, seq, rng):
+    """Shared wave driver: identical randomized submit/cancel schedules
+    into two engines; every wave must agree token-for-token."""
     has_drafter = batched.scfg.drafter is not None
-    rng = np.random.default_rng(seed)
     for _wave in range(int(rng.integers(1, 3))):
         n = int(rng.integers(1, 9))
         ids_b, ids_s = [], []
@@ -98,6 +94,15 @@ def test_fuzz_schedule_parity(pairs, seed, mode):
         assert set(res_b) == set(ids_b)
         for rid in ids_b:
             assert len(res_b[rid]) <= MAX_NEW
+
+
+@settings(max_examples=6, deadline=None)
+@given(seed=st.integers(0, 2**20), mode=st.sampled_from(
+    ["greedy", "eos", "temp"]))
+def test_fuzz_schedule_parity(pairs, seed, mode):
+    cfg = pairs["cfg"]
+    batched, seq = pairs[mode]
+    _drive_waves(cfg, batched, seq, np.random.default_rng(seed))
 
 
 @settings(max_examples=5, deadline=None)
@@ -185,6 +190,44 @@ def test_cancel_between_prefill_chunks_of_long_prompt(pairs):
     assert res_b[ids_b["a"]] == res_s[ids_s["a"]]
     assert res_b[ids_b["c"]] == res_s[ids_s["c"]]
     assert len(res_b[ids_b["a"]]) == MAX_NEW
+
+
+# -- tensor-parallel axis: the same randomized schedules, but the
+# batched engine runs under a shard_map TP mesh and is compared against
+# the single-device one-request-at-a-time oracle. Needs forced host
+# devices (XLA_FLAGS=--xla_force_host_platform_device_count=N before
+# jax initializes); skips under the plain 1-device tier-1 run, runs in
+# the forced-4-device CI job and test_tp_serving's acceptance command.
+
+@pytest.fixture(scope="module")
+def tp_pairs():
+    """(tp=2 batched, tp=1 sequential) engines per mesh size: the TP
+    padded datapath is bit-identical to single-device, so every schedule
+    must agree token-for-token -- speculation toggles included."""
+    if len(jax.devices()) < 2:
+        pytest.skip("needs >= 2 devices (XLA_FLAGS="
+                    "--xla_force_host_platform_device_count)")
+    cfg = get_arch("tinyllama-1.1b", reduced=True)
+    params = T.init_params(cfg, jax.random.PRNGKey(0))
+    base = dict(max_new_tokens=MAX_NEW, cache_len=64, decode_chunk=4,
+                max_slots=3, prefill_bucket=4, prefill_chunk=8,
+                drafter="ngram", draft_k=3)
+    sizes = [tp for tp in (2, 4) if tp <= len(jax.devices())]
+    return dict(cfg=cfg, sizes=sizes, engines={
+        tp: (Engine(cfg, params, ServeConfig(prefill_batch=3, tp=tp,
+                                             **base)),
+             Engine(cfg, params, ServeConfig(prefill_batch=1, **base)))
+        for tp in sizes})
+
+
+@settings(max_examples=4, deadline=None)
+@given(seed=st.integers(0, 2**20), size_idx=st.integers(0, 1))
+def test_fuzz_schedule_parity_under_tp(tp_pairs, seed, size_idx):
+    cfg = tp_pairs["cfg"]
+    sizes = tp_pairs["sizes"]
+    tp = sizes[min(size_idx, len(sizes) - 1)]
+    batched, seq = tp_pairs["engines"][tp]
+    _drive_waves(cfg, batched, seq, np.random.default_rng(seed))
 
 
 @settings(max_examples=4, deadline=None)

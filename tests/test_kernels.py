@@ -191,6 +191,46 @@ def test_property_packed_lane_padding_is_inert(variant, nsb, n, pad, seed):
     np.testing.assert_array_equal(o_pad[:, n:], 0.0)
 
 
+@settings(max_examples=16, deadline=None)
+@given(variant=st.sampled_from(VARIANTS),
+       nsb=st.integers(1, 3), n=st.integers(1, 200),
+       nshards=st.sampled_from([2, 4]), seed=st.integers(0, 2**16))
+def test_property_lane_shard_dequant_bitexact(variant, nsb, n, nshards,
+                                              seed):
+    """Lane-only tensor parallelism's layout invariant, for EVERY
+    registered format: slicing a packed QTensor's payload arrays on the
+    lane (N) axis -- K rows whole, so no super-block ever straddles
+    shards -- and dequantizing each shard reproduces EXACTLY the
+    corresponding columns of the unsharded dequant, bit for bit. Ragged
+    N is zero-padded up to a shard multiple first (exactly what the
+    fused kernel's lane padding does), and the padded lanes must
+    dequantize to +/-0.0 on whichever shard they land. This is what
+    makes a TP shard's packed weights mathematically THE columns of the
+    whole weight, the foundation of the serving parity guarantee."""
+    K = 256 * nsb
+    _, w = _mk(seed, 1, K, n)
+    t = Q.quantize(variant, w)
+    full = np.asarray(Q.dequantize(t, dtype=np.float32))
+    pad = (-n) % nshards                    # ragged N -> shard multiple
+    if pad:
+        t = Q.QTensor(t.variant, (K, n + pad),
+                      {k: jnp.pad(v, ((0, 0), (0, pad)))
+                       for k, v in t.data.items()})
+        full = np.concatenate([full, np.zeros((K, pad), np.float32)], 1)
+    from repro.distributed.sharding import lane_shard_qtensor
+    Np = n + pad
+    chunk = Np // nshards
+    for i in range(nshards):
+        sh = lane_shard_qtensor(t, i, nshards)
+        assert sh.shape == (K, chunk)
+        got = np.asarray(Q.dequantize(sh, dtype=np.float32))
+        np.testing.assert_array_equal(
+            got, full[:, i * chunk:(i + 1) * chunk])
+    # shard boundaries compose: re-concatenating every shard's dequant
+    # is the unsharded dequant, so padded lanes decoded to exact zeros
+    np.testing.assert_array_equal(full[:, n:], 0.0)
+
+
 @settings(max_examples=8, deadline=None)
 @given(m=st.integers(1, 20), nsb=st.integers(1, 3),
        masked=st.integers(0, 1), seed=st.integers(0, 2**16))
