@@ -66,7 +66,8 @@ DRAFT_K = 4
 
 
 def _bench_one(cfg, params, depth: int, drafter: str = None,
-               prefix: bool = None, tp: int = 1) -> dict:
+               prefix: bool = None, tp: int = 1,
+               tp_matmul: str = "padded") -> dict:
     """One engine sweep. ``prefix`` selects the shared-system-prompt
     workload (every request = SHARED_PREFIX_LEN shared tokens + a unique
     suffix): False runs it with the prefix cache OFF (the ttft baseline),
@@ -78,7 +79,8 @@ def _bench_one(cfg, params, depth: int, drafter: str = None,
         decode_chunk=NEW_TOKENS,
         cache_len=64 if prefix is not None else 32, prefill_bucket=8,
         prefill_batch=slots, drafter=drafter, draft_k=DRAFT_K,
-        prefix_cache=bool(prefix), prefix_page=8, tp=tp))
+        prefix_cache=bool(prefix), prefix_page=8, tp=tp,
+        tp_matmul=tp_matmul))
     rng = np.random.default_rng(0)
     if prefix is not None:
         shared = list(rng.integers(0, cfg.vocab_size, SHARED_PREFIX_LEN))
@@ -168,17 +170,25 @@ def run(out_path: str = None, smoke: bool = False) -> dict:
              f"rounds={rec['spec_rounds']} "
              f"ttft_s={rec['ttft_s']}")
     # tensor-parallel rows: same workload/params at tp=1 vs tp=2 under
-    # the shard_map engine (padded datapath: token-identical output,
-    # replicated FLOPs -- on real multi-chip hardware the sliced
-    # datapath is the perf path; these rows track the TP engine's
-    # overhead). Skipped when the backend exposes a single device.
+    # the shard_map engine, one row per (tp, matmul datapath) so
+    # baselines compare like-for-like:
+    #   padded     -- token-identical output, replicated FLOPs (tracks
+    #                 the TP engine's overhead)
+    #   sliced     -- lane-sliced gemms, 1/size FLOPs, f32-ulp fidelity
+    #   sliced_row -- sliced + row-parallel o-/down-proj (half the
+    #                 collectives per layer; activation-ulp fidelity) --
+    #                 the throughput datapath
+    # Skipped when the backend exposes a single device.
     if not smoke and len(jax.devices()) >= 2:
-        for tp in (1, 2):
-            rec = _bench_one(cfg, qp, TP_DEPTH, tp=tp)
-            rec["params"] = f"fbfq_mixed_q2q3_tp{tp}"
+        tp_rows = [(1, "padded")] + [(2, mm) for mm in
+                                     ("padded", "sliced", "sliced_row")]
+        for tp, mm in tp_rows:
+            rec = _bench_one(cfg, qp, TP_DEPTH, tp=tp, tp_matmul=mm)
+            rec["params"] = f"fbfq_mixed_q2q3_tp{tp}_{mm}"
             rec["tp"] = tp
+            rec["tp_matmul"] = mm
             results["runs"].append(rec)
-            emit(f"e2e_serve_tp{tp}_d{TP_DEPTH}",
+            emit(f"e2e_serve_tp{tp}_{mm}_d{TP_DEPTH}",
                  rec["decode_s"] / max(rec["tokens"], 1) * 1e6,
                  f"tok/s={rec['tok_per_s']} "
                  f"prefill_tok/s={rec['prefill_tok_per_s']} "

@@ -11,6 +11,7 @@ import numpy as np
 
 from repro.core.formats import get_format
 from repro.core.quantize import quantize
+from repro.distributed.sharding import lane_shard_qtensor
 from repro.kernels import ops, ref
 from repro.kernels.bfp_matmul import bfp_matmul_pallas
 from benchmarks.common import emit, time_jitted
@@ -39,6 +40,24 @@ def smoke() -> None:
     err = np.abs(o_pal - o_ref).max() / (np.abs(o_ref).max() + 1e-9)
     assert err < 1e-5, err
     emit("kernel_smoke_q3_k", 0.0, f"pallas_vs_ref_rel_err={err:.2e}")
+
+    # fused sliced-TP gemm: each lane shard's packed payload goes
+    # straight through the fused dequant-matmul and must reproduce the
+    # matching columns of the full-matrix run BIT-exactly (packing runs
+    # along K, so lane slicing never crosses a quantization group --
+    # this is the invariant the sliced serving datapath rides on)
+    shards = 2
+    worst = 0.0
+    for i in range(shards):
+        tl = lane_shard_qtensor(t, i, shards)
+        o_sh = np.asarray(bfp_matmul_pallas(
+            x, tl, interpret=True, compute_dtype=jnp.float32,
+            out_dtype=jnp.float32, block_m=16, block_n=64, block_k=256))
+        n = N // shards
+        worst = max(worst, np.abs(o_sh - o_pal[:, i*n:(i+1)*n]).max())
+    assert worst == 0.0, worst
+    emit("kernel_smoke_sliced_q3_k", 0.0,
+         f"shard_vs_full_maxabs={worst:.1e} shards={shards}")
 
 
 def run() -> None:

@@ -30,12 +30,52 @@ gate ``prefix_hit_rate > 0`` whenever the baseline row hits: the radix
 tree matching is deterministic for that workload, so a zero hit rate
 means the prefix cache structurally stopped working (their ttft rides
 the ordinary ttft gate).
+
+Tensor-parallel rows additionally carry a SAME-RUN structural gate
+(``check_tp_sliced``): whenever a sweep produced the forced-host-device
+TP rows, every tp>1 sliced datapath (``sliced`` / ``sliced_row``) must
+beat the same run's tp=1 row on decode tok/s, and at least one of them
+must beat it on prefill tok/s too -- the reason those datapaths exist.
+Comparing rows from ONE run cancels machine drift, so this gate is
+tight where the cross-run gates must be loose; it is skipped entirely
+on 1-device sweeps that produce no TP rows.
 """
 from __future__ import annotations
 
 import argparse
 import json
 import sys
+
+
+def check_tp_sliced(new: dict) -> int:
+    """Same-run structural gate on the TP datapaths: sliced must be the
+    fast path. Every tp>1 ``sliced``/``sliced_row`` row must beat the
+    run's tp=1 row on decode tok/s, and at least one must beat it on
+    prefill tok/s. Returns the number of failures (0 when the sweep has
+    no TP rows -- e.g. CI's 1-device smoke sweep)."""
+    tp_rows = [r for r in new.get("runs", []) if "tp_matmul" in r]
+    base1 = [r for r in tp_rows if r.get("tp") == 1]
+    sliced = [r for r in tp_rows
+              if r.get("tp", 1) > 1 and "sliced" in r["tp_matmul"]]
+    if not base1 or not sliced:
+        return 0
+    t1 = base1[0]
+    fails = 0
+    for r in sliced:
+        ok = r["tok_per_s"] > t1["tok_per_s"]
+        fails += not ok
+        print(f"{'OK ' if ok else 'FAIL'} tp{r['tp']} {r['tp_matmul']:>10} "
+              f"decode {r['tok_per_s']:>8.1f} vs tp1 {t1['tok_per_s']:>8.1f}")
+    best = max(sliced, key=lambda r: r["prefill_tok_per_s"])
+    ok = best["prefill_tok_per_s"] > t1["prefill_tok_per_s"]
+    fails += not ok
+    print(f"{'OK ' if ok else 'FAIL'} tp{best['tp']} {best['tp_matmul']:>10} "
+          f"prefill {best['prefill_tok_per_s']:>8.1f} vs tp1 "
+          f"{t1['prefill_tok_per_s']:>8.1f}")
+    if fails:
+        print(f"REGRESSION: sliced TP stopped beating tp1 "
+              f"({fails} structural failure(s))")
+    return fails
 
 
 def compare(new: dict, baseline: dict, tol: float, tol_prefill: float,
@@ -99,10 +139,12 @@ def compare(new: dict, baseline: dict, tol: float, tol_prefill: float,
         print("ERROR: no (params, queue_depth) pairs in common with the "
               "baseline -- wrong file?")
         return 2
-    if failures:
-        print(f"REGRESSION: {failures} exceeded tolerances "
-              f"(decode {tol:.0%}, prefill {tol_prefill:.0%}, "
-              f"ttft +{tol_ttft:.0%})")
+    tp_fails = check_tp_sliced(new)
+    if failures or tp_fails:
+        if failures:
+            print(f"REGRESSION: {failures} exceeded tolerances "
+                  f"(decode {tol:.0%}, prefill {tol_prefill:.0%}, "
+                  f"ttft +{tol_ttft:.0%})")
         return 1
     print(f"all {compared} compared runs within tolerance "
           f"(decode {tol:.0%}, prefill {tol_prefill:.0%}, "

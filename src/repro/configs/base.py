@@ -66,7 +66,7 @@ class ModelConfig:
 
     # runtime knobs
     dtype: str = "bfloat16"
-    attn_impl: str = "auto"         # naive | blockwise | auto
+    attn_impl: str = "auto"         # naive | blockwise | fused | auto
     attn_q_chunk: int = 1024
     attn_kv_chunk: int = 1024
     kernel_impl: str = "auto"       # pallas | xla | auto (see kernels/ops.py)

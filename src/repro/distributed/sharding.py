@@ -25,6 +25,7 @@ import jax
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro.core.formats import get_format
 from repro.core.quantize import QTensor
 
 
@@ -424,17 +425,64 @@ class ServeTPPlan:
     #     default.
     #   "sliced" -- true lane-sliced gemm: per-shard FLOPs and packed
     #     HBM traffic scale 1/size (the throughput datapath), output
-    #     equal to within float rounding only.
+    #     equal to within an f32 ulp of the tp=1 accumulation.
+    #   "sliced_row" -- "sliced" plus row-parallel o-/down-projections
+    #     (attn_row / mlp_row below): HALF the collectives per layer at
+    #     narrower wire width. Splitting the K reduction across shards
+    #     cannot bit-match a full-K dot once activations round to bf16
+    #     at layer boundaries, so this datapath promises agreement only
+    #     to ~a few ULPS OF THE ACTIVATION DTYPE (exactly the f32-ulp
+    #     envelope when activations are f32); its own tolerance tests
+    #     pin both regimes.
     matmul: str = "padded"
+    # row-parallel projections ("sliced_row" only; "" = off, keep the
+    # lane-only gather dataflow). When set, the down-proj (mlp_row) and
+    # o-proj (attn_row) take their input DIRECTLY from this shard's local
+    # lanes (the ffn hidden / this shard's head outputs), compute a
+    # partial-K product, and assemble the replicated output with ONE
+    # ``psum`` -- the classic Megatron column/row pairing. This halves
+    # the collectives per layer (2 instead of 4) and removes the widest
+    # gather (the d_ff-sized hidden). Modes:
+    #   "packed"  -- the weight's packed K rows co-shard with its input
+    #     (K % (size * super_block) == 0, so every shard holds whole
+    #     super-blocks; plain arrays only need K % size == 0).
+    #   "dequant" -- the packed payload stays REPLICATED (these are
+    #     2.6-3.6 bit tensors) and each shard slices its K rows out of
+    #     the dequantized weight: per-shard gemm FLOPs still 1/size,
+    #     dequant replicated. The fallback when super-block alignment
+    #     fails (e.g. the reduced bench model's wo at K = 256, tp 2).
+    attn_row: str = ""
+    mlp_row: str = ""
+
+
+def _row_mode(leaf, size: int) -> str:
+    """Row-parallel mode for one down/o-proj weight leaf (see
+    ServeTPPlan.attn_row): "packed" when its K rows shard into whole
+    super-blocks, "dequant" for packed tensors that cannot, "" when even
+    a plain array's K does not divide."""
+    if isinstance(leaf, QTensor):
+        K = leaf.shape[0]
+        sb = get_format(leaf.variant).super_block
+        return "packed" if K % (size * sb) == 0 else "dequant"
+    K = leaf.shape[-2]
+    return "packed" if K % size == 0 else ""
 
 
 def make_serve_tp_plan(cfg, size: int, axis: str = "model",
-                       matmul: str = "padded") -> ServeTPPlan:
+                       matmul: str = "padded",
+                       params=None) -> ServeTPPlan:
     """Shard-vs-replicate decisions for serving ``cfg`` at tp degree
-    ``size`` (divisibility checks; see module comment)."""
-    if matmul not in ("padded", "sliced"):
-        raise ValueError(f"tp matmul must be 'padded' or 'sliced', got "
-                         f"{matmul!r}")
+    ``size`` (divisibility checks; see module comment).
+
+    ``params`` (optional, the serve-time parameter pytree) enables the
+    "sliced_row" datapath's row-parallel down/o-projections: whether a
+    packed weight's K rows can shard depends on its variant's
+    super-block, so the decision is per-leaf and needs the real tensors.
+    Without params (or under "padded"/"sliced") the plan keeps the
+    lane-only dataflow."""
+    if matmul not in ("padded", "sliced", "sliced_row"):
+        raise ValueError(f"tp matmul must be 'padded', 'sliced' or "
+                         f"'sliced_row', got {matmul!r}")
     if size <= 1:
         return ServeTPPlan(size=1, axis=axis, matmul=matmul)
     attn = (not cfg.fused_qkv
@@ -444,8 +492,21 @@ def make_serve_tp_plan(cfg, size: int, axis: str = "model",
     mlp = (cfg.family != "moe"
            and cfg.d_ff % size == 0
            and cfg.d_model % size == 0)
+    attn_row = mlp_row = ""
+    if matmul == "sliced_row" and isinstance(params, dict):
+        layers = params.get("layers")
+        if attn and isinstance(layers, dict) \
+                and isinstance(layers.get("attn"), dict) \
+                and "wo" in layers["attn"]:
+            attn_row = _row_mode(layers["attn"]["wo"], size)
+        if mlp and isinstance(layers, dict) \
+                and isinstance(layers.get("mlp"), dict):
+            mp = layers["mlp"]
+            down = mp.get("w_down", mp.get("c_proj"))
+            if down is not None:
+                mlp_row = _row_mode(down, size)
     return ServeTPPlan(size=size, axis=axis, attn=attn, mlp=mlp,
-                       matmul=matmul)
+                       matmul=matmul, attn_row=attn_row, mlp_row=mlp_row)
 
 
 _SERVE_TP_STACK: list = [None]
@@ -487,27 +548,53 @@ def _serve_lane_sharded(path: str, plan: ServeTPPlan) -> bool:
     return False
 
 
+def _serve_row_mode(path: str, plan: ServeTPPlan) -> str:
+    """Row-parallel mode ("" | "packed" | "dequant") for this leaf: the
+    o-proj and down-proj leave the lane group and shard (or replicate,
+    for "dequant") their K rows instead when the plan enables the
+    psum-assembled sliced dataflow (see ServeTPPlan.attn_row)."""
+    parts = path.split("/")
+    leaf = parts[-1]
+    block = parts[-2] if len(parts) >= 2 else ""
+    if block == "attn" and leaf == "wo" and plan.attn:
+        return plan.attn_row
+    if block == "mlp" and leaf in ("w_down", "c_proj") and plan.mlp:
+        return plan.mlp_row
+    return ""
+
+
 def serve_param_specs(params, plan: ServeTPPlan) -> Any:
     """Pytree of PartitionSpec for serve-mode params: lane-only TP.
 
     QTensor payloads shard their lane (last) axis -- K rows whole per
     shard, so no super-block ever straddles devices; plain weights shard
-    the same way. Embeddings, norms, biases-after-gather, MoE stacks and
-    every non-divisible block replicate."""
+    the same way. Under a row-parallel plan the o-/down-proj instead
+    shard packed K rows (mode "packed": whole super-blocks per shard) or
+    replicate their payload (mode "dequant"). Embeddings, norms,
+    biases-after-gather, MoE stacks and every non-divisible block
+    replicate."""
 
     def walk(node, prefix=""):
         if isinstance(node, dict):
             return {k: walk(v, f"{prefix}{k}/") for k, v in node.items()}
         path = prefix[:-1]
-        shard = plan.size > 1 and _serve_lane_sharded(path, plan)
+        row = _serve_row_mode(path, plan) if plan.size > 1 else ""
+        shard = (not row and plan.size > 1
+                 and _serve_lane_sharded(path, plan))
         if isinstance(node, QTensor):
             def qspec(arr):
-                if not shard:
+                if row == "packed" and len(arr.shape) >= 2:
+                    return P(*([None] * (len(arr.shape) - 2)
+                               + [plan.axis, None]))
+                if not shard or row:
                     return P()
                 return P(*([None] * (len(arr.shape) - 1) + [plan.axis]))
             return QTensor(node.variant, node.shape,
                            {k: qspec(v) for k, v in node.data.items()})
-        if not shard or len(node.shape) < 2:
+        if row == "packed" and len(node.shape) >= 2:
+            return P(*([None] * (len(node.shape) - 2)
+                       + [plan.axis, None]))
+        if not shard or row or len(node.shape) < 2:
             return P()
         return P(*([None] * (len(node.shape) - 1) + [plan.axis]))
 
@@ -550,24 +637,54 @@ def lane_shard_qtensor(t: QTensor, index: int, n_shards: int) -> QTensor:
                    {k: v[..., lo:lo + n] for k, v in t.data.items()})
 
 
+def row_shard_qtensor(t: QTensor, index: int, n_shards: int) -> QTensor:
+    """The ``index``-th of ``n_shards`` K-row shards of a packed QTensor:
+    every payload array sliced on its packed-row (second-to-last) axis.
+    Legal only when K splits into whole super-blocks per shard
+    (K % (n_shards * super_block) == 0) -- then each shard's dequant is
+    bit-identical to the matching K rows of the unsharded dequant, which
+    is what lets the row-parallel "packed" datapath feed local rows
+    straight into the fused gemm."""
+    K, N = t.shape
+    sb = get_format(t.variant).super_block
+    if K % (n_shards * sb):
+        raise ValueError(
+            f"K={K} rows not divisible into {n_shards} shards of whole "
+            f"{sb}-row super-blocks; use the 'dequant' row fallback")
+
+    def cut(v):
+        rows = v.shape[-2]
+        r = rows // n_shards
+        lo = index * r
+        return v[..., lo:lo + r, :]
+
+    return QTensor(t.variant, (K // n_shards, N),
+                   {k: cut(v) for k, v in t.data.items()})
+
+
 def localize_serve_params(params, specs, size: int):
     """Fix up QTensor aux shapes for the local views inside a shard_map
-    body: payload arrays arrive already sliced to N/size lanes, but the
-    static (K, N) aux rides in globally -- dequantize would reshape
-    against the wrong N. Plain arrays need nothing (shard_map hands them
-    over with local shapes)."""
+    body: payload arrays arrive already sliced to N/size lanes (or, for
+    row-parallel "packed" leaves, K/size packed rows), but the static
+    (K, N) aux rides in globally -- dequantize would reshape against the
+    wrong extent. Plain arrays need nothing (shard_map hands them over
+    with local shapes)."""
     if size <= 1:
         return params
 
     def fix(p, s):
         if not isinstance(p, QTensor):
             return p
-        sharded = any(len(sp) > 0 and sp[-1] is not None
-                      for sp in s.data.values())
-        if not sharded:
+        lane = any(len(sp) > 0 and sp[-1] is not None
+                   for sp in s.data.values())
+        rows = any(len(sp) > 1 and sp[-2] is not None
+                   for sp in s.data.values())
+        if not (lane or rows):
             return p
         K, N = p.shape
-        return QTensor(p.variant, (K, N // size), p.data)
+        return QTensor(p.variant,
+                       (K // size if rows else K,
+                        N // size if lane else N), p.data)
 
     return jax.tree.map(fix, params, specs,
                         is_leaf=lambda x: isinstance(x, QTensor))

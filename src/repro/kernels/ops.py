@@ -134,6 +134,52 @@ def tp_local_lanes(y: jnp.ndarray) -> jnp.ndarray:
     return jax.lax.dynamic_slice_in_dim(y, i * n, n, y.ndim - 1)
 
 
+def tp_row_local_matmul(x: jnp.ndarray, t: QTensor, mode: str, *,
+                        impl: str = "auto",
+                        compute_dtype=jnp.bfloat16,
+                        interpret: bool = False) -> jnp.ndarray:
+    """This shard's partial-K product for a row-parallel o-/down-proj
+    (see ServeTPPlan.attn_row). ``x`` is the shard's (..., K/size) slice
+    of the projection input -- its local head outputs / ffn lanes.
+
+    ``mode``:
+      "packed"  -- ``t`` is already this shard's K-row slice (whole
+        super-blocks, aux localized): dispatch the fused/XLA gemm on the
+        local packed payload.
+      "dequant" -- ``t`` is the full REPLICATED packed tensor (K rows
+        not super-block-divisible; these are 2.6-3.6 bit tensors, so the
+        replicated payload is cheap): dequantize whole and take the K
+        rows matching this shard's input slice with one
+        ``dynamic_slice_in_dim``. Per-shard gemm FLOPs still 1/size.
+
+    The partial EMITS fp32 (``preferred_element_type``) so the caller's
+    assembling ``psum`` runs at fp32 width and the result rounds to the
+    activation dtype ONCE, after the reduce -- rounding each shard's
+    partial to bf16 first would cost ~eps_bf16 * |y| per element, far
+    outside the sliced datapath's documented f32-ulp envelope."""
+    lead = x.shape[:-1]
+    kl = x.shape[-1]
+    x2 = x.reshape(-1, kl)
+    if mode == "packed":
+        if impl == "auto":
+            impl = _default_impl()
+        if impl == "pallas":
+            out = bfp_matmul_pallas(
+                x2, t, compute_dtype=compute_dtype,
+                out_dtype=jnp.float32, interpret=interpret)
+            return out.reshape(lead + (t.shape[1],))
+        w = dequantize(t, dtype=compute_dtype)
+    else:
+        w = dequantize(t, dtype=compute_dtype)
+        plan = SH.serve_tp_plan()
+        if plan is not None and plan.size > 1:
+            i = jax.lax.axis_index(plan.axis)
+            w = jax.lax.dynamic_slice_in_dim(w, i * kl, kl, 0)
+    out = jnp.dot(x2.astype(compute_dtype), w,
+                  preferred_element_type=jnp.float32)
+    return out.reshape(lead + (t.shape[1],))
+
+
 def ring_gather(arr: jnp.ndarray, slots: jnp.ndarray, *,
                 ring_axis: int) -> jnp.ndarray:
     """Gather ring-buffer rows: snapshot ``slots`` (B, S) of a per-slot ring.

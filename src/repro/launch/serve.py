@@ -117,12 +117,15 @@ def main() -> None:
                          "of this many devices (lane-only sharding; "
                          "greedy output stays token-identical to --tp 1)")
     ap.add_argument("--tp-matmul", default="padded",
-                    choices=("padded", "sliced"),
+                    choices=("padded", "sliced", "sliced_row"),
                     help="TP projection datapath: 'padded' keeps the "
                          "single-device gemm shape per shard (bit-exact "
                          "parity; weights/KV still sharded), 'sliced' "
                          "runs true lane-sliced gemms (1/N FLOPs per "
-                         "shard, equal to within an f32 ulp)")
+                         "shard, equal to within an f32 ulp), "
+                         "'sliced_row' adds row-parallel o-/down-"
+                         "projections (half the collectives per layer; "
+                         "equal to within ~a few activation-dtype ulps)")
     ap.add_argument("--force-host-devices", type=int, default=None,
                     help="split the host platform into this many fake "
                          "devices for CPU TP testing (applied before "

@@ -22,9 +22,10 @@ from typing import Dict, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.core.quantize import QTensor
+from repro.core.quantize import QTensor, dequantize
 from repro.distributed.sharding import constrain, serve_tp_plan
 from repro.kernels import ops as kops
+from repro.kernels.prefill_attn import prefill_attn_fused
 
 NEG_INF = -1e30
 
@@ -217,7 +218,7 @@ def blockwise_attention(q, k, v, *, causal=True, window=None, scale=None,
 
 def prefill_attention(q, k_cache, v_cache, slot_pos, k_new, v_new,
                       positions, valid, *, window=None, scale=None,
-                      softcap=None):
+                      softcap=None, impl="naive", interpret=False):
     """Chunked-prefill attention: one prompt chunk against cache + itself.
 
     q: (B,C,H,D) chunk queries; k_cache/v_cache: (B,T,KH,D) ring *before*
@@ -228,11 +229,21 @@ def prefill_attention(q, k_cache, v_cache, slot_pos, k_new, v_new,
     positions per ring slot (-1 empty); k_new/v_new: (B,C,KH,D) this
     chunk's keys/values; positions: (B,C) absolute; valid: (B,C) False on
     right-padding (those keys never win attention; their query outputs are
-    garbage the caller must ignore)."""
+    garbage the caller must ignore).
+
+    ``impl="fused"`` routes the concatenated problem through the Pallas
+    flash kernel (``kernels.prefill_attn``, f32-rounding-identical online
+    softmax, no (C, T) score materialization; interpret=True runs it on
+    CPU); the default materializing ``naive_attention`` path is the
+    reference."""
     kv_pos_new = jnp.where(valid, positions, -1)
     k_all = jnp.concatenate([k_cache, k_new.astype(k_cache.dtype)], axis=1)
     v_all = jnp.concatenate([v_cache, v_new.astype(v_cache.dtype)], axis=1)
     kv_pos = jnp.concatenate([slot_pos, kv_pos_new], axis=1)
+    if impl == "fused":
+        return prefill_attn_fused(q, k_all, v_all, positions, kv_pos,
+                                  window=window, scale=scale,
+                                  softcap=softcap, interpret=interpret)
     return naive_attention(q, k_all, v_all, causal=True, window=window,
                            scale=scale, softcap=softcap,
                            q_positions=positions, kv_positions=kv_pos)
@@ -352,17 +363,113 @@ def tp_lane_dense(x, w, out: str, *, impl="auto", interpret=False):
     return y if out == "local" else kops.tp_gather_lanes(y)
 
 
+def tp_ring_dense(x, w, *, impl="auto", interpret=False):
+    """Ring collective-matmul: a full-output serve-TP projection whose
+    input lives lane-sharded (``x`` is this shard's K-chunk) and whose
+    weight lives lane-sharded too (``w`` is (..., K, N/size)), computed
+    WITHOUT ever materializing the gathered input. Each of the ``size``
+    steps multiplies the chunk currently in hand against its matching
+    K-rows of the local weight while ``ppermute`` forwards the chunk one
+    hop around the ring -- so the all-gather's wire time hides behind
+    the gemms (the collective-matmul overlap; on a real mesh each hop's
+    DMA runs concurrently with the current chunk's dot). The final lane
+    outputs are assembled by the usual tiled all-gather.
+
+    K accumulates chunk-at-a-time in an fp32 carry (single rounding at
+    the end), so the result carries the same activation-ulp contract as
+    the rest of the "sliced_row" datapath -- tp_lane_dense routes here
+    for full-output projections when no row-parallel mode applies.
+    Packed weights dequantize their local lane slice ONCE (1/size of the
+    full weight traffic), outside the ring loop; the per-step K-row
+    slice then needs no super-block alignment."""
+    plan = serve_tp_plan()
+    if plan is None or plan.size == 1:
+        return dense(x, w, impl=impl, interpret=interpret)
+    size, axis = plan.size, plan.axis
+    kl = x.shape[-1]
+    i = jax.lax.axis_index(axis)
+    perm = [(s, (s + 1) % size) for s in range(size)]
+    if isinstance(w, QTensor):
+        wf = dequantize(w, dtype=jnp.bfloat16)
+    else:
+        wf = w.astype(x.dtype)
+
+    chunk, acc = x, None
+    for s in range(size):
+        # the chunk in hand at step s started at shard (i - s): that is
+        # its K offset into the (full-K, local-lane) weight
+        j = (i - s) % size
+        rows = jax.lax.dynamic_slice_in_dim(wf, j * kl, kl, 0)
+        part = jnp.dot(chunk.astype(wf.dtype), rows,
+                       preferred_element_type=jnp.float32)
+        acc = part if acc is None else acc + part
+        if s + 1 < size:
+            chunk = jax.lax.ppermute(chunk, axis, perm)
+    y = acc.astype(x.dtype)
+    return kops.tp_gather_lanes(y)
+
+
+def tp_row_dense(x, w, mode: str, *, impl="auto", interpret=False):
+    """Serve-TP row-parallel projection (sliced datapath): ``x`` is this
+    shard's K-slice of the projection input -- its own head outputs (the
+    o-proj) or ffn lanes (the down-proj) -- fed straight into a
+    partial-K gemm, and ONE ``psum`` assembles the replicated output.
+    Pairs with the column-parallel projections upstream exactly as in
+    Megatron, replacing TWO per-layer collectives (the input's lane
+    gather + the output's gather) with one, at narrower wire width.
+
+    ``mode`` (from ServeTPPlan.attn_row / mlp_row):
+      "packed"  -- ``w`` is this shard's K-row slice (whole super-blocks,
+        aux already localized), so the plain fused/XLA gemm applies.
+      "dequant" -- ``w`` is the full replicated packed tensor; each shard
+        dequantizes and slices its K rows (kops.tp_row_local_matmul).
+
+    Partials emit fp32 and the psum runs at fp32 width, rounding to the
+    activation dtype once AFTER the reduce (see tp_row_local_matmul) --
+    so the only divergence from the lane dataflow is the K-reduction
+    order across shards. That reorder cannot bit-match a full-K dot
+    once activations round to bf16 at layer boundaries, which is why
+    this path is its own datapath value ("sliced_row") with an
+    activation-ulp tolerance contract -- f32 models stay inside the
+    f32-ulp envelope ("padded"/"sliced" never route here)."""
+    plan = serve_tp_plan()
+    if plan is None or plan.size == 1:
+        return dense(x, w, impl=impl, interpret=interpret)
+    if isinstance(w, QTensor):
+        y = kops.tp_row_local_matmul(x, w, mode, impl=impl,
+                                     interpret=interpret)
+    else:
+        # plain weights row-shard whenever K divides, so shard_map has
+        # already handed over this shard's (K/size, N) rows
+        y = jnp.dot(x, w.astype(x.dtype),
+                    preferred_element_type=jnp.float32)
+    return jax.lax.psum(y, plan.axis).astype(x.dtype)
+
+
 def swiglu_mlp(x, p: Dict, *, impl="auto", interpret=False):
     if _tp_mlp_active():
-        # serve TP (shard_map): gate/up emit this shard's ffn lanes, the
-        # activation stays local, then ONE exact all-reduce gathers the
-        # hidden (w_down keeps its K rows whole per shard) and one more
-        # gathers the down output -- see tp_lane_dense
+        plan = serve_tp_plan()
+        # serve TP (shard_map): gate/up emit this shard's ffn lanes and
+        # the activation stays local. Row-parallel plans feed those lanes
+        # straight into the down-proj and psum once (tp_row_dense);
+        # otherwise ONE exact all-gather assembles the hidden (w_down
+        # keeps its K rows whole per shard) and one more gathers the down
+        # output -- see tp_lane_dense
         g = tp_lane_dense(x, p["w_gate"], "local", impl=impl,
                           interpret=interpret)
         u = tp_lane_dense(x, p["w_up"], "local", impl=impl,
                           interpret=interpret)
-        h = kops.tp_gather_lanes(jax.nn.silu(g) * u)
+        h = jax.nn.silu(g) * u
+        if plan.mlp_row:
+            return tp_row_dense(h, p["w_down"], plan.mlp_row, impl=impl,
+                                interpret=interpret)
+        if plan.matmul == "sliced_row":
+            # no row layout for w_down (plan built without params):
+            # ring collective-matmul hides the hidden's gather behind
+            # the chunked down-proj gemms
+            return tp_ring_dense(h, p["w_down"], impl=impl,
+                                 interpret=interpret)
+        h = kops.tp_gather_lanes(h)
         return tp_lane_dense(h, p["w_down"], "full", impl=impl,
                              interpret=interpret)
     g = dense(x, p["w_gate"], impl=impl, interpret=interpret)
@@ -378,15 +485,24 @@ def swiglu_mlp(x, p: Dict, *, impl="auto", interpret=False):
 
 def gelu_mlp(x, p: Dict, *, impl="auto", interpret=False):
     if _tp_mlp_active():
+        plan = serve_tp_plan()
         h = tp_lane_dense(x, p["c_fc"], "local", impl=impl,
                           interpret=interpret)
         if "b_fc" in p:
             # b_fc is lane-sharded with c_fc, so the add stays local;
-            # b_proj adds after the output gather and is replicated
+            # b_proj adds after the output psum/gather and is replicated
             h = h + p["b_fc"].astype(h.dtype)
-        h = kops.tp_gather_lanes(jax.nn.gelu(h, approximate=True))
-        o = tp_lane_dense(h, p["c_proj"], "full", impl=impl,
-                          interpret=interpret)
+        h = jax.nn.gelu(h, approximate=True)
+        if plan.mlp_row:
+            o = tp_row_dense(h, p["c_proj"], plan.mlp_row, impl=impl,
+                             interpret=interpret)
+        elif plan.matmul == "sliced_row":
+            o = tp_ring_dense(h, p["c_proj"], impl=impl,
+                              interpret=interpret)
+        else:
+            h = kops.tp_gather_lanes(h)
+            o = tp_lane_dense(h, p["c_proj"], "full", impl=impl,
+                              interpret=interpret)
         if "b_proj" in p:
             o = o + p["b_proj"].astype(o.dtype)
         return o

@@ -226,9 +226,25 @@ def _attn_out(o, lp, cfg, impl, interpret):
     o = o.reshape(B, S, o.shape[2] * o.shape[3])    # local heads * Dh
     attn = lp["attn"]
     if _tp_attn_shards(cfg) > 1:
-        # serve TP: wo keeps its K rows (all heads) whole per shard, so
-        # gather the head outputs (exact zero-fill all-reduce), then one
-        # more all-reduce assembles wo's d_model lanes
+        plan = SH.serve_tp_plan()
+        if plan is not None and plan.attn_row:
+            # row-parallel sliced path: this shard's contiguous heads ARE
+            # a contiguous K-row slice of wo, so the local head outputs
+            # feed wo's partial gemm directly and ONE psum assembles the
+            # d_model output -- no head gather, no lane gather
+            out = L.tp_row_dense(o, attn["wo"], plan.attn_row, impl=impl,
+                                 interpret=interpret)
+            return SH.constrain(out, "dp", None, None)
+        if plan is not None and plan.matmul == "sliced_row":
+            # no row layout for wo (plan built without params): ring
+            # collective-matmul hides the head gather behind the chunked
+            # o-proj gemms
+            out = L.tp_ring_dense(o, attn["wo"], impl=impl,
+                                  interpret=interpret)
+            return SH.constrain(out, "dp", None, None)
+        # lane path: wo keeps its K rows (all heads) whole per shard, so
+        # gather the head outputs (exact tiled all-gather), then one
+        # more gather assembles wo's d_model lanes
         o = kops.tp_gather_lanes(o)
         out = L.tp_lane_dense(o, attn["wo"], "full", impl=impl,
                               interpret=interpret)
@@ -241,7 +257,8 @@ def _attn_out(o, lp, cfg, impl, interpret):
     return SH.constrain(out, "dp", None, None)
 
 
-def _seq_attention(q, k, v, cfg: ModelConfig, S: int):
+def _seq_attention(q, k, v, cfg: ModelConfig, S: int,
+                   interpret: bool = False):
     impl = cfg.attn_impl
     if impl == "auto":
         impl = "naive" if S <= 2048 else "blockwise"
@@ -249,6 +266,14 @@ def _seq_attention(q, k, v, cfg: ModelConfig, S: int):
         return L.naive_attention(q, k, v, causal=True,
                                  window=cfg.sliding_window,
                                  softcap=cfg.attn_logit_softcap)
+    if impl == "fused":
+        B, S2 = q.shape[0], q.shape[1]
+        pos = jnp.broadcast_to(jnp.arange(S2, dtype=jnp.int32)[None],
+                               (B, S2))
+        return L.prefill_attn_fused(q, k, v, pos, pos,
+                                    window=cfg.sliding_window,
+                                    softcap=cfg.attn_logit_softcap,
+                                    interpret=interpret)
     return L.blockwise_attention(q, k, v, causal=True,
                                  window=cfg.sliding_window,
                                  softcap=cfg.attn_logit_softcap,
@@ -270,7 +295,7 @@ def _attn_layer_seq(h, lp, cfg: ModelConfig, cos_sin, *, impl, interpret,
         cos, sin = cos_sin
         q = L.apply_rope(q, cos, sin)
         k = L.apply_rope(k, cos, sin)
-    o = _seq_attention(q, k, v, cfg, S)
+    o = _seq_attention(q, k, v, cfg, S, interpret)
     h = h + _attn_out(o, lp, cfg, impl, interpret)
     m_in = L.norm(h, lp["ln2"], cfg.norm_type, cfg.norm_eps)
     aux = jnp.zeros((), jnp.float32)
@@ -378,7 +403,7 @@ def _shared_block_seq(h, emb0, sp, cfg: ModelConfig, *, impl, interpret,
     cos, sin = L.rope_cos_sin(pos, Dh2, cfg.rope_theta)
     q = L.apply_rope(q, cos, sin)
     k = L.apply_rope(k, cos, sin)
-    o = _seq_attention(q, k, v, cfg, S)
+    o = _seq_attention(q, k, v, cfg, S, interpret)
     o = o.reshape(B, S, cfg.n_heads * Dh2)
     u = u + L.dense(o, sp["attn"]["wo"], impl=impl, interpret=interpret)
     m_in = L.rmsnorm(u, sp["ln2"]["w"], cfg.norm_eps)
@@ -691,8 +716,14 @@ def prefill_chunk(params, cfg: ModelConfig, cache: Dict[str, Any], *,
     valid = positions < lengths[:, None]
     if cached_lengths is not None:
         valid = valid & (positions >= cached_lengths[:, None])
+    attn_fn = L.prefill_attention
+    if cfg.attn_impl == "fused":
+        # flash-style Pallas kernel for the chunk-vs-ring attention
+        # (interpret mode runs it on CPU); verify_chunk keeps its scan
+        attn_fn = functools.partial(L.prefill_attention, impl="fused",
+                                    interpret=interpret)
     return _masked_chunk(params, cfg, cache, tokens, positions, valid,
-                         L.prefill_attention, interpret)
+                         attn_fn, interpret)
 
 
 def verify_chunk(params, cfg: ModelConfig, cache: Dict[str, Any], *,

@@ -143,7 +143,14 @@ class ServeConfig:
                                         # shape; weights/cache sharded,
                                         # FLOPs replicated) | "sliced"
                                         # (1/size FLOPs per shard, equal
-                                        # to within an f32 ulp)
+                                        # to within an f32 ulp) |
+                                        # "sliced_row" (sliced + row-
+                                        # parallel o-/down-proj: half the
+                                        # collectives per layer, equal to
+                                        # within ~a few activation-dtype
+                                        # ulps -- f32-ulp when the model
+                                        # runs f32; the fast path on
+                                        # collective-bound meshes)
 
 
 @dataclasses.dataclass
@@ -202,7 +209,8 @@ class Engine:
                     "--xla_force_host_platform_device_count="
                     f"{serve_cfg.tp} before importing jax")
             self._plan = SH.make_serve_tp_plan(cfg, serve_cfg.tp,
-                                               matmul=serve_cfg.tp_matmul)
+                                               matmul=serve_cfg.tp_matmul,
+                                               params=params)
             self._mesh = Mesh(np.asarray(devs[:serve_cfg.tp]),
                               (self._plan.axis,))
             self._pspecs = SH.serve_param_specs(params, self._plan)

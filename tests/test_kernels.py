@@ -231,6 +231,93 @@ def test_property_lane_shard_dequant_bitexact(variant, nsb, n, nshards,
     np.testing.assert_array_equal(full[:, n:], 0.0)
 
 
+@settings(max_examples=12, deadline=None)
+@given(variant=st.sampled_from(VARIANTS),
+       m=st.integers(1, 24), nsb=st.integers(1, 3),
+       n=st.integers(1, 130), nshards=st.sampled_from([2, 4]),
+       seed=st.integers(0, 2**16))
+def test_property_sliced_fused_matmul_matches_full(variant, m, nsb, n,
+                                                   nshards, seed):
+    """The sliced TP datapath's kernel invariant, for EVERY registered
+    format over ragged (M, K, N): running each lane shard's packed
+    payload through the fused dequant-matmul reproduces the matching
+    output columns of the full-matrix fused run BIT-exactly (packing
+    runs along K, so a lane slice never crosses a quantization group and
+    the kernel sees literally the same bytes and the same K loop),
+    and the full run itself sits within f32-ulp accumulation noise of
+    the dequant-matmul oracle. Ragged N pads to a shard multiple with
+    inert zero lanes, mirroring serve_param_specs' layout."""
+    K = 256 * nsb
+    x, w = _mk(seed, m, K, n)
+    t = Q.quantize(variant, w)
+    pad = (-n) % (nshards * 8)          # shard multiple, modest lane pad
+    if pad:
+        t = Q.QTensor(t.variant, (K, n + pad),
+                      {k: jnp.pad(v, ((0, 0), (0, pad)))
+                       for k, v in t.data.items()})
+    Np = n + pad
+    kw = dict(interpret=True, compute_dtype=jnp.float32,
+              out_dtype=jnp.float32, block_m=16, block_n=64, block_k=256)
+    o_full = np.asarray(bfp_matmul_pallas(x, t, **kw))
+    o_ref = np.asarray(ref.matmul_ref(x, t))
+    np.testing.assert_allclose(o_full, o_ref, rtol=2e-5,
+                               atol=2e-5 * (np.abs(o_ref).max() + 1e-9))
+    from repro.distributed.sharding import lane_shard_qtensor
+    chunk = Np // nshards
+    for i in range(nshards):
+        sh = lane_shard_qtensor(t, i, nshards)
+        o_sh = np.asarray(bfp_matmul_pallas(x, sh, **kw))
+        np.testing.assert_array_equal(
+            o_sh, o_full[:, i * chunk:(i + 1) * chunk])
+
+
+@settings(max_examples=12, deadline=None)
+@given(variant=st.sampled_from(VARIANTS),
+       nsb=st.sampled_from([2, 4]), n=st.integers(1, 130),
+       m=st.integers(1, 16), seed=st.integers(0, 2**16))
+def test_property_row_shard_packed_bitexact(variant, nsb, n, m, seed):
+    """The row-parallel ("sliced_row") layout invariant, for EVERY
+    registered format: slicing a packed QTensor into whole-super-block
+    K-row shards (row_shard_qtensor) dequantizes each shard
+    bit-identically to its K rows of the full dequant, and the shards'
+    fused-gemm f32 partials sum back to the full fused product within
+    f32-ulp accumulation noise (the psum the serving datapath
+    performs)."""
+    from repro.distributed.sharding import row_shard_qtensor
+    nshards = 2
+    K = 256 * nsb                       # nsb super-blocks -> whole SBs/shard
+    x, w = _mk(seed, m, K, n)
+    t = Q.quantize(variant, w)
+    sb = F.get_format(t.variant).super_block
+    if K % (nshards * sb):              # q4_0/q8_0: sb=32, always fine here
+        return
+    full = np.asarray(Q.dequantize(t, dtype=np.float32))
+    kl = K // nshards
+    kw = dict(interpret=True, compute_dtype=jnp.float32,
+              out_dtype=jnp.float32, block_m=16, block_n=64, block_k=256)
+    o_full = np.asarray(bfp_matmul_pallas(x, t, **kw))
+    acc = np.zeros_like(o_full)
+    for i in range(nshards):
+        sh = row_shard_qtensor(t, i, nshards)
+        assert sh.shape == (kl, n)
+        got = np.asarray(Q.dequantize(sh, dtype=np.float32))
+        np.testing.assert_array_equal(got, full[i * kl:(i + 1) * kl])
+        acc += np.asarray(bfp_matmul_pallas(x[:, i * kl:(i + 1) * kl],
+                                            sh, **kw))
+    np.testing.assert_allclose(acc, o_full, rtol=2e-5,
+                               atol=2e-5 * (np.abs(o_full).max() + 1e-9))
+
+
+def test_row_shard_rejects_split_super_blocks():
+    """K rows that do not divide into whole super-blocks per shard must
+    raise (the plan's "dequant" fallback handles those tensors)."""
+    from repro.distributed.sharding import row_shard_qtensor
+    _, w = _mk(13, 1, 256, 32)
+    t = Q.quantize("q3_k", w)           # sb=256: 2 shards would split it
+    with pytest.raises(ValueError, match="dequant"):
+        row_shard_qtensor(t, 0, 2)
+
+
 @settings(max_examples=8, deadline=None)
 @given(m=st.integers(1, 20), nsb=st.integers(1, 3),
        masked=st.integers(0, 1), seed=st.integers(0, 2**16))

@@ -1,0 +1,120 @@
+"""Fused prefill-attention Pallas kernel (interpret mode) vs the naive
+materializing path: the kernel promises f32-rounding-level agreement
+with ``layers.naive_attention`` under the chunked-prefill position-mask
+semantics (absolute query positions vs per-slot kv positions, -1 = empty
+slot), GQA folded, sliding window optional. Only rows with at least one
+visible key are compared -- all-masked rows produce garbage by
+convention on BOTH paths and callers discard them."""
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.models import layers as L
+from repro.kernels.prefill_attn import prefill_attn_fused
+
+TOL = 5e-6     # f32 accumulation-order noise at these shapes
+
+
+def _mk(seed, B, C, T, H, KH, D, dtype=jnp.float32):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    q = jax.random.normal(ks[0], (B, C, H, D), jnp.float32).astype(dtype)
+    k = jax.random.normal(ks[1], (B, T, KH, D), jnp.float32).astype(dtype)
+    v = jax.random.normal(ks[2], (B, T, KH, D), jnp.float32).astype(dtype)
+    return q, k, v
+
+
+def _compare(q, k, v, qp, kp, window=None, softcap=None):
+    o_ref = L.naive_attention(q, k, v, causal=True, window=window,
+                              softcap=softcap, q_positions=qp,
+                              kv_positions=kp)
+    o_fus = prefill_attn_fused(q, k, v, qp, kp, window=window,
+                               softcap=softcap, interpret=True)
+    assert o_fus.shape == o_ref.shape and o_fus.dtype == o_ref.dtype
+    # visible = query rows with >= 1 unmasked key; others are garbage
+    vis = ((kp[:, None, :] >= 0) & (kp[:, None, :] <= qp[:, :, None]))
+    if window:
+        vis &= kp[:, None, :] > qp[:, :, None] - window
+    vis = np.asarray(vis.any(-1))
+    a = np.asarray(o_ref, np.float32)[vis]
+    b = np.asarray(o_fus, np.float32)[vis]
+    np.testing.assert_allclose(b, a, rtol=TOL,
+                               atol=TOL * (np.abs(a).max() + 1e-9))
+
+
+@pytest.mark.parametrize("H,KH", [(4, 4), (8, 2), (6, 1)])
+def test_fused_matches_naive_gqa(H, KH):
+    """Plain self-attention positions, MHA / GQA / MQA head layouts."""
+    B, C, T, D = 2, 16, 16, 32
+    q, k, v = _mk(0, B, C, T, H, KH, D)
+    pos = jnp.broadcast_to(jnp.arange(C)[None], (B, C))
+    _compare(q, k, v, pos, pos)
+
+
+def test_fused_matches_naive_ring_semantics():
+    """The chunked-prefill case: queries attend a decode ring (scattered
+    absolute positions, -1 empty slots) plus their own chunk's keys --
+    positions are NOT sorted or contiguous along the kv axis."""
+    B, C, T, H, KH, D = 2, 8, 24, 4, 2, 16
+    q, k, v = _mk(1, B, C, T, H, KH, D)
+    rng = np.random.default_rng(2)
+    kp = rng.integers(-1, 20, (B, T)).astype(np.int32)
+    qp = np.sort(rng.integers(0, 24, (B, C)).astype(np.int32), axis=1)
+    _compare(q, k, v, jnp.asarray(qp), jnp.asarray(kp))
+
+
+def test_fused_sliding_window_and_softcap():
+    B, C, T, H, KH, D = 1, 12, 12, 4, 2, 16
+    q, k, v = _mk(3, B, C, T, H, KH, D)
+    pos = jnp.broadcast_to(jnp.arange(C)[None], (B, C))
+    _compare(q, k, v, pos, pos, window=5)
+    _compare(q, k, v, pos, pos, softcap=8.0)
+
+
+def test_fused_through_prefill_attention_entry():
+    """impl="fused" on the public layers.prefill_attention entry point:
+    same cache + new-chunk concatenation, same outputs as impl="naive"
+    on the valid (non-right-padded) rows."""
+    B, C, T, H, KH, D = 2, 6, 16, 4, 2, 16
+    ks = jax.random.split(jax.random.PRNGKey(4), 5)
+    q = jax.random.normal(ks[0], (B, C, H, D), jnp.float32)
+    kc = jax.random.normal(ks[1], (B, T, KH, D), jnp.float32)
+    vc = jax.random.normal(ks[2], (B, T, KH, D), jnp.float32)
+    kn = jax.random.normal(ks[3], (B, C, KH, D), jnp.float32)
+    vn = jax.random.normal(ks[4], (B, C, KH, D), jnp.float32)
+    slot_pos = jnp.where(jnp.arange(T)[None] < 10,
+                         jnp.arange(T)[None], -1)
+    slot_pos = jnp.broadcast_to(slot_pos, (B, T))
+    positions = 10 + jnp.broadcast_to(jnp.arange(C)[None], (B, C))
+    valid = jnp.broadcast_to(jnp.arange(C)[None] < 5, (B, C))
+    args = (q, kc, vc, slot_pos, kn, vn, positions, valid)
+    o_ref = L.prefill_attention(*args)
+    o_fus = L.prefill_attention(*args, impl="fused", interpret=True)
+    vis = np.asarray(valid)
+    a = np.asarray(o_ref)[vis]
+    b = np.asarray(o_fus)[vis]
+    np.testing.assert_allclose(b, a, rtol=TOL,
+                               atol=TOL * (np.abs(a).max() + 1e-9))
+
+
+@settings(max_examples=10, deadline=None)
+@given(B=st.integers(1, 3), C=st.integers(1, 20), T=st.integers(1, 40),
+       KH=st.integers(1, 3), G=st.integers(1, 3),
+       D=st.sampled_from([8, 16, 32]),
+       window=st.sampled_from([None, 4]),
+       bf16=st.booleans(), seed=st.integers(0, 2**16))
+def test_property_fused_matches_naive(B, C, T, KH, G, D, window, bf16,
+                                      seed):
+    """Ragged (B, C, T), arbitrary GQA grouping, random ring positions
+    with empty slots, both activation dtypes: fused == naive on every
+    visible row (f32 tolerance; bf16 inputs round identically on both
+    paths since both cast to f32 before the dot)."""
+    dtype = jnp.bfloat16 if bf16 else jnp.float32
+    q, k, v = _mk(seed, B, C, T, KH * G, KH, D, dtype=dtype)
+    rng = np.random.default_rng(seed)
+    kp = rng.integers(-1, C + T, (B, T)).astype(np.int32)
+    qp = np.sort(rng.integers(0, C + T, (B, C)).astype(np.int32), axis=1)
+    _compare(q, k, v, jnp.asarray(qp), jnp.asarray(kp), window=window)

@@ -363,6 +363,119 @@ def test_sliced_datapath_logit_tolerance(causal):
         atol=1e-4 * np.abs(logits[1]).max())
 
 
+def _chunked_logits(cfg, params, tp, mm):
+    """Logits after two prefill chunks of a 3-request ragged group under
+    one (tp, tp_matmul) engine -- the shared probe for the sliced-family
+    tolerance tests."""
+    lens = [14, 9, 11]
+    rng = np.random.default_rng(11)
+    toks = np.zeros((3, 16), np.int32)
+    for i, n in enumerate(lens):
+        toks[i, :n] = rng.integers(0, cfg.vocab_size, n)
+    lengths = jnp.asarray(lens, jnp.int32)
+    cached = jnp.zeros(3, jnp.int32)
+    eng = Engine(cfg, params, ServeConfig(tp=tp, tp_matmul=mm, **BASE))
+    gcache = eng._new_cache(3)
+    last = jnp.zeros((3, cfg.vocab_size), jnp.float32)
+    for j in range(2):
+        gcache, last = eng._prefill_chunk(
+            eng.params, gcache, jnp.asarray(toks[:, j * 8:(j + 1) * 8]),
+            jnp.asarray(j * 8, jnp.int32), lengths, last, cached)
+    return np.asarray(jax.device_get(last)), eng
+
+
+@needs2
+def test_sliced_row_logit_tolerance_bf16(causal):
+    """The "sliced_row" datapath (row-parallel o-/down-proj, fp32
+    partials psummed then rounded once): splitting the K reduction
+    across shards cannot bit-match the full-K dot once activations
+    round to bf16 at layer boundaries, so with the default bf16
+    activations the contract is ~a few BF16 ulps of the logits
+    (measured ~5e-3 rel on CPU XLA; eps_bf16 = 7.8e-3), not the f32
+    envelope the lane-only "sliced" datapath keeps."""
+    cfg, params = causal
+    ref, _ = _chunked_logits(cfg, params, 1, "padded")
+    got, eng = _chunked_logits(cfg, params, 2, "sliced_row")
+    # unquantized fixture: plain wo/w_down K-rows divide -> "packed"
+    assert eng._plan.attn_row == "packed" and eng._plan.mlp_row == "packed"
+    np.testing.assert_allclose(got, ref, rtol=2e-2,
+                               atol=2e-2 * np.abs(ref).max())
+    assert np.abs(got - ref).max() <= 1.5e-2 * np.abs(ref).max()
+
+
+@needs2
+def test_sliced_row_logit_tolerance_f32(causal):
+    """With fp32 activations the ONLY divergence left in "sliced_row" is
+    the K-reduction split itself, so the logits sit inside the same
+    f32-ulp envelope as the lane-only "sliced" datapath (measured
+    ~2e-5 rel)."""
+    cfg, _ = causal
+    cfg = cfg.replace(dtype="float32")
+    params = T.init_params(cfg, jax.random.PRNGKey(0))
+    ref, _ = _chunked_logits(cfg, params, 1, "padded")
+    got, _ = _chunked_logits(cfg, params, 2, "sliced_row")
+    np.testing.assert_allclose(got, ref, rtol=1e-4,
+                               atol=1e-4 * np.abs(ref).max())
+
+
+@needs2
+def test_sliced_row_quantized_row_modes(causal):
+    """Quantized params pick per-leaf row modes: the causal fixture's
+    wo (K=256, one q3_k super-block) cannot K-shard and falls back to
+    "dequant" (replicated payload, per-shard row slice), while w_down
+    (K=512) shards whole super-blocks ("packed"). Logits stay inside
+    the activation-ulp envelope either way."""
+    cfg, params = causal
+    qp, _ = quantize_params(params, get_policy("paper_llama_mix"))
+    ref, _ = _chunked_logits(cfg, qp, 1, "padded")
+    got, eng = _chunked_logits(cfg, qp, 2, "sliced_row")
+    assert eng._plan.attn_row == "dequant"
+    assert eng._plan.mlp_row == "packed"
+    np.testing.assert_allclose(got, ref, rtol=2e-2,
+                               atol=2e-2 * np.abs(ref).max())
+
+
+@needs2
+def test_ring_collective_matmul_parity():
+    """layers.tp_ring_dense -- the collective-matmul fallback that
+    "sliced_row" full-output projections use when no row-parallel mode
+    applies: lane-sharded input chunks accumulate against the local
+    lane slice of the weight in an fp32 carry while ppermute forwards
+    them around the ring. Must match the plain full matmul within the
+    activation-ulp contract, for a packed QTensor and a plain weight."""
+    from jax.sharding import Mesh
+    from repro.models import layers as L
+    from repro.serving.engine import _shard_map
+    size = 2
+    K, N, M = 512, 256, 8
+    kx, kw = jax.random.split(jax.random.PRNGKey(3))
+    x = jax.random.normal(kx, (M, K), jnp.float32).astype(jnp.bfloat16)
+    w = jax.random.normal(kw, (K, N), jnp.float32) * 0.2
+    t = Q.quantize("q3_k", w)
+    plan = SH.ServeTPPlan(size=size, attn=True, mlp=True,
+                          matmul="sliced_row")
+    mesh = Mesh(np.asarray(jax.devices()[:size]), ("model",))
+    for weight, wspec in (
+            (t, Q.QTensor(t.variant, t.shape,
+                          {k: P(None, "model") for k in t.data})),
+            (w.astype(jnp.bfloat16), P(None, "model"))):
+        def body(xl, wl):
+            wl = SH.localize_serve_params(
+                wl, jax.tree.map(lambda _: wspec, wl,
+                                 is_leaf=lambda q: isinstance(q, Q.QTensor)),
+                size) if isinstance(wl, Q.QTensor) else wl
+            with SH.serve_tp(plan):
+                return L.tp_ring_dense(xl, wl)
+        f = _shard_map(body, mesh=mesh, in_specs=(P(None, "model"), wspec),
+                       out_specs=P(), check_rep=False)
+        got = np.asarray(jax.jit(f)(x, weight), np.float32)
+        wf = Q.dequantize(t, dtype=jnp.bfloat16) if isinstance(
+            weight, Q.QTensor) else w.astype(jnp.bfloat16)
+        ref = np.asarray(jnp.dot(x, wf).astype(x.dtype), np.float32)
+        np.testing.assert_allclose(got, ref, rtol=2e-2,
+                                   atol=2e-2 * np.abs(ref).max())
+
+
 @needs2
 def test_cancel_midstream_under_tp(causal):
     """In-flight cancel from an on_token callback behaves identically at
