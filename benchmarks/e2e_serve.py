@@ -27,6 +27,14 @@ REPRO_FORCE_HOST_DEVICES=2 (honored below BEFORE jax initializes) and
 they are skipped otherwise (CI's 1-device smoke sweep never produces
 them, and the regression gate skips absent rows/metrics).
 
+Disaggregated rows (queue depth 8, quantized params, shared-prefix
+workload) pair one monolithic engine against a 1-prefill + 1-decode
+worker DisaggEngine at matched depth; the disagg row reports
+``migrated_pages`` and the decode workers' ``prefix_hit_rate``, and the
+pair rides the same-run ``check_disagg`` structural gate (plus an
+in-bench token-identity assert, so a parity break can never publish a
+row).
+
 Output: human CSV rows (``emit``) plus one machine-readable JSON blob
 (``--out`` to persist, default benchmarks/results/e2e_serve.json when run
 as a script) so future PRs can track the perf trajectory.  ``--smoke``
@@ -47,6 +55,7 @@ from repro.configs.base import get_arch
 from repro.core.policy import get_policy
 from repro.core.qlinear import quantize_params
 from repro.models import transformer as T
+from repro.serving.disagg import DisaggEngine
 from repro.serving.engine import Engine, ServeConfig
 from benchmarks.common import emit, emit_json
 
@@ -59,6 +68,7 @@ SPEC_SMOKE_DEPTHS = (8,)         # CI spec smoke run
 PREFIX_DEPTHS = (8, 32)          # shared-system-prompt sweep
 PREFIX_SMOKE_DEPTHS = (8,)       # CI prefix smoke run
 TP_DEPTH = 8                     # tensor-parallel row (tp=1 vs tp=2)
+DISAGG_DEPTH = 8                 # mono-vs-disagg row pair (1P+1D)
 SHARED_PREFIX_LEN = 48           # shared system prompt tokens
 UNIQUE_LEN = 6                   # per-request unique suffix tokens
 MAX_SLOTS = 8
@@ -126,6 +136,62 @@ def _bench_one(cfg, params, depth: int, drafter: str = None,
     return rec
 
 
+def _bench_disagg(cfg, params, depth: int) -> list:
+    """Monolithic-vs-disaggregated row PAIR at matched queue depth over
+    the shared-system-prompt workload (SHARED_PREFIX_LEN + unique
+    suffix, so KV pages actually migrate prefill-worker -> decode-worker
+    on the 1P+1D row). Both rows carry a ``disagg`` field
+    (``"mono"`` / ``"1p1d"``) for the same-run structural gate in
+    scripts/check_bench_regression.py; the measured outputs are asserted
+    token-identical here too, so a parity break can never publish a
+    benchmark row."""
+    slots = min(depth, MAX_SLOTS)
+    scfg = ServeConfig(max_new_tokens=NEW_TOKENS, max_slots=slots,
+                       decode_chunk=NEW_TOKENS, cache_len=64,
+                       prefill_bucket=8, prefill_batch=slots,
+                       prefix_page=8)
+    rng = np.random.default_rng(0)
+    shared = list(rng.integers(0, cfg.vocab_size, SHARED_PREFIX_LEN))
+    prompts = [shared + list(rng.integers(0, cfg.vocab_size, UNIQUE_LEN))
+               for _ in range(depth)]
+    rows, outs_by_tag = [], {}
+    for tag, eng in (("mono", Engine(cfg, params, scfg)),
+                     ("1p1d", DisaggEngine(cfg, params, scfg,
+                                           prefill_workers=1,
+                                           decode_workers=1))):
+        for _ in range(2):                     # compile + warm radix trees
+            eng.generate(prompts)
+        stats = []
+        for _ in range(3):
+            outs = eng.generate(prompts)
+            assert all(len(o) == NEW_TOKENS for o in outs)
+            stats.append(dict(eng.stats))
+        outs_by_tag[tag] = outs
+        s = sorted(stats, key=lambda d: d["decode_s"])[1]      # median run
+        rec = dict(queue_depth=depth, slots=slots, disagg=tag,
+                   tokens=int(s["tokens"]),
+                   tok_per_s=round(s["tok_per_s"], 1),
+                   prefill_tok_per_s=round(s["prefill_tok_per_s"], 1),
+                   ttft_s=round(s["ttft_s"], 5),
+                   prefill_s=round(s["prefill_s"], 4),
+                   decode_s=round(s["decode_s"], 4),
+                   host_syncs=int(s["host_syncs"]),
+                   shared_prefix_len=SHARED_PREFIX_LEN)
+        if tag != "mono":
+            router = s["router"]
+            rec["prefill_workers"] = router["prefill_workers"]
+            rec["decode_workers"] = router["decode_workers"]
+            # lifetime totals: migration happens on the first (warm-up)
+            # pass; measured passes re-hit the decode worker's radix tree
+            rec["migrated_pages"] = int(router["migrated_pages_total"])
+            rec["prefix_hit_rate"] = round(s["prefix_hits"] / depth, 4)
+            rec["prefix_tokens_reused"] = int(s["prefix_tokens_reused"])
+        rows.append(rec)
+    assert outs_by_tag["1p1d"] == outs_by_tag["mono"], \
+        "disaggregated output diverged from monolithic (parity contract)"
+    return rows
+
+
 def run(out_path: str = None, smoke: bool = False) -> dict:
     cfg = get_arch("tinyllama-1.1b", reduced=True)
     params = T.init_params(cfg, jax.random.PRNGKey(0))
@@ -143,6 +209,7 @@ def run(out_path: str = None, smoke: bool = False) -> dict:
                       prefix_queue_depths=list(prefix_depths),
                       shared_prefix_len=SHARED_PREFIX_LEN,
                       unique_len=UNIQUE_LEN, tp_depth=TP_DEPTH,
+                      disagg_depth=DISAGG_DEPTH,
                       draft_k=DRAFT_K, max_slots=MAX_SLOTS,
                       smoke=smoke),
         runs=[],
@@ -206,6 +273,21 @@ def run(out_path: str = None, smoke: bool = False) -> dict:
                  f"ttft_s={rec['ttft_s']} "
                  + (f"prefix_hit_rate={rec['prefix_hit_rate']} "
                     f"reused={rec['prefix_tokens_reused']}" if on else ""))
+    # monolithic-vs-disaggregated pair at matched depth (1 prefill + 1
+    # decode worker; shared-prefix workload so pages migrate) -- included
+    # in the smoke sweep for the same-run check_disagg structural gate
+    for rec in _bench_disagg(cfg, qp, DISAGG_DEPTH):
+        rec["params"] = f"fbfq_mixed_q2q3_disagg_{rec['disagg']}" \
+            if rec["disagg"] != "mono" else "fbfq_mixed_q2q3_mono"
+        results["runs"].append(rec)
+        extra = (f"migrated_pages={rec['migrated_pages']} "
+                 f"prefix_hit_rate={rec['prefix_hit_rate']}"
+                 if rec["disagg"] != "mono" else "")
+        emit(f"e2e_serve_disagg_{rec['disagg']}_d{DISAGG_DEPTH}",
+             rec["decode_s"] / max(rec["tokens"], 1) * 1e6,
+             f"tok/s={rec['tok_per_s']} "
+             f"prefill_tok/s={rec['prefill_tok_per_s']} "
+             f"ttft_s={rec['ttft_s']} {extra}")
     emit_json(results, out_path)
     return results
 

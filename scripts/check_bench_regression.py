@@ -10,11 +10,12 @@ Usage (what CI runs):
 Runs are matched on (params, queue_depth); only pairs present in BOTH
 files are compared, so the smoke sweep gates against the full committed
 baseline (and the spec-decode smoke run gates against the committed
-speculative row). A metric absent from the BASELINE row skips that gate
-instead of KeyError-ing (tensor-parallel rows, for instance, only exist
-in sweeps run with multiple forced devices, and older baselines predate
-some metrics); a metric the baseline has but the new run dropped is a
-reporting regression and FAILS. Three metrics are gated:
+speculative row). A metric absent from the BASELINE row -- or carried as
+an explicit JSON ``null`` -- skips that gate instead of crashing
+(tensor-parallel rows, for instance, only exist in sweeps run with
+multiple forced devices, and older baselines predate some metrics); a
+metric the baseline has that the new run dropped is a reporting
+regression and FAILS. Three metrics are gated:
 
   * decode tok/s        -- fail if new < (1 - tol) * baseline
   * prefill tok/s       -- fail if new < (1 - tol-prefill) * baseline
@@ -31,14 +32,23 @@ tree matching is deterministic for that workload, so a zero hit rate
 means the prefix cache structurally stopped working (their ttft rides
 the ordinary ttft gate).
 
-Tensor-parallel rows additionally carry a SAME-RUN structural gate
-(``check_tp_sliced``): whenever a sweep produced the forced-host-device
-TP rows, every tp>1 sliced datapath (``sliced`` / ``sliced_row``) must
-beat the same run's tp=1 row on decode tok/s, and at least one of them
-must beat it on prefill tok/s too -- the reason those datapaths exist.
-Comparing rows from ONE run cancels machine drift, so this gate is
-tight where the cross-run gates must be loose; it is skipped entirely
-on 1-device sweeps that produce no TP rows.
+Two SAME-RUN structural gates ride along (rows from ONE run cancel
+machine drift, so these are tight where the cross-run gates must be
+loose):
+
+* ``check_tp_sliced``: whenever a sweep produced the forced-host-device
+  TP rows, every tp>1 sliced datapath (``sliced`` / ``sliced_row``) must
+  beat the tp=1 row AT THE SAME QUEUE DEPTH on decode tok/s, and at
+  least one of them must beat it on prefill tok/s too -- the reason
+  those datapaths exist. Skipped entirely on 1-device sweeps that
+  produce no TP rows; a TP row MISSING a gated metric is a failure, not
+  a crash.
+* ``check_disagg``: whenever a sweep produced the monolithic-vs-
+  disaggregated row pair, each disagg row must (a) serve exactly as many
+  tokens as the mono row at the same depth (the parity contract,
+  structurally), (b) have actually migrated KV pages, and (c) show
+  decode-side prefix hits (migrated pages being USED). Missing or null
+  fields are failures.
 """
 from __future__ import annotations
 
@@ -47,34 +57,125 @@ import json
 import sys
 
 
+def _fmt(v, spec: str = ">8.1f") -> str:
+    """Format a metric that may be missing (None / explicit JSON null)
+    without crashing the report line."""
+    if isinstance(v, bool) or not isinstance(v, (int, float)):
+        return format("--", ">8") if spec.startswith(">8") else "--"
+    return format(v, spec)
+
+
 def check_tp_sliced(new: dict) -> int:
     """Same-run structural gate on the TP datapaths: sliced must be the
     fast path. Every tp>1 ``sliced``/``sliced_row`` row must beat the
-    run's tp=1 row on decode tok/s, and at least one must beat it on
-    prefill tok/s. Returns the number of failures (0 when the sweep has
-    no TP rows -- e.g. CI's 1-device smoke sweep)."""
+    tp=1 row AT THE SAME QUEUE DEPTH on decode tok/s, and per depth at
+    least one sliced row must beat tp=1 on prefill tok/s. Returns the
+    number of failures (0 when the sweep has no TP rows -- e.g. CI's
+    1-device smoke sweep). A sliced row whose gated metric is missing or
+    null counts as a failure (reporting regression), never a crash; a
+    depth with no tp=1 counterpart is skipped (nothing to compare)."""
     tp_rows = [r for r in new.get("runs", []) if "tp_matmul" in r]
-    base1 = [r for r in tp_rows if r.get("tp") == 1]
+    base1 = {r.get("queue_depth"): r for r in tp_rows if r.get("tp") == 1}
     sliced = [r for r in tp_rows
               if r.get("tp", 1) > 1 and "sliced" in r["tp_matmul"]]
     if not base1 or not sliced:
         return 0
-    t1 = base1[0]
     fails = 0
+    best_prefill: dict = {}     # depth -> best sliced prefill tok/s
     for r in sliced:
-        ok = r["tok_per_s"] > t1["tok_per_s"]
+        d = r.get("queue_depth")
+        t1 = base1.get(d)
+        if t1 is None:
+            print(f"SKIP tp{r.get('tp')} {r.get('tp_matmul', '?'):>10} "
+                  f"d{d}: no tp=1 row at this queue depth")
+            continue
+        rt, bt = r.get("tok_per_s"), t1.get("tok_per_s")
+        if rt is None or bt is None:
+            fails += 1
+            print(f"FAIL tp{r.get('tp')} {r['tp_matmul']:>10} d{d} "
+                  f"decode tok/s missing "
+                  f"({'sliced' if rt is None else 'tp1'} row)")
+        else:
+            ok = rt > bt
+            fails += not ok
+            print(f"{'OK ' if ok else 'FAIL'} tp{r['tp']} "
+                  f"{r['tp_matmul']:>10} d{d} decode {rt:>8.1f} vs tp1 "
+                  f"{bt:>8.1f}")
+        rp = r.get("prefill_tok_per_s")
+        if rp is None:
+            fails += 1
+            print(f"FAIL tp{r.get('tp')} {r['tp_matmul']:>10} d{d} "
+                  f"prefill tok/s missing")
+        elif rp > best_prefill.get(d, (0.0, None))[0]:
+            best_prefill[d] = (rp, r)
+    for d, (rp, r) in sorted(best_prefill.items(),
+                             key=lambda kv: str(kv[0])):
+        bp = base1[d].get("prefill_tok_per_s")
+        if bp is None:
+            fails += 1
+            print(f"FAIL tp1 d{d} prefill tok/s missing from tp=1 row")
+            continue
+        ok = rp > bp
         fails += not ok
         print(f"{'OK ' if ok else 'FAIL'} tp{r['tp']} {r['tp_matmul']:>10} "
-              f"decode {r['tok_per_s']:>8.1f} vs tp1 {t1['tok_per_s']:>8.1f}")
-    best = max(sliced, key=lambda r: r["prefill_tok_per_s"])
-    ok = best["prefill_tok_per_s"] > t1["prefill_tok_per_s"]
-    fails += not ok
-    print(f"{'OK ' if ok else 'FAIL'} tp{best['tp']} {best['tp_matmul']:>10} "
-          f"prefill {best['prefill_tok_per_s']:>8.1f} vs tp1 "
-          f"{t1['prefill_tok_per_s']:>8.1f}")
+              f"d{d} prefill {rp:>8.1f} vs tp1 {bp:>8.1f}")
     if fails:
         print(f"REGRESSION: sliced TP stopped beating tp1 "
               f"({fails} structural failure(s))")
+    return fails
+
+
+def check_disagg(new: dict) -> int:
+    """Same-run structural gate on the monolithic-vs-disaggregated row
+    pair. For every depth where the sweep emitted both a ``disagg:
+    "mono"`` row and disaggregated rows, each disagg row must serve the
+    SAME token count as the mono row (routed output is parity-pinned
+    token-identical, so the structural echo of that contract is an exact
+    match), must have migrated KV pages (the hand-off actually ran), and
+    must show decode-side prefix hits (the migrated pages were used at
+    admission). Missing or null fields are failures, not crashes.
+    Returns the failure count (0 when the sweep has no disagg rows)."""
+    rows = [r for r in new.get("runs", []) if "disagg" in r]
+    mono = {r.get("queue_depth"): r for r in rows
+            if r.get("disagg") == "mono"}
+    dis = [r for r in rows if r.get("disagg") not in (None, "mono")]
+    if not mono or not dis:
+        return 0
+    fails = 0
+    for r in dis:
+        d = r.get("queue_depth")
+        m = mono.get(d)
+        tag = f"disagg {r.get('disagg')} d{d}"
+        if m is None:
+            fails += 1
+            print(f"FAIL {tag}: no mono row at this queue depth")
+            continue
+        bad = []
+        rt, mt = r.get("tokens"), m.get("tokens")
+        if not isinstance(rt, int) or not isinstance(mt, int):
+            bad.append("tokens-missing")
+        elif rt != mt:
+            bad.append(f"tokens {rt} != mono {mt}")
+        mig = r.get("migrated_pages")
+        if not isinstance(mig, int):
+            bad.append("migrated_pages-missing")
+        elif mig <= 0:
+            bad.append("migrated_pages=0")
+        hit = r.get("prefix_hit_rate")
+        if not isinstance(hit, (int, float)) or isinstance(hit, bool):
+            bad.append("prefix_hit_rate-missing")
+        elif hit <= 0:
+            bad.append("prefix_hit_rate=0")
+        fails += len(bad)
+        print(f"{'OK ' if not bad else 'FAIL'} {tag} tokens "
+              f"{_fmt(rt, 'd') if isinstance(rt, int) else '--'} vs mono "
+              f"{_fmt(mt, 'd') if isinstance(mt, int) else '--'}, migrated "
+              f"{mig if isinstance(mig, int) else '--'}, prefix_hit_rate "
+              f"{_fmt(hit, '.2f')}"
+              + (f" [{'; '.join(bad)}]" if bad else ""))
+    if fails:
+        print(f"REGRESSION: disaggregated serving structurally broken "
+              f"({fails} failure(s))")
     return fails
 
 
@@ -90,49 +191,57 @@ def compare(new: dict, baseline: dict, tol: float, tol_prefill: float,
             continue
         compared += 1
         bad = []
-        # a metric absent from the BASELINE skips that gate instead of
-        # KeyError-ing (old baselines predate some metrics; rows only a
+        # a metric absent from the BASELINE (or null -- hand-edited
+        # baselines carry explicit nulls) skips that gate instead of
+        # crashing (old baselines predate some metrics; rows only a
         # richer sweep produces -- e.g. the multi-device tensor-parallel
         # rows -- are already handled by the pair matching above). A
         # metric the baseline HAS but the new run LACKS is a reporting
         # regression and fails: every engine row is expected to keep
-        # emitting tok_per_s/prefill_tok_per_s/ttft_s.
+        # emitting tok_per_s/prefill_tok_per_s/ttft_s. Floors/ceilings
+        # are computed only AFTER the presence check -- arithmetic on a
+        # null baseline metric is exactly the TypeError this gate must
+        # never die of.
         bt, rt = b.get("tok_per_s"), r.get("tok_per_s")
-        floor = (1.0 - tol) * bt if bt is not None else 0.0
-        if bt is not None and (rt is None or rt < floor):
-            bad.append("decode" if rt is not None else "decode-missing")
-        p_floor = (1.0 - tol_prefill) * b.get("prefill_tok_per_s", 0)
-        if b.get("prefill_tok_per_s") is not None:
-            rp = r.get("prefill_tok_per_s")
+        floor = None
+        if bt is not None:
+            floor = (1.0 - tol) * bt
+            if rt is None or rt < floor:
+                bad.append("decode" if rt is not None else "decode-missing")
+        bp, rp = b.get("prefill_tok_per_s"), r.get("prefill_tok_per_s")
+        p_floor = None
+        if bp is not None:
+            p_floor = (1.0 - tol_prefill) * bp
             if rp is None or rp < p_floor:
                 bad.append("prefill" if rp is not None
                            else "prefill-missing")
-        t_ceil = (1.0 + tol_ttft) * b.get("ttft_s", 0)
-        if b.get("ttft_s", 0) > 0:
-            rtt = r.get("ttft_s")
+        btt, rtt = b.get("ttft_s"), r.get("ttft_s")
+        t_ceil = None
+        if btt is not None and btt > 0:
+            t_ceil = (1.0 + tol_ttft) * btt
             if rtt is None or rtt > t_ceil:
                 bad.append("ttft" if rtt is not None else "ttft-missing")
         # prefix rows: the radix tree must actually hit on the
         # shared-system-prompt workload -- a structural gate (hit rate is
         # deterministic for this workload), not a wall-clock one
-        if b.get("prefix_hit_rate", 0) > 0 and r.get("prefix_hit_rate",
-                                                     0) <= 0:
+        if (b.get("prefix_hit_rate") or 0) > 0 and \
+                (r.get("prefix_hit_rate") or 0) <= 0:
             bad.append("prefix_hit_rate")
         status = "OK " if not bad else "FAIL"
-        accept = (f" accept_rate {r['accept_rate']:.2f} vs "
-                  f"{b.get('accept_rate', 0):.2f}"
+        accept = (f" accept_rate {_fmt(r.get('accept_rate'), '.2f')} vs "
+                  f"{_fmt(b.get('accept_rate'), '.2f')}"
                   if "accept_rate" in r else "")
         if "prefix_hit_rate" in r:
-            accept += (f" prefix_hit_rate {r['prefix_hit_rate']:.2f} vs "
-                       f"{b.get('prefix_hit_rate', 0):.2f}")
+            accept += (f" prefix_hit_rate "
+                       f"{_fmt(r.get('prefix_hit_rate'), '.2f')} vs "
+                       f"{_fmt(b.get('prefix_hit_rate'), '.2f')}")
         print(f"{status} {key[0]:>26} d{key[1]:<3} decode tok/s "
-              f"{r.get('tok_per_s', 0):>8.1f} vs {b.get('tok_per_s', 0):>8.1f} "
-              f"(floor {floor:.1f}) | prefill tok/s "
-              f"{r.get('prefill_tok_per_s', 0):>8.1f} vs "
-              f"{b.get('prefill_tok_per_s', 0):>8.1f} "
-              f"(floor {p_floor:.1f}) | ttft_s "
-              f"{r.get('ttft_s', 0):.5f} vs {b.get('ttft_s', 0):.5f} "
-              f"(ceil {t_ceil:.5f}){accept}")
+              f"{_fmt(rt)} vs {_fmt(bt)} "
+              f"(floor {_fmt(floor, '.1f')}) | prefill tok/s "
+              f"{_fmt(rp)} vs {_fmt(bp)} "
+              f"(floor {_fmt(p_floor, '.1f')}) | ttft_s "
+              f"{_fmt(rtt, '.5f')} vs {_fmt(btt, '.5f')} "
+              f"(ceil {_fmt(t_ceil, '.5f')}){accept}")
         if bad:
             failures.append((key, tuple(bad)))
     if compared == 0:
@@ -140,7 +249,8 @@ def compare(new: dict, baseline: dict, tol: float, tol_prefill: float,
               "baseline -- wrong file?")
         return 2
     tp_fails = check_tp_sliced(new)
-    if failures or tp_fails:
+    disagg_fails = check_disagg(new)
+    if failures or tp_fails or disagg_fails:
         if failures:
             print(f"REGRESSION: {failures} exceeded tolerances "
                   f"(decode {tol:.0%}, prefill {tol_prefill:.0%}, "

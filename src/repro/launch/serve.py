@@ -5,6 +5,12 @@ analogue of the paper's evaluation.
   PYTHONPATH=src python -m repro.launch.serve --arch tinyllama-1.1b \
       --reduced --policy paper_llama_mix --tokens 32 --requests 8 --slots 4
 
+Disaggregated serving (``--disagg --prefill-workers N --decode-workers
+M``) splits the engine into a prefill tier and a decode tier behind a
+KV-aware radix router; prompts route to the prefill worker with maximal
+prefix-cache overlap and their finished KV pages migrate to a decode
+worker (routed output stays token-identical to one monolithic engine).
+
 Tensor-parallel serving (``--tp N``) runs every jitted engine program
 through shard_map over a ("model",) mesh; on a CPU-only box add
 ``--force-host-devices N`` (or XLA_FLAGS=--xla_force_host_platform_
@@ -49,6 +55,7 @@ from repro.configs.base import get_arch
 from repro.core.policy import get_policy
 from repro.core.qlinear import quantize_params, quantized_param_bytes
 from repro.models import transformer as T
+from repro.serving.disagg import DisaggEngine
 from repro.serving.engine import Engine, ServeConfig
 
 
@@ -111,6 +118,17 @@ def main() -> None:
     ap.add_argument("--shared-prefix", type=int, default=0,
                     help="prepend this many shared system-prompt tokens "
                          "to every request (the prefix-cache workload)")
+    ap.add_argument("--disagg", action="store_true",
+                    help="disaggregated serving: split into prefill-"
+                         "worker and decode-worker engine instances "
+                         "behind a KV-aware radix router; finished "
+                         "prefill KV pages migrate to the decode tier "
+                         "(routed output stays token-identical to one "
+                         "monolithic engine)")
+    ap.add_argument("--prefill-workers", type=int, default=1,
+                    help="prefill-tier engine instances (--disagg)")
+    ap.add_argument("--decode-workers", type=int, default=1,
+                    help="decode-tier engine instances (--disagg)")
     ap.add_argument("--tp", type=int, default=1,
                     help="tensor-parallel degree: run the engine's jitted "
                          "programs via shard_map over a ('model',) mesh "
@@ -160,7 +178,7 @@ def main() -> None:
     if args.tp > 1:
         print(f"tensor-parallel: tp={args.tp} ({args.tp_matmul} matmul) "
               f"over {len(jax.devices())} visible devices")
-    engine = Engine(cfg, qp, ServeConfig(
+    scfg = ServeConfig(
         max_new_tokens=args.tokens, temperature=args.temperature,
         eos_id=args.eos_id, cache_len=args.cache_len, seed=args.seed,
         max_slots=args.slots, decode_chunk=decode_chunk,
@@ -171,7 +189,15 @@ def main() -> None:
         draft_verify=args.draft_verify,
         prefix_cache=args.prefix_cache, prefix_page=args.prefix_page,
         prefix_bytes=args.prefix_bytes,
-        tp=args.tp, tp_matmul=args.tp_matmul))
+        tp=args.tp, tp_matmul=args.tp_matmul)
+    if args.disagg:
+        print(f"disaggregated: {args.prefill_workers} prefill + "
+              f"{args.decode_workers} decode worker(s), KV-aware router")
+        engine = DisaggEngine(cfg, qp, scfg,
+                              prefill_workers=args.prefill_workers,
+                              decode_workers=args.decode_workers)
+    else:
+        engine = Engine(cfg, qp, scfg)
 
     on_token = None
     if args.stream:
@@ -197,6 +223,13 @@ def main() -> None:
         spec = (f", spec accept {s['accept_rate']:.0%} "
                 f"({s['draft_accepted']:.0f}/{s['draft_tokens']:.0f} "
                 f"drafts over {s['spec_rounds']:.0f} rounds)")
+    disagg = ""
+    if args.disagg:
+        rt = s["router"]
+        disagg = (f", router: {rt['migrated_pages_total']} pages migrated, "
+                  f"prefill hit rates {rt['prefill_hit_rate']}, "
+                  f"{rt['direct_decode']} direct-to-decode, peak depths "
+                  f"P{rt['prefill_peak_depth']}/D{rt['decode_peak_depth']}")
     prefix = ""
     if args.prefix_cache:
         prefix = (f", prefix hits {_rate(s['prefix_hits'], s['admissions']):.0%} "
@@ -210,7 +243,7 @@ def main() -> None:
           f"{s['tok_per_s']:.1f} tok/s ({s['tokens']} tokens, "
           f"{s['host_syncs']} host syncs / {s['requests']} requests, "
           f"{_rate(s['host_syncs'], s['requests']):.1f}/req, "
-          f"{s['chunks']} fused chunks{spec}{prefix})")
+          f"{s['chunks']} fused chunks{spec}{prefix}{disagg})")
 
 
 if __name__ == "__main__":

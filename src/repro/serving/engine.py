@@ -154,6 +154,24 @@ class ServeConfig:
 
 
 @dataclasses.dataclass
+class KVPages:
+    """Host-memory snapshot of a prompt's full KV pages, the hand-off
+    unit for disaggregated serving (serving/disagg.py): bit-for-bit
+    copies of page-pool rows (all layers, int8 scales included), plus
+    the token ids they cover so the receiving engine can re-key them in
+    its own radix tree. ``payload`` entries are pool-layout arrays with
+    the page axis at dim 1 -- e.g. ``k``: (L, n_pages, page, KH, Dh) --
+    where page q covers positions [q*page, (q+1)*page)."""
+    page: int
+    tokens: List[int]
+    payload: Dict[str, np.ndarray]
+
+    @property
+    def n_pages(self) -> int:
+        return len(self.tokens) // self.page
+
+
+@dataclasses.dataclass
 class Request:
     id: int
     prompt: List[int]
@@ -258,6 +276,7 @@ class Engine:
                 self._drafter.propose(params, self.cfg, cache, ds, tok,
                                       pos, act))
         self._prefix: Optional[PrefixCache] = None
+        self._page: Optional[int] = None
         if serve_cfg.prefix_cache:
             if not self._kv_family:
                 raise ValueError(
@@ -280,6 +299,11 @@ class Engine:
                                            donate_argnums=(0,))
             self._prefix_insert = jax.jit(self._prefix_insert_impl,
                                           donate_argnums=(0,))
+            # cross-engine page hand-off (export_kv_pages/import_kv_pages):
+            # the same pool-copy programs, pointed at host memory
+            self._pool_export = jax.jit(self._pool_export_impl)
+            self._pool_import = jax.jit(self._pool_import_impl,
+                                        donate_argnums=(0,))
         self._prefill = jax.jit(self._prefill_impl)
         # caches are donated so XLA aliases the ring buffers call-to-call
         self._admit_cache = jax.jit(self._admit_cache_impl,
@@ -384,6 +408,20 @@ class Engine:
         rows ``idx`` (n,); idx >= capacity drops (batch padding)."""
         pages = T.cache_gather_pages(gcache, rows, cols)
         return {k: pool[k].at[:, idx].set(pages[k], mode="drop")
+                for k in pool}
+
+    def _pool_export_impl(self, pool, idx):
+        """Gather pool pages ``idx`` (n,) for a cross-engine hand-off --
+        pure data movement, the export half of the disaggregation page
+        migration (the host copy happens in export_kv_pages)."""
+        return {k: v[:, idx] for k, v in pool.items()}
+
+    def _pool_import_impl(self, pool, pages, idx):
+        """Scatter imported pages into pool rows ``idx`` (n,) -- the
+        cross-engine twin of _prefix_insert_impl, sourced from another
+        engine's exported pages instead of a local group cache."""
+        return {k: (pool[k].at[:, idx].set(pages[k].astype(pool[k].dtype))
+                    if k in pages else pool[k])
                 for k in pool}
 
     def _prefill_chunk_impl(self, params, gcache, tokens, start, lengths,
@@ -656,17 +694,17 @@ class Engine:
         self._dstate: Dict[str, np.ndarray] = (
             self._drafter.init_state_np(B) if self._drafter else {})
         self._run_t0: Optional[float] = None
-        self.stats = self._fresh_stats(0)
+        self.stats = self._fresh_stats()
 
     @staticmethod
-    def _fresh_stats(requests: int) -> Dict[str, float]:
+    def _fresh_stats() -> Dict[str, float]:
         return dict(prefill_s=0.0, decode_s=0.0, tokens=0, tok_per_s=0.0,
                     host_syncs=0, admissions=0, chunks=0,
-                    requests=requests, prefill_groups=0, prefill_tokens=0,
+                    requests=0, prefill_groups=0, prefill_tokens=0,
                     prefill_tok_per_s=0.0, ttft_s=0.0,
                     draft_tokens=0, draft_accepted=0, accept_rate=0.0,
                     spec_rounds=0, prefix_hits=0, prefix_tokens_reused=0,
-                    prefix_evictions=0)
+                    prefix_evictions=0, prefix_insert_drops=0)
 
     def submit(self, prompt: List[int],
                max_new_tokens: Optional[int] = None,
@@ -836,6 +874,7 @@ class Engine:
         ring skip insertion: their early pages were already overwritten
         by ring wrap."""
         ev0 = self._prefix.evictions
+        dr0 = self._prefix.insert_drops
         jobs = []
         protect: set = set()        # shared across the group: one request's
         for i, r in enumerate(reqs):  # eviction must not recycle a pool
@@ -844,6 +883,11 @@ class Engine:
                          for pidx, p0 in self._prefix.insert(r.prompt,
                                                              protect)]
         self.stats["prefix_evictions"] += self._prefix.evictions - ev0
+        # a pool too small for the workload drops page insertions
+        # silently (no behavior change: matching just misses later);
+        # surface the count so saturated-pool runs are diagnosable
+        self.stats["prefix_insert_drops"] += (self._prefix.insert_drops
+                                              - dr0)
         if not jobs:
             return
         self._ensure_pool()
@@ -871,6 +915,84 @@ class Engine:
                 pspec = SH.serve_cache_specs(self._pool, self._plan)
                 self._pool = jax.device_put(
                     self._pool, SH.named(pspec, self._mesh))
+
+    # -- cross-engine KV hand-off (disaggregated serving) --------------------
+    @property
+    def prefix_page(self) -> Optional[int]:
+        """Positions per KV page (None when the prefix cache is off)."""
+        return self._page if self._prefix is not None else None
+
+    def prefix_match_len(self, tokens: List[int]) -> int:
+        """Router probe: how many leading tokens of ``tokens`` this
+        engine's radix tree already holds (0 with the cache off). Pure
+        host state, no LRU side effects -- a KV-aware router scores every
+        worker with this before routing (serving/router.py)."""
+        if self._prefix is None:
+            return 0
+        return self._prefix.match_len(list(tokens))
+
+    def export_kv_pages(self, tokens: List[int]) -> KVPages:
+        """Copy the full KV pages this engine has cached for ``tokens``
+        out to host memory, page-granular and bit-for-bit (int8-KV scales
+        included). The chain covers whole pages from position 0 up to the
+        first miss; a prompt this engine just prefilled (with the prefix
+        cache on) exports every full page of itself. This is the sending
+        half of the disaggregation hand-off: the pages land in another
+        engine via ``import_kv_pages`` and are reused through its
+        ordinary (parity-pinned) prefix-cache admission."""
+        if self._prefix is None:
+            raise RuntimeError(
+                "export_kv_pages needs ServeConfig.prefix_cache=True: the "
+                "page pool is the export source")
+        tokens = list(tokens)
+        chain = self._prefix.page_chain(tokens)
+        if not chain:
+            return KVPages(page=self._page, tokens=[], payload={})
+        self._ensure_pool()
+        idx = jnp.asarray(np.array([i for i, _ in chain], np.int32))
+        got = jax.device_get(self._pool_export(self._pool, idx))
+        return KVPages(page=self._page,
+                       tokens=tokens[:len(chain) * self._page],
+                       payload={k: np.asarray(v) for k, v in got.items()})
+
+    def import_kv_pages(self, kv: KVPages) -> int:
+        """Adopt another engine's exported pages: record their token
+        chain in this engine's radix tree and copy the payloads into its
+        page pool (one async device scatter -- no host sync). Returns the
+        number of pages actually imported; pages whose chain prefix is
+        already resident are deduplicated (their bits are identical by
+        construction: same params, same tokens, same prefill math), and a
+        saturated pool drops the tail exactly like a local insert (the
+        drop count rides the ``prefix_insert_drops`` stat). After an
+        import, admitting a request with that prompt hits the prefix
+        cache as if this engine had prefilled it itself -- which is the
+        disaggregation parity argument in one sentence."""
+        if self._prefix is None:
+            raise RuntimeError(
+                "import_kv_pages needs ServeConfig.prefix_cache=True: the "
+                "page pool is the import destination")
+        if kv.page != self._page:
+            raise ValueError(
+                f"page geometry mismatch: exported pages hold {kv.page} "
+                f"positions, this engine's pool holds {self._page}")
+        n = kv.n_pages
+        if n == 0 or len(kv.tokens) > self._T:
+            # mirror of the local insertion gate: prompts longer than the
+            # ring would have had their early pages overwritten by wrap
+            return 0
+        drops0 = self._prefix.insert_drops
+        new = self._prefix.insert(list(kv.tokens[:n * self._page]))
+        self.stats["prefix_insert_drops"] += (self._prefix.insert_drops
+                                              - drops0)
+        if not new:
+            return 0
+        self._ensure_pool()
+        src = np.array([p0 // self._page for _, p0 in new], np.int32)
+        dst = np.array([i for i, _ in new], np.int32)
+        pages = {k: jnp.asarray(v[:, src]) for k, v in kv.payload.items()}
+        self._pool = self._pool_import(self._pool, pages,
+                                       jnp.asarray(dst))
+        return len(new)
 
     def _admit_group(self, slots: List[int], reqs: List[Request]) -> None:
         """Prefill ``reqs`` as one right-padded batch and scatter all their
@@ -1052,7 +1174,15 @@ class Engine:
         admission never decodes (decode_s == 0 with tokens > 0 -- the old
         ``max(x, 1e-9)`` guard reported absurd rates there), and
         spec_rounds == 0 leaves draft_tokens at 0. All rates report 0.0
-        in those cases."""
+        in those cases.
+
+        ``requests`` counts admissions over the whole cycle, not the
+        queue length at run() entry: a request submitted from an
+        ``on_token`` callback mid-cycle is served by this cycle and must
+        be counted by it (the old entry-time stamp missed every one of
+        them); a request cancelled while still queued is never admitted
+        and is not a served request."""
+        self.stats["requests"] = self.stats["admissions"]
         ntok = sum(len(t) for t in done.values())
         self.stats["tokens"] = ntok
         self.stats["tok_per_s"] = (
@@ -1073,7 +1203,7 @@ class Engine:
         slots are drained. Returns {request_id: tokens} for THIS cycle;
         stats cover this cycle only (slots are always empty between run()
         calls, so resetting the counters here is safe)."""
-        self.stats = self._fresh_stats(len(self._queue))
+        self.stats = self._fresh_stats()
         self._run_t0 = time.perf_counter()
         while self._queue or any(r is not None for r in self._slots):
             self._admit_pending()
@@ -1114,7 +1244,6 @@ class Engine:
                 "run() to drain them before generate_reference()")
         self._reset()
         ids = [self.submit(list(p)) for p in prompts]
-        self.stats["requests"] = len(ids)
         self._run_t0 = time.perf_counter()
         self._admit_pending()
         t0 = time.perf_counter()
@@ -1166,7 +1295,6 @@ class Engine:
                 "run() to drain them before generate_spec_reference()")
         self._reset()
         ids = [self.submit(list(p)) for p in prompts]
-        self.stats["requests"] = len(ids)
         self._run_t0 = time.perf_counter()
         self._admit_pending()
         C = self.scfg.decode_chunk

@@ -69,6 +69,10 @@ class PrefixCache:
         self._free: List[int] = list(range(capacity - 1, -1, -1))
         self._clock = 0
         self.evictions = 0              # lifetime counter
+        self.insert_drops = 0           # lifetime counter: full pages an
+                                        # insert() dropped because the pool
+                                        # was exhausted and nothing was
+                                        # evictable (saturated-pool signal)
 
     # -- introspection ------------------------------------------------------
     @property
@@ -118,6 +122,53 @@ class PrefixCache:
             m += best_r
         return m, pages
 
+    def match_len(self, tokens: List[int]) -> int:
+        """Overlap score for router probes: the length ``match`` would
+        return, WITHOUT touching LRU stamps -- a router scoring one
+        request against every worker's tree must not distort the eviction
+        order of the workers it does not pick."""
+        page = self.page
+        cap = len(tokens) - 1
+        node = self._root
+        m = 0
+        while m + page <= cap:
+            child = node.children.get(tuple(tokens[m:m + page]))
+            if child is None:
+                break
+            node = child
+            m += page
+        want = tokens[m:min(m + page, cap)]
+        best_r = 0
+        for key in node.children:
+            r = 0
+            for a, b in zip(key, want):
+                if a != b:
+                    break
+                r += 1
+            best_r = max(best_r, r)
+        return m + best_r
+
+    def page_chain(self, tokens: List[int]) -> List[Tuple[int, int]]:
+        """The FULL-page chain cached for ``tokens``: [(pool_idx,
+        start_pos), ...] for every whole page resident from position 0,
+        stopping at the first miss. Unlike ``match`` there is no len-1
+        cap and no partial-page entry -- this is the export granularity
+        for cross-engine KV hand-off (pool pages only exist whole).
+        Touches LRU stamps: an exported page was genuinely used."""
+        page = self.page
+        node = self._root
+        chain: List[Tuple[int, int]] = []
+        m = 0
+        while m + page <= len(tokens):
+            child = node.children.get(tuple(tokens[m:m + page]))
+            if child is None:
+                break
+            self._touch(child)
+            chain.append((child.page_idx, m))
+            node = child
+            m += page
+        return chain
+
     # -- insertion / eviction ------------------------------------------------
     def _evict_one(self, protect: set) -> Optional[int]:
         """Free the least-recently-touched childless node not in
@@ -154,8 +205,10 @@ class PrefixCache:
         Returns [(pool_idx, start_pos), ...] for the NEW pages -- the
         engine must copy those rows out of its freshly prefilled cache.
         Stops early (dropping the tail) if the pool is exhausted and
-        nothing is evictable. Matched pages are LRU-touched, so a re-hit
-        after eviction re-inserts and re-ranks naturally.
+        nothing is evictable; the dropped page count accumulates in
+        ``insert_drops`` so saturated pools are diagnosable. Matched
+        pages are LRU-touched, so a re-hit after eviction re-inserts and
+        re-ranks naturally.
 
         ``protect``: nodes eviction must not free. The caller batching
         SEVERAL insertions into one device copy passes a shared set so a
@@ -173,6 +226,7 @@ class PrefixCache:
             if child is None:
                 idx = self._alloc(path)
                 if idx is None:
+                    self.insert_drops += len(tokens) // page - q
                     break
                 child = _Node(key, idx, node)
                 node.children[key] = child

@@ -1,0 +1,182 @@
+"""Unit suite for the benchmark regression gate
+(scripts/check_bench_regression.py): the gate runs in CI on every PR, so
+its own failure modes -- crashing on null/missing baseline metrics,
+comparing TP rows across mismatched queue depths, letting a missing
+metric pass silently -- are regressions in their own right.
+"""
+import importlib.util
+import pathlib
+
+import pytest
+
+_SPEC = importlib.util.spec_from_file_location(
+    "check_bench_regression",
+    pathlib.Path(__file__).resolve().parents[1]
+    / "scripts" / "check_bench_regression.py")
+gate = importlib.util.module_from_spec(_SPEC)
+_SPEC.loader.exec_module(gate)
+
+
+def _row(params="p", depth=8, **kw):
+    r = dict(params=params, queue_depth=depth, tok_per_s=100.0,
+             prefill_tok_per_s=500.0, ttft_s=0.01)
+    r.update(kw)
+    return r
+
+
+def _compare(new_rows, base_rows, tol=0.2, tol_prefill=0.6, tol_ttft=2.0):
+    return gate.compare(dict(runs=new_rows), dict(runs=base_rows),
+                        tol, tol_prefill, tol_ttft)
+
+
+# ---------------------------------------------------------------------------
+# null / missing baseline metrics must skip their gate, never crash
+# ---------------------------------------------------------------------------
+
+def test_null_baseline_metrics_skip_not_crash(capsys):
+    """A hand-edited baseline row carrying explicit JSON nulls for every
+    gated metric: floors/ceilings must not be computed from None (the
+    historical TypeError), the row passes, and the report line renders."""
+    base = [_row(tok_per_s=None, prefill_tok_per_s=None, ttft_s=None,
+                 prefix_hit_rate=None)]
+    assert _compare([_row(prefix_hit_rate=0.0)], base) == 0
+    assert "--" in capsys.readouterr().out          # null rendered, not 8.1f
+
+
+def test_null_prefill_only(capsys):
+    """Nulls are per-metric: a null prefill baseline skips ONLY that
+    gate; a genuine decode regression on the same row still fails."""
+    base = [_row(prefill_tok_per_s=None)]
+    assert _compare([_row(tok_per_s=10.0)], base) == 1
+    assert "decode" in capsys.readouterr().out
+
+
+def test_absent_baseline_metric_skips(capsys):
+    """A metric absent from the baseline dict entirely (old baselines
+    predate some metrics) skips that gate."""
+    b = _row()
+    del b["ttft_s"]
+    assert _compare([_row(ttft_s=99.0)], [b]) == 0
+
+
+def test_new_run_missing_metric_fails(capsys):
+    """The baseline HAS the metric but the new run dropped it: a
+    reporting regression, failed as '<metric>-missing'."""
+    r = _row()
+    del r["prefill_tok_per_s"]
+    assert _compare([r], [_row()]) == 1
+    assert "prefill-missing" in capsys.readouterr().out
+
+
+def test_within_tolerance_passes():
+    assert _compare([_row(tok_per_s=90.0, ttft_s=0.02)], [_row()]) == 0
+
+
+def test_no_common_pairs_is_an_error():
+    assert _compare([_row("a")], [_row("b")]) == 2
+
+
+# ---------------------------------------------------------------------------
+# check_tp_sliced: per-queue-depth comparison, missing metrics fail
+# ---------------------------------------------------------------------------
+
+def _tp(depth, tp, mm, dec, pre):
+    return _row(f"tp{tp}_{mm}", depth, tp=tp, tp_matmul=mm,
+                tok_per_s=dec, prefill_tok_per_s=pre)
+
+
+def test_tp_sliced_compares_same_depth():
+    """tp=1 rows at two depths: each sliced row must gate against the
+    tp=1 row at ITS depth, not base1[0] arbitrarily. The d8 sliced row
+    beats tp=1@d8 but would LOSE to tp=1@d32 -- correct per-depth
+    comparison passes both."""
+    rows = [_tp(8, 1, "padded", 100, 400), _tp(32, 1, "padded", 900, 900),
+            _tp(8, 2, "sliced", 150, 500), _tp(32, 2, "sliced", 950, 950)]
+    assert gate.check_tp_sliced(dict(runs=rows)) == 0
+
+
+def test_tp_sliced_fails_per_depth():
+    rows = [_tp(8, 1, "padded", 100, 400), _tp(32, 1, "padded", 900, 900),
+            _tp(8, 2, "sliced", 150, 500), _tp(32, 2, "sliced", 850, 950)]
+    assert gate.check_tp_sliced(dict(runs=rows)) == 1
+
+
+def test_tp_sliced_missing_metric_fails_not_crashes(capsys):
+    """A sliced row with no prefill_tok_per_s used to KeyError inside
+    max(); now it counts as a structural failure with a message."""
+    r = _tp(8, 2, "sliced", 150, 500)
+    del r["prefill_tok_per_s"]
+    rows = [_tp(8, 1, "padded", 100, 400), r]
+    assert gate.check_tp_sliced(dict(runs=rows)) == 1
+    assert "missing" in capsys.readouterr().out
+
+
+def test_tp_sliced_null_decode_fails_not_crashes():
+    rows = [_tp(8, 1, "padded", 100, 400),
+            _tp(8, 2, "sliced", None, 500)]
+    assert gate.check_tp_sliced(dict(runs=rows)) >= 1
+
+
+def test_tp_sliced_unmatched_depth_skipped(capsys):
+    """A sliced row at a depth with no tp=1 counterpart has nothing to
+    compare against: skipped with a message, not compared cross-depth."""
+    rows = [_tp(8, 1, "padded", 100, 400), _tp(32, 2, "sliced", 50, 50)]
+    assert gate.check_tp_sliced(dict(runs=rows)) == 0
+    assert "SKIP" in capsys.readouterr().out
+
+
+def test_tp_sliced_no_tp_rows_skips():
+    assert gate.check_tp_sliced(dict(runs=[_row()])) == 0
+
+
+# ---------------------------------------------------------------------------
+# check_disagg: the mono-vs-disagg structural gate
+# ---------------------------------------------------------------------------
+
+def _mono(depth=8, tokens=80):
+    return _row("mono", depth, disagg="mono", tokens=tokens)
+
+
+def _dis(depth=8, tokens=80, migrated=6, hit=1.0):
+    return _row("dis", depth, disagg="1p1d", tokens=tokens,
+                migrated_pages=migrated, prefix_hit_rate=hit)
+
+
+def test_disagg_pair_passes():
+    assert gate.check_disagg(dict(runs=[_mono(), _dis()])) == 0
+
+
+def test_disagg_token_mismatch_fails(capsys):
+    """The structural echo of the parity contract: disagg must serve
+    exactly the mono token count at the same depth."""
+    assert gate.check_disagg(dict(runs=[_mono(), _dis(tokens=79)])) == 1
+    assert "tokens 79 != mono 80" in capsys.readouterr().out
+
+
+def test_disagg_no_migration_fails():
+    assert gate.check_disagg(dict(runs=[_mono(), _dis(migrated=0)])) == 1
+
+
+def test_disagg_cold_decode_tier_fails():
+    assert gate.check_disagg(dict(runs=[_mono(), _dis(hit=0.0)])) == 1
+
+
+def test_disagg_null_fields_fail_not_crash(capsys):
+    assert gate.check_disagg(dict(runs=[
+        _mono(), _dis(tokens=None, migrated=None, hit=None)])) == 3
+    assert "missing" in capsys.readouterr().out
+
+
+def test_disagg_unmatched_depth_fails():
+    assert gate.check_disagg(dict(runs=[_mono(8), _dis(32)])) == 1
+
+
+def test_disagg_absent_rows_skip():
+    assert gate.check_disagg(dict(runs=[_row()])) == 0
+
+
+def test_compare_runs_structural_gates():
+    """compare() folds both same-run structural gates into its exit
+    code even when every cross-run pair is within tolerance."""
+    rows = [_row(), _mono(), _dis(migrated=0)]
+    assert _compare(rows, [_row()]) == 1

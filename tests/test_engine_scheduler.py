@@ -354,3 +354,24 @@ def test_scheduler_recurrent_family():
     singles = [Engine(cfg, params, ServeConfig(**scfg)).generate([p])[0]
                for p in prompts]
     assert outs == singles
+
+
+def test_requests_stat_counts_callback_submissions(model):
+    """A request submitted from an on_token callback mid-cycle is served
+    in the same run() -- and must be COUNTED: stats["requests"] used to
+    be stamped from len(queue) at entry, so follow-ups were served but
+    invisible (regression). Now it counts admissions over the cycle."""
+    cfg, _ = model
+    eng = _engine(model, max_new_tokens=4, decode_chunk=4)
+    follow = _prompts(cfg, 1, seed=13)[0]
+    fired = []
+
+    def cb(rid, tok):
+        if not fired:
+            fired.append(eng.submit(follow))
+    ids = [eng.submit(p, on_token=cb) for p in _prompts(cfg, 2, seed=12)]
+    res = eng.run()
+    assert set(res) == {*ids, fired[0]}             # follow-up served
+    assert len(res[fired[0]]) == 4
+    assert eng.stats["requests"] == 3               # ...and counted
+    assert eng.stats["admissions"] == 3

@@ -260,9 +260,36 @@ def test_radix_capacity_exhaustion_drops_tail():
     pc = PrefixCache(page=2, capacity=2)
     new = pc.insert([1, 2, 3, 4, 5, 6])      # 3 pages into a 2-page pool
     assert len(new) == 2                     # tail dropped...
+    assert pc.insert_drops == 1              # ...and COUNTED, not silent
     assert pc.match([1, 2, 3, 4, 5, 6])[0] == 4   # ...prefix still usable
     # the insertion path itself is protected from eviction: inserting a
     # longer chain never evicts its own ancestors
     pc2 = PrefixCache(page=2, capacity=2)
     pc2.insert([1, 2, 3, 4, 5, 6, 7, 8])
     assert pc2.match([1, 2, 3, 4])[0] == 3   # chain prefix intact (cap 3)
+    assert pc2.insert_drops == 2             # both tail pages
+    # re-inserting the resident prefix allocates nothing and drops nothing
+    pc2.insert([1, 2, 3, 4])
+    assert pc2.insert_drops == 2
+
+
+def test_engine_surfaces_insert_drops_stat(causal):
+    """A pool too small for the workload's page chains silently dropped
+    insertion tails (by design -- serving must not fail); the drop count
+    must surface as the ``prefix_insert_drops`` engine stat so saturated
+    pools are diagnosable, with parity untouched (regression: the stat
+    did not exist)."""
+    cfg, _ = causal
+    rng = np.random.default_rng(21)
+    P = list(rng.integers(0, cfg.vocab_size, 28))   # 3 full pages @ page=8
+    off = _mk(causal)
+    tiny = _mk(causal, prefix=True, prefix_bytes=1)  # floor: 2-page pool
+    expect = off.generate([P])
+    assert tiny.generate([P]) == expect             # parity regardless
+    assert tiny.stats["prefix_insert_drops"] == 1   # 3rd page dropped
+    assert tiny.generate([P]) == expect             # resident prefix reused
+    assert tiny.stats["prefix_insert_drops"] == 1   # re-dropped tail
+    assert tiny.stats["prefix_hits"] == 1
+    big = _mk(causal, prefix=True)                  # default 64 MiB budget
+    assert big.generate([P]) == expect
+    assert big.stats["prefix_insert_drops"] == 0
