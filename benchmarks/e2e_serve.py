@@ -116,6 +116,9 @@ def _bench_one(cfg, params, depth: int, drafter: str = None,
                tok_per_s=round(s["tok_per_s"], 1),
                prefill_tok_per_s=round(s["prefill_tok_per_s"], 1),
                ttft_s=round(s["ttft_s"], 5),
+               ttft_p50_s=round(s["ttft_p50_s"], 5),
+               ttft_p99_s=round(s["ttft_p99_s"], 5),
+               queue_wait_s=round(s["queue_wait_s"], 5),
                prefill_s=round(s["prefill_s"], 4),
                decode_s=round(s["decode_s"], 4),
                host_syncs=int(s["host_syncs"]),
@@ -173,6 +176,8 @@ def _bench_disagg(cfg, params, depth: int) -> list:
                    tok_per_s=round(s["tok_per_s"], 1),
                    prefill_tok_per_s=round(s["prefill_tok_per_s"], 1),
                    ttft_s=round(s["ttft_s"], 5),
+                   ttft_p50_s=round(s["ttft_p50_s"], 5),
+                   ttft_p99_s=round(s["ttft_p99_s"], 5),
                    prefill_s=round(s["prefill_s"], 4),
                    decode_s=round(s["decode_s"], 4),
                    host_syncs=int(s["host_syncs"]),

@@ -49,6 +49,15 @@ loose):
   structurally), (b) have actually migrated KV pages, and (c) show
   decode-side prefix hits (migrated pages being USED). Missing or null
   fields are failures.
+
+Trace-bench JSONs (``benchmark: "trace_serve"``) dispatch to
+``check_trace`` instead: rows are matched on (mix, rate_rps, params),
+tail TTFT is gated by the same --tol-ttft growth ceiling, goodput-
+under-SLO by an absolute-fraction floor (--goodput-drop), and a
+same-run structural pass pins the arrival-time accounting contract:
+every row must carry non-null tail stats and its arrival-stamped TTFT
+percentiles must not exceed the run-entry-stamped ones the bench also
+records (the bugfix this gate exists to keep fixed).
 """
 from __future__ import annotations
 
@@ -179,6 +188,112 @@ def check_disagg(new: dict) -> int:
     return fails
 
 
+_TRACE_REQUIRED = ("ttft_p50_s", "ttft_p99_s", "itl_p50_s", "itl_p99_s",
+                   "goodput_frac")
+
+
+def check_trace(new: dict, baseline: dict, tol_ttft: float,
+                goodput_drop: float) -> int:
+    """Gate for trace_serve JSONs. Cross-run, matched on
+    (mix, rate_rps, params) against the committed baseline:
+
+      * tail TTFT   -- fail if new ttft_p99_s > (1 + tol_ttft) * baseline
+      * goodput     -- fail if new goodput_frac < baseline - goodput_drop
+                       (absolute fraction: SLO-conditioned goodput is a
+                       ratio in [0, 1], so a fractional tolerance would
+                       explode near zero)
+
+    A metric absent from (or null in) the BASELINE row skips that gate;
+    a metric the baseline has that the new run dropped fails (reporting
+    regression) -- same contract as ``compare``. Same-run structural
+    checks ride along for every new row regardless of baseline pairing:
+
+      * required tail stats present and non-null (_TRACE_REQUIRED),
+        requests > 0, p99 >= p50 >= 0
+      * the arrival-time accounting contract: arrival-stamped TTFT
+        percentiles must not exceed the run-entry-stamped percentiles
+        recorded alongside them (run() entry always precedes a mid-cycle
+        arrival, so the fixed stamp can only shrink TTFT)
+      * the summary must report a saturation_rps per swept mix
+    """
+    base_by_key = {(r.get("mix"), r.get("rate_rps"), r.get("params")): r
+                   for r in baseline.get("runs", [])}
+    failures, compared = 0, 0
+    for r in new.get("runs", []):
+        key = (r.get("mix"), r.get("rate_rps"), r.get("params"))
+        tag = f"{key[2]:>18} {key[0]:>5} @{key[1]:g} rps"
+        bad = []
+        # --- same-run structural checks (no baseline needed) ---
+        for f in _TRACE_REQUIRED:
+            v = r.get(f)
+            if isinstance(v, bool) or not isinstance(v, (int, float)):
+                bad.append(f"{f}-missing")
+        if not isinstance(r.get("requests"), int) or r["requests"] <= 0:
+            bad.append("requests<=0")
+        p50, p99 = r.get("ttft_p50_s"), r.get("ttft_p99_s")
+        if isinstance(p50, float) and isinstance(p99, float):
+            if not (0.0 <= p50 <= p99):
+                bad.append("ttft-percentiles-disordered")
+            # the bugfix contract, structurally: arrival-stamped tails
+            # can only be <= the run-entry-stamped tails (percentiles of
+            # pointwise-dominated samples, tolerance for rounding)
+            o50 = r.get("ttft_runentry_p50_s")
+            o99 = r.get("ttft_runentry_p99_s")
+            if isinstance(o50, float) and p50 > o50 + 1e-5:
+                bad.append(f"ttft_p50 {p50} > runentry {o50}")
+            if isinstance(o99, float) and p99 > o99 + 1e-5:
+                bad.append(f"ttft_p99 {p99} > runentry {o99}")
+        # --- cross-run gates vs the committed baseline ---
+        b = base_by_key.get(key)
+        t_ceil = g_floor = None
+        if b is not None:
+            compared += 1
+            btt = b.get("ttft_p99_s")
+            if isinstance(btt, (int, float)) and btt > 0:
+                t_ceil = (1.0 + tol_ttft) * btt
+                if not isinstance(p99, float):
+                    bad.append("ttft_p99-dropped")
+                elif p99 > t_ceil:
+                    bad.append("ttft_p99")
+            bg = b.get("goodput_frac")
+            rg = r.get("goodput_frac")
+            if isinstance(bg, (int, float)):
+                g_floor = bg - goodput_drop
+                if not isinstance(rg, (int, float)):
+                    bad.append("goodput-dropped")
+                elif rg < g_floor:
+                    bad.append("goodput")
+        failures += len(bad)
+        print(f"{'OK ' if not bad else 'FAIL'} {tag} ttft_p99 "
+              f"{_fmt(p99, '.5f')} vs {_fmt(b.get('ttft_p99_s') if b else None, '.5f')} "
+              f"(ceil {_fmt(t_ceil, '.5f')}) | goodput "
+              f"{_fmt(r.get('goodput_frac'), '.3f')} vs "
+              f"{_fmt(b.get('goodput_frac') if b else None, '.3f')} "
+              f"(floor {_fmt(g_floor, '.3f')}) | itl_p99 "
+              f"{_fmt(r.get('itl_p99_s'), '.6f')}"
+              + (f" [{'; '.join(bad)}]" if bad else ""))
+    for mix in new.get("workload", {}).get("mixes", {}):
+        s = new.get("summary", {}).get(mix, {})
+        if not isinstance(s.get("saturation_rps"), (int, float)):
+            failures += 1
+            print(f"FAIL summary[{mix}]: saturation_rps missing")
+        else:
+            print(f"OK  summary[{mix}] saturation_rps "
+                  f"{s['saturation_rps']:g} (met {s.get('rates_met')})")
+    if compared == 0:
+        print("ERROR: no (mix, rate_rps, params) rows in common with "
+              "the baseline -- wrong file?")
+        return 2
+    if failures:
+        print(f"REGRESSION: trace gate failed ({failures} failure(s); "
+              f"ttft_p99 ceiling +{tol_ttft:.0%}, goodput floor "
+              f"-{goodput_drop:.2f} absolute)")
+        return 1
+    print(f"all {compared} compared trace rows within tolerance "
+          f"(ttft_p99 +{tol_ttft:.0%}, goodput -{goodput_drop:.2f})")
+    return 0
+
+
 def compare(new: dict, baseline: dict, tol: float, tol_prefill: float,
             tol_ttft: float) -> int:
     base_by_key = {(r["params"], r["queue_depth"]): r
@@ -221,6 +336,13 @@ def compare(new: dict, baseline: dict, tol: float, tol_prefill: float,
             t_ceil = (1.0 + tol_ttft) * btt
             if rtt is None or rtt > t_ceil:
                 bad.append("ttft" if rtt is not None else "ttft-missing")
+        # tail TTFT (p99 over the depth's requests) rides the same
+        # growth ceiling; baselines predating the percentile stats skip
+        bt99, rt99 = b.get("ttft_p99_s"), r.get("ttft_p99_s")
+        if bt99 is not None and bt99 > 0:
+            if rt99 is None or rt99 > (1.0 + tol_ttft) * bt99:
+                bad.append("ttft_p99" if rt99 is not None
+                           else "ttft_p99-missing")
         # prefix rows: the radix tree must actually hit on the
         # shared-system-prompt workload -- a structural gate (hit rate is
         # deterministic for this workload), not a wall-clock one
@@ -278,11 +400,23 @@ def main() -> int:
                          "(2.00, i.e. 3x; ttft is the noisiest metric -- "
                          "the gate exists to catch structural "
                          "regressions like losing batched admission)")
+    ap.add_argument("--goodput-drop", type=float, default=0.25,
+                    help="allowed ABSOLUTE goodput-fraction drop for "
+                         "trace_serve gates (0.25; goodput is a ratio "
+                         "in [0,1], fractional tolerances explode near "
+                         "zero)")
     args = ap.parse_args()
     with open(args.new) as f:
         new = json.load(f)
     with open(args.baseline) as f:
         baseline = json.load(f)
+    if new.get("benchmark") == "trace_serve":
+        if baseline.get("benchmark") != "trace_serve":
+            print("ERROR: --new is a trace_serve JSON but --baseline "
+                  "is not")
+            return 2
+        return check_trace(new, baseline, args.tol_ttft,
+                           args.goodput_drop)
     return compare(new, baseline, args.tol, args.tol_prefill,
                    args.tol_ttft)
 

@@ -149,6 +149,28 @@ def main() -> None:
                          "devices for CPU TP testing (applied before "
                          "jax init; also honored from the "
                          "REPRO_FORCE_HOST_DEVICES env var)")
+    ap.add_argument("--http", action="store_true",
+                    help="serve an OpenAI-compatible HTTP front-end "
+                         "(POST /v1/completions with a token-id prompt, "
+                         "SSE streaming, per-request priority/deadline_s/"
+                         "timeout_s; GET /health, /v1/models, /stats) "
+                         "instead of draining a synthetic queue")
+    ap.add_argument("--host", default="127.0.0.1",
+                    help="--http listen address")
+    ap.add_argument("--port", type=int, default=8000,
+                    help="--http listen port (0 = ephemeral)")
+    ap.add_argument("--max-queue", type=int, default=0,
+                    help="bounded admission queue: submit()/HTTP requests "
+                         "beyond this depth are rejected with a "
+                         "structured reason (HTTP 429); 0 = unbounded")
+    ap.add_argument("--preempt", action="store_true",
+                    help="allow a strictly-higher-priority queued request "
+                         "to preempt the lowest-priority running slot "
+                         "(the victim keeps its streamed tokens)")
+    ap.add_argument("--request-timeout", type=float, default=120.0,
+                    help="--http default per-request wall ceiling in "
+                         "seconds (overridable per request via "
+                         "timeout_s)")
     args = ap.parse_args()
 
     cfg = get_arch(args.arch, reduced=args.reduced)
@@ -189,6 +211,7 @@ def main() -> None:
         draft_verify=args.draft_verify,
         prefix_cache=args.prefix_cache, prefix_page=args.prefix_page,
         prefix_bytes=args.prefix_bytes,
+        max_queue=args.max_queue, preempt=args.preempt,
         tp=args.tp, tp_matmul=args.tp_matmul)
     if args.disagg:
         print(f"disaggregated: {args.prefill_workers} prefill + "
@@ -198,6 +221,14 @@ def main() -> None:
                               decode_workers=args.decode_workers)
     else:
         engine = Engine(cfg, qp, scfg)
+
+    if args.http:
+        from repro.serving.frontend import FrontendConfig, serve_forever
+        serve_forever(engine, FrontendConfig(
+            host=args.host, port=args.port, model_name=args.arch,
+            request_timeout_s=args.request_timeout,
+            max_tokens_default=args.tokens))
+        return
 
     on_token = None
     if args.stream:

@@ -50,8 +50,11 @@ import dataclasses
 import time
 from typing import Any, Callable, Dict, List, Optional
 
+import numpy as np
+
 from repro.configs.base import ModelConfig
-from repro.serving.engine import _KV_FAMILIES, Engine, Request, ServeConfig
+from repro.serving.engine import (_KV_FAMILIES, Engine, EngineSaturated,
+                                  Request, ServeConfig)
 from repro.serving.router import KVRouter
 
 
@@ -134,10 +137,17 @@ class DisaggEngine:
     def submit(self, prompt: List[int],
                max_new_tokens: Optional[int] = None,
                on_token: Optional[Callable[[int, int], None]] = None,
-               speculate: Optional[bool] = None) -> int:
+               speculate: Optional[bool] = None,
+               priority: int = 0,
+               deadline_s: Optional[float] = None,
+               on_done: Optional[Callable[[Request], None]] = None,
+               arrival_t: Optional[float] = None) -> int:
         """Queue a request; same contract as ``Engine.submit`` (including
-        the KV-ring bound), validated eagerly so a bad request fails at
-        submission, not mid-hand-off."""
+        the KV-ring bound and the SLO fields), validated eagerly so a bad
+        request fails at submission, not mid-hand-off. The arrival stamp
+        taken here survives the prefill->decode hand-off: the decode-tier
+        submit receives it via ``arrival_t``, so TTFT measured by the
+        decode worker still counts from the request's true arrival."""
         if not prompt:
             raise ValueError("empty prompt")
         budget = (self.scfg.max_new_tokens if max_new_tokens is None
@@ -151,13 +161,31 @@ class DisaggEngine:
             raise ValueError(
                 f"prompt ({len(prompt)}) + max_new_tokens ({budget}) "
                 f"exceeds cache_len {self._T}; raise ServeConfig.cache_len")
+        if (self.scfg.max_queue > 0
+                and len(self._queue) >= self.scfg.max_queue):
+            raise EngineSaturated(
+                "queue_full",
+                f"queue holds {len(self._queue)} requests "
+                f"(ServeConfig.max_queue={self.scfg.max_queue})")
         req = Request(id=self._next_id, prompt=list(prompt),
                       max_new_tokens=budget, on_token=on_token,
-                      speculate=speculate)
+                      speculate=speculate, priority=int(priority),
+                      deadline_s=deadline_s, on_done=on_done,
+                      submit_t=(time.perf_counter() if arrival_t is None
+                                else arrival_t))
         req._route = None               # (prefill worker, decode worker)
         self._next_id += 1
         self._queue.append(req)
         return req.id
+
+    def _complete(self, req: Request) -> None:
+        """Disagg-level completion point: records the result and fires the
+        request's ``on_done`` exactly once (mirrors Engine._finish)."""
+        already = req.done
+        req.done = True
+        self._results[req.id] = req
+        if req.on_done is not None and not already:
+            req.on_done(req)
 
     def cancel(self, request_id: int) -> bool:
         """Cancel a request: still queued here -> it never routes; already
@@ -166,8 +194,8 @@ class DisaggEngine:
         for req in self._queue:
             if req.id == request_id:
                 self._queue.remove(req)
-                req.done = req.cancelled = True
-                self._results[req.id] = req
+                req.cancelled = True
+                self._complete(req)
                 return True
         for (dw, wid), req in self._handoff.items():
             if req.id == request_id and not req.done:
@@ -191,21 +219,44 @@ class DisaggEngine:
         """Wrap the user's on_token: stamp disagg-level ttft on the first
         token and re-key the callback to the DisaggEngine request id."""
         def cb(_wid: int, tok: int) -> None:
-            if req.ttft_s is None and self._run_t0 is not None:
-                req.ttft_s = time.perf_counter() - self._run_t0
+            if req.ttft_s is None:
+                # measured from the request's ARRIVAL at the DisaggEngine
+                # (the stamp the decode-tier submit also inherits via
+                # arrival_t), not from run() entry -- same bugfix as
+                # Engine._note_first_token
+                if req.submit_t is not None:
+                    req.ttft_s = time.perf_counter() - req.submit_t
+                elif self._run_t0 is not None:
+                    req.ttft_s = time.perf_counter() - self._run_t0
             if req.on_token is not None:
                 req.on_token(req.id, tok)
         return cb
 
-    def run(self) -> Dict[int, List[int]]:
+    def _copy_back_cb(self, req: Request):
+        """on_done hook for the decode-tier request: copy the worker's
+        queue-wait / deadline verdict back onto the disagg-level request
+        (its ttft is already arrival-correct because the worker measured
+        from the handed-off arrival_t)."""
+        def cb(wreq: Request) -> None:
+            req.queue_wait_s = wreq.queue_wait_s
+            req.deadline_missed = wreq.deadline_missed
+        return cb
+
+    def run(self, poll: Optional[Callable[[], None]] = None
+            ) -> Dict[int, List[int]]:
         """Drain the queue in waves: route -> prefill -> migrate ->
         decode. Requests submitted from ``on_token`` callbacks mid-wave
         join the next wave (same observable contract as ``Engine.run``).
-        Returns {request_id: tokens} for THIS cycle; stats cover this
-        cycle only."""
+        ``poll``, when given, is called once per wave so a front-end can
+        inject arrivals between waves. Returns {request_id: tokens} for
+        THIS cycle; stats cover this cycle only."""
         self.stats = self._fresh_stats()
         self._run_t0 = time.perf_counter()
-        while self._queue:
+        while True:
+            if poll is not None:
+                poll()
+            if not self._queue:
+                break
             wave = list(self._queue)
             self._queue.clear()
             # -- phase 1: route + prefill (per-worker batched admission)
@@ -229,7 +280,7 @@ class DisaggEngine:
             batches: Dict[int, List[int]] = {}
             for req in wave:
                 if req.cancelled:
-                    self._results[req.id] = req
+                    self._complete(req)
                     continue
                 dw = self.router.pick_decode()
                 deng = self.decode_engines[dw]
@@ -240,10 +291,18 @@ class DisaggEngine:
                     self.router.note_migrated(dw, n)
                     self.stats["migrated_pages"] += n
                     self.stats["migrated_requests"] += n > 0
+                # arrival_t hands the original arrival stamp across the
+                # tier boundary: the decode worker's TTFT/queue-wait clock
+                # keeps counting from when the user submitted, not from
+                # when the hand-off happened
                 wid = deng.submit(list(req.prompt),
                                   max_new_tokens=req.max_new_tokens,
                                   on_token=self._emit_cb(req),
-                                  speculate=req.speculate)
+                                  speculate=req.speculate,
+                                  priority=req.priority,
+                                  deadline_s=req.deadline_s,
+                                  on_done=self._copy_back_cb(req),
+                                  arrival_t=req.submit_t)
                 self._handoff[(dw, wid)] = req
                 batches.setdefault(dw, []).append(wid)
             # -- phase 3: decode (continuous batching inside each worker)
@@ -251,11 +310,13 @@ class DisaggEngine:
                 deng = self.decode_engines[dw]
                 res = deng.run()
                 self._absorb(deng.stats, decode=True)
+                self.stats["deadline_misses"] += \
+                    deng.stats["deadline_misses"]
+                self.stats["preemptions"] += deng.stats["preemptions"]
                 for wid in wids:
                     req = self._handoff.pop((dw, wid))
                     req.tokens = list(res.get(wid, []))
-                    req.done = True
-                    self._results[req.id] = req
+                    self._complete(req)
                     self.router.note_decode_done(dw)
         done = {rid: req.tokens for rid, req in self._results.items()}
         self._finalize_stats(done)
@@ -274,6 +335,11 @@ class DisaggEngine:
         ttfts = [r.ttft_s for r in self._results.values()
                  if r.ttft_s is not None]
         s["ttft_s"] = sum(ttfts) / len(ttfts) if ttfts else 0.0
+        s["ttft_p50_s"] = float(np.percentile(ttfts, 50)) if ttfts else 0.0
+        s["ttft_p99_s"] = float(np.percentile(ttfts, 99)) if ttfts else 0.0
+        waits = [r.queue_wait_s for r in self._results.values()
+                 if r.queue_wait_s is not None]
+        s["queue_wait_s"] = sum(waits) / len(waits) if waits else 0.0
         s["accept_rate"] = (s["draft_accepted"] / s["draft_tokens"]
                             if s["draft_tokens"] > 0 else 0.0)
         s["router"] = self.router.snapshot()

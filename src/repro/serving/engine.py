@@ -137,6 +137,19 @@ class ServeConfig:
     # keeps greedy output token-identical across tp degrees (see
     # distributed/sharding.py). CPU testing: export
     # XLA_FLAGS=--xla_force_host_platform_device_count=N first.
+    # SLO-aware admission: with max_queue > 0, submit() rejects instead of
+    # growing the queue without bound (EngineSaturated, reason
+    # "queue_full"); with the prefix cache on it also rejects when the
+    # queued prompts' combined KV-page demand exceeds the whole page pool
+    # ("page_pool_saturated" -- admission would thrash the pool). 0 keeps
+    # the historical unbounded-queue behavior.
+    max_queue: int = 0
+    # preempt-by-slot: when every slot is busy and the queue head has
+    # STRICTLY higher priority than some running request, cancel the
+    # lowest-priority (then youngest) victim to free its slot. Equal
+    # priorities never preempt, so single-priority workloads (the parity-
+    # pinned default) are unaffected.
+    preempt: bool = False
     tp: int = 1
     tp_matmul: str = "padded"           # "padded" (bit-exact vs tp=1: the
                                         # gemm keeps the single-device
@@ -171,6 +184,21 @@ class KVPages:
         return len(self.tokens) // self.page
 
 
+class EngineSaturated(RuntimeError):
+    """submit() backpressure rejection (ServeConfig.max_queue > 0).
+
+    ``reason`` is machine-readable -- "queue_full" (the bounded queue is
+    at capacity) or "page_pool_saturated" (the queued prompts' combined
+    KV-page demand already exceeds the prefix-cache pool, so admitting
+    more would only thrash it) -- and ``detail`` is the human-readable
+    explanation. Front-ends map this to a structured 429."""
+
+    def __init__(self, reason: str, detail: str):
+        super().__init__(f"{reason}: {detail}")
+        self.reason = reason
+        self.detail = detail
+
+
 @dataclasses.dataclass
 class Request:
     id: int
@@ -178,10 +206,22 @@ class Request:
     max_new_tokens: int
     on_token: Optional[Callable[[int, int], None]] = None
     speculate: bool = False
+    priority: int = 0                   # higher drains first
+    deadline_s: Optional[float] = None  # TTFT SLO, relative to submit_t
+    on_done: Optional[Callable[["Request"], None]] = None
     tokens: List[int] = dataclasses.field(default_factory=list)
     done: bool = False
     cancelled: bool = False
-    ttft_s: Optional[float] = None      # time-to-first-token within run()
+    preempted: bool = False             # cancelled to free its slot for a
+                                        # strictly-higher-priority request
+    deadline_missed: bool = False       # first token landed past deadline
+    submit_t: Optional[float] = None    # perf_counter at submit() -- the
+                                        # arrival stamp TTFT is measured
+                                        # from (survives the disagg
+                                        # prefill->decode hand-off via
+                                        # submit(arrival_t=))
+    ttft_s: Optional[float] = None      # first token - submit_t
+    queue_wait_s: Optional[float] = None  # submit -> prefill start
 
     def _emit(self, tok: int) -> None:
         self.tokens.append(tok)
@@ -702,6 +742,8 @@ class Engine:
                     host_syncs=0, admissions=0, chunks=0,
                     requests=0, prefill_groups=0, prefill_tokens=0,
                     prefill_tok_per_s=0.0, ttft_s=0.0,
+                    ttft_p50_s=0.0, ttft_p99_s=0.0, queue_wait_s=0.0,
+                    deadline_misses=0, preemptions=0,
                     draft_tokens=0, draft_accepted=0, accept_rate=0.0,
                     spec_rounds=0, prefix_hits=0, prefix_tokens_reused=0,
                     prefix_evictions=0, prefix_insert_drops=0)
@@ -709,11 +751,27 @@ class Engine:
     def submit(self, prompt: List[int],
                max_new_tokens: Optional[int] = None,
                on_token: Optional[Callable[[int, int], None]] = None,
-               speculate: Optional[bool] = None) -> int:
+               speculate: Optional[bool] = None,
+               priority: int = 0,
+               deadline_s: Optional[float] = None,
+               on_done: Optional[Callable[[Request], None]] = None,
+               arrival_t: Optional[float] = None) -> int:
         """Queue a request; returns its id. Tokens stream via ``on_token``
         (called as on_token(request_id, token)) if given. ``speculate``
         toggles speculative decoding per request (default: on whenever the
-        engine has a drafter configured)."""
+        engine has a drafter configured).
+
+        SLO fields: ``priority`` (higher drains first; strictly-higher
+        priority may preempt under ServeConfig.preempt), ``deadline_s``
+        (TTFT deadline relative to arrival -- orders the queue within a
+        priority stratum and feeds the ``deadline_misses`` stat),
+        ``on_done`` (called exactly once with the Request when it
+        finishes, is cancelled, or is preempted). ``arrival_t`` overrides
+        the arrival stamp (perf_counter clock) so a hand-off between
+        engines -- disaggregated prefill->decode -- preserves the
+        original arrival time instead of restarting the TTFT clock.
+        Raises EngineSaturated when ServeConfig.max_queue > 0 and the
+        queue (or the prefix-cache page pool) is saturated."""
         if not prompt:
             raise ValueError("empty prompt")
         budget = (self.scfg.max_new_tokens if max_new_tokens is None
@@ -732,9 +790,28 @@ class Engine:
             raise ValueError(
                 f"prompt ({len(prompt)}) + max_new_tokens ({budget}) "
                 f"exceeds cache_len {self._T}; raise ServeConfig.cache_len")
+        if self.scfg.max_queue > 0:
+            if len(self._queue) >= self.scfg.max_queue:
+                raise EngineSaturated(
+                    "queue_full",
+                    f"queue holds {len(self._queue)} requests "
+                    f"(ServeConfig.max_queue={self.scfg.max_queue})")
+            if self._prefix is not None:
+                pages = lambda n: -(-n // self._page)
+                demand = pages(len(prompt)) + sum(
+                    pages(len(r.prompt)) for r in self._queue)
+                if demand > self._prefix.capacity:
+                    raise EngineSaturated(
+                        "page_pool_saturated",
+                        f"queued prompts need {demand} KV pages, pool "
+                        f"capacity is {self._prefix.capacity} "
+                        "(raise ServeConfig.prefix_bytes or shed load)")
         req = Request(id=self._next_id, prompt=list(prompt),
                       max_new_tokens=budget, on_token=on_token,
-                      speculate=speculate)
+                      speculate=speculate, priority=int(priority),
+                      deadline_s=deadline_s, on_done=on_done,
+                      submit_t=(time.perf_counter() if arrival_t is None
+                                else arrival_t))
         self._next_id += 1
         self._queue.append(req)
         return req.id
@@ -748,15 +825,13 @@ class Engine:
         for req in self._queue:
             if req.id == request_id:
                 self._queue.remove(req)
-                req.done = req.cancelled = True
-                self._results[req.id] = req
+                self._finish(req, cancelled=True)
                 return True
         for i, req in enumerate(self._slots):
             if req is not None and req.id == request_id:
                 self._live[i] = False
                 self._slots[i] = None
-                req.done = req.cancelled = True
-                self._results[req.id] = req
+                self._finish(req, cancelled=True)
                 return True
         # mid-admission: a group-mate's first-token callback cancels a
         # request whose prefill already ran but whose slot is not bound
@@ -764,18 +839,37 @@ class Engine:
         # cancelling it while queued)
         for req in self._admitting:
             if req.id == request_id and not req.done:
-                req.done = req.cancelled = True
-                self._results[req.id] = req
+                self._finish(req, cancelled=True)
                 return True
         return False
 
-    def _finish(self, req: Request) -> None:
+    def _finish(self, req: Request, cancelled: bool = False) -> None:
+        """Single completion point -- normal finish, cancel, and
+        preemption all land here, so ``on_done`` fires exactly once."""
+        if req.done:
+            return
         req.done = True
+        if cancelled:
+            req.cancelled = True
         self._results[req.id] = req
+        if req.on_done is not None:
+            req.on_done(req)
 
     def _note_first_token(self, req: Request) -> None:
-        if self._run_t0 is not None:
-            req.ttft_s = time.perf_counter() - self._run_t0
+        # TTFT is measured from the request's ARRIVAL (submit_t), not from
+        # run() entry: the old run()-entry stamp inflated every mid-cycle
+        # arrival's TTFT by its queue position in the cycle and made
+        # latency-under-load curves unmeasurable. _run_t0 remains only as
+        # a fallback for requests that never went through submit().
+        now = time.perf_counter()
+        if req.submit_t is not None:
+            req.ttft_s = now - req.submit_t
+        elif self._run_t0 is not None:
+            req.ttft_s = now - self._run_t0
+        if (req.deadline_s is not None and req.submit_t is not None
+                and now - req.submit_t > req.deadline_s):
+            req.deadline_missed = True
+            self.stats["deadline_misses"] += 1
 
     def _start_slot(self, slot: int, req: Request, first_tok: int,
                     prompt_len: int) -> bool:
@@ -1008,6 +1102,9 @@ class Engine:
         skip most of their MatMul work while still emitting bit-identical
         KV rows and logits."""
         t0 = time.perf_counter()
+        for r in reqs:
+            if r.submit_t is not None:
+                r.queue_wait_s = t0 - r.submit_t
         G = len(reqs)
         lens = [len(r.prompt) for r in reqs]
         if self._prefix is not None:
@@ -1092,6 +1189,8 @@ class Engine:
         n = len(req.prompt)
         toks = np.asarray(req.prompt, np.int32)[None]
         t0 = time.perf_counter()
+        if req.submit_t is not None:
+            req.queue_wait_s = t0 - req.submit_t
         self._key, sub = jax.random.split(self._key)
         first, slot_cache = self._prefill(self.params, jnp.asarray(toks),
                                           jnp.asarray(n, jnp.int32), sub)
@@ -1107,18 +1206,63 @@ class Engine:
         self.stats["prefill_s"] += time.perf_counter() - t0
         self._start_slot(slot, req, first_tok, n)
 
+    @staticmethod
+    def _admit_key(req: Request):
+        """Queue drain order: priority strata (higher first), earliest
+        absolute TTFT deadline within a stratum, then submission order --
+        a queue with uniform priority and no deadlines therefore drains
+        exactly FIFO, which is what keeps the parity-pinned default
+        schedule (and its PRNG key-split order) unchanged."""
+        dl = (req.submit_t + req.deadline_s
+              if req.deadline_s is not None and req.submit_t is not None
+              else float("inf"))
+        return (-req.priority, dl, req.id)
+
+    def _pop_pending(self, n: int) -> List[Request]:
+        picked = sorted(self._queue, key=self._admit_key)[:n]
+        for r in picked:
+            self._queue.remove(r)
+        return picked
+
+    def _preempt_for(self, head: Request) -> bool:
+        """Free one slot for ``head`` by cancelling the lowest-priority
+        (then youngest) running request -- only when head's priority is
+        STRICTLY higher, so equal-priority work never preempts and the
+        single-priority default can never trigger this. The victim keeps
+        its emitted tokens and completes with cancelled=True,
+        preempted=True (the ordinary cancel contract)."""
+        victims = [(req.priority, -req.id, i)
+                   for i, req in enumerate(self._slots) if req is not None]
+        if not victims:
+            return False
+        prio, _, i = min(victims)
+        if head.priority <= prio:
+            return False
+        victim = self._slots[i]
+        self._live[i] = False
+        self._slots[i] = None
+        victim.preempted = True
+        self.stats["preemptions"] += 1
+        self._finish(victim, cancelled=True)
+        return True
+
     def _admit_pending(self) -> None:
         while self._queue:
             free = [i for i in range(self._B) if self._slots[i] is None]
             if not free:
-                return
+                if not self.scfg.preempt:
+                    return
+                head = min(self._queue, key=self._admit_key)
+                if not self._preempt_for(head):
+                    return
+                free = [i for i in range(self._B)
+                        if self._slots[i] is None]
             if self._kv_family:
                 n = min(len(free), max(self.scfg.prefill_batch, 1),
                         len(self._queue))
-                reqs = [self._queue.popleft() for _ in range(n)]
-                self._admit_group(free[:n], reqs)
+                self._admit_group(free[:n], self._pop_pending(n))
             else:
-                self._admit_request(free[0], self._queue.popleft())
+                self._admit_request(free[0], self._pop_pending(1)[0])
 
     def _run_chunk(self) -> None:
         t0 = time.perf_counter()
@@ -1194,18 +1338,40 @@ class Engine:
         ttfts = [r.ttft_s for r in self._results.values()
                  if r.ttft_s is not None]
         self.stats["ttft_s"] = sum(ttfts) / len(ttfts) if ttfts else 0.0
+        # tail latency is the contested serving metric -- a mean hides the
+        # queue-position tail entirely (every depth>1 row used to look
+        # identical at p50 and p99 because both were the same mean)
+        self.stats["ttft_p50_s"] = (
+            float(np.percentile(ttfts, 50)) if ttfts else 0.0)
+        self.stats["ttft_p99_s"] = (
+            float(np.percentile(ttfts, 99)) if ttfts else 0.0)
+        waits = [r.queue_wait_s for r in self._results.values()
+                 if r.queue_wait_s is not None]
+        self.stats["queue_wait_s"] = (
+            sum(waits) / len(waits) if waits else 0.0)
         self.stats["accept_rate"] = (
             self.stats["draft_accepted"] / self.stats["draft_tokens"]
             if self.stats["draft_tokens"] > 0 else 0.0)
 
-    def run(self) -> Dict[int, List[int]]:
+    def run(self, poll: Optional[Callable[[], None]] = None
+            ) -> Dict[int, List[int]]:
         """Drive batched admission + fused decode chunks until queue and
         slots are drained. Returns {request_id: tokens} for THIS cycle;
         stats cover this cycle only (slots are always empty between run()
-        calls, so resetting the counters here is safe)."""
+        calls, so resetting the counters here is safe).
+
+        ``poll``, when given, is called once per scheduler iteration
+        (before the drain check): a front-end or trace-driven load
+        generator injects mid-cycle submits/cancels there -- arrivals land
+        between chunks without any engine-side threading."""
         self.stats = self._fresh_stats()
         self._run_t0 = time.perf_counter()
-        while self._queue or any(r is not None for r in self._slots):
+        while True:
+            if poll is not None:
+                poll()
+            if not (self._queue or any(r is not None
+                                       for r in self._slots)):
+                break
             self._admit_pending()
             if not self._live.any():
                 continue

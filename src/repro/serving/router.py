@@ -51,6 +51,10 @@ class KVRouter:
         self.decode_requests = [0] * nD
         self.migrated_pages = [0] * nD
         self.direct_decode = 0          # requests too small to page
+        # double-done / done-without-pick calls used to drive a depth
+        # negative and bias least-loaded placement toward that worker
+        # forever after; they now clamp at 0 and count here
+        self.depth_underflows = 0
 
     # -- placement ----------------------------------------------------------
     def pick_prefill(self, prompt: List[int]) -> int:
@@ -78,9 +82,23 @@ class KVRouter:
 
     # -- bookkeeping --------------------------------------------------------
     def note_prefill_done(self, worker: int) -> None:
+        """Mark one outstanding prefill finished. A depth can never go
+        below zero: a stray extra done (double-done, or done without a
+        matching pick) would otherwise make that worker look permanently
+        shallower than it is, silently corrupting every future
+        least-loaded tie-break. Clamp and count instead."""
+        if self._p_depth[worker] <= 0:
+            self.depth_underflows += 1
+            self._p_depth[worker] = 0
+            return
         self._p_depth[worker] -= 1
 
     def note_decode_done(self, worker: int) -> None:
+        """Decode twin of note_prefill_done (same clamp rationale)."""
+        if self._d_depth[worker] <= 0:
+            self.depth_underflows += 1
+            self._d_depth[worker] = 0
+            return
         self._d_depth[worker] -= 1
 
     def note_migrated(self, worker: int, n_pages: int) -> None:
@@ -108,6 +126,7 @@ class KVRouter:
             migrated_pages=list(self.migrated_pages),
             migrated_pages_total=sum(self.migrated_pages),
             direct_decode=self.direct_decode,
+            depth_underflows=self.depth_underflows,
             prefill_queue_depth=list(self._p_depth),
             decode_queue_depth=list(self._d_depth),
             prefill_peak_depth=list(self._p_peak),

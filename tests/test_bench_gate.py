@@ -180,3 +180,101 @@ def test_compare_runs_structural_gates():
     code even when every cross-run pair is within tolerance."""
     rows = [_row(), _mono(), _dis(migrated=0)]
     assert _compare(rows, [_row()]) == 1
+
+
+def test_compare_gates_tail_ttft():
+    """e2e rows now carry ttft_p99_s: it rides the same growth ceiling
+    as mean TTFT, skips on baselines that predate it, and fails when the
+    new run drops it."""
+    base = [_row(ttft_p99_s=0.01)]
+    assert _compare([_row(ttft_p99_s=0.02)], base) == 0   # within 3x
+    assert _compare([_row(ttft_p99_s=0.05)], base) == 1   # above ceiling
+    assert _compare([_row()], base) == 1                  # dropped
+    assert _compare([_row(ttft_p99_s=9.9)], [_row()]) == 0  # old baseline
+
+
+# ---------------------------------------------------------------------------
+# check_trace: the trace_serve gate (tail TTFT ceiling, goodput floor,
+# arrival-time accounting pinned structurally)
+# ---------------------------------------------------------------------------
+
+def _trow(mix="chat", rate=8.0, **kw):
+    r = dict(mix=mix, rate_rps=rate, params="p", requests=20,
+             completed=20, ttft_p50_s=0.02, ttft_p99_s=0.05,
+             ttft_runentry_p50_s=0.04, ttft_runentry_p99_s=0.09,
+             itl_p50_s=0.001, itl_p99_s=0.004, goodput_frac=0.95)
+    r.update(kw)
+    return r
+
+
+def _trace(rows, mixes=("chat",), summary=None):
+    if summary is None:
+        summary = {m: dict(saturation_rps=8.0, rates_met=[8.0])
+                   for m in mixes}
+    return dict(benchmark="trace_serve",
+                workload=dict(mixes={m: {} for m in mixes}),
+                runs=rows, summary=summary)
+
+
+def _ctrace(new_rows, base_rows, tol_ttft=2.0, drop=0.25, **kw):
+    return gate.check_trace(_trace(new_rows, **kw), _trace(base_rows),
+                            tol_ttft, drop)
+
+
+def test_trace_within_tolerance_passes():
+    assert _ctrace([_trow(ttft_p99_s=0.08, goodput_frac=0.8)],
+                   [_trow()]) == 0
+
+
+def test_trace_seeded_ttft_regression_fails(capsys):
+    """The gate's reason to exist: a tail-TTFT blowup at matched offered
+    load (> the 3x growth ceiling) fails."""
+    assert _ctrace([_trow(ttft_p99_s=0.5, ttft_runentry_p99_s=0.6)],
+                   [_trow()]) == 1
+    assert "ttft_p99" in capsys.readouterr().out
+
+
+def test_trace_goodput_floor_is_absolute(capsys):
+    """goodput_frac is a ratio in [0,1]: the floor is an absolute drop
+    (0.25), not fractional -- 0.95 -> 0.65 fails, 0.95 -> 0.75 passes."""
+    assert _ctrace([_trow(goodput_frac=0.75)], [_trow()]) == 0
+    assert _ctrace([_trow(goodput_frac=0.65)], [_trow()]) == 1
+    assert "goodput" in capsys.readouterr().out
+
+
+def test_trace_arrival_accounting_pinned(capsys):
+    """Structural echo of the TTFT bugfix: arrival-stamped percentiles
+    exceeding the run-entry-stamped ones recorded alongside them is
+    impossible under correct stamping (run() entry precedes every
+    mid-cycle arrival), so it fails even with no baseline mismatch."""
+    assert _ctrace([_trow(ttft_p99_s=0.10, ttft_runentry_p99_s=0.09)],
+                   [_trow()]) == 1
+    assert "runentry" in capsys.readouterr().out
+
+
+def test_trace_missing_fields_fail_not_crash(capsys):
+    r = _trow(itl_p99_s=None)
+    del r["goodput_frac"]
+    assert _ctrace([r], [_trow()]) == 1
+    out = capsys.readouterr().out
+    assert "itl_p99_s-missing" in out and "goodput_frac-missing" in out
+    assert "goodput-dropped" in out       # baseline had it, new run lost it
+
+
+def test_trace_absent_baseline_metric_skips():
+    """Baselines predating a metric skip that gate (same contract as
+    compare); the structural checks still run on the new row."""
+    b = _trow()
+    del b["ttft_p99_s"], b["goodput_frac"]
+    assert _ctrace([_trow(ttft_p99_s=9.9, ttft_runentry_p99_s=10.0,
+                          goodput_frac=0.0)], [b]) == 0
+
+
+def test_trace_no_common_rows_is_an_error():
+    assert _ctrace([_trow(mix="chat")], [_trow(mix="mixed")]) == 2
+
+
+def test_trace_missing_saturation_summary_fails(capsys):
+    assert _ctrace([_trow()], [_trow()],
+                   summary={"chat": dict(rates_met=[])}) == 1
+    assert "saturation_rps" in capsys.readouterr().out

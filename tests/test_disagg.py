@@ -306,6 +306,32 @@ def test_router_validation():
         KVRouter([], [object()])
 
 
+def test_router_depth_clamps_at_zero():
+    """A double-done (or a done with no matching pick) must not drive a
+    queue depth negative: a negative depth makes that worker look
+    permanently shallower than every honest worker, so least-loaded
+    placement routes to it forever after. Depths clamp at 0 and the
+    stray calls are counted in snapshot()["depth_underflows"]."""
+    class _W:                            # router probes prefix_match_len
+        def prefix_match_len(self, prompt):
+            return 0
+    r = KVRouter([_W(), _W()], [object(), object()])
+    w = r.pick_prefill([1, 2, 3])
+    r.note_prefill_done(w)
+    r.note_prefill_done(w)               # double-done: clamped, counted
+    r.note_decode_done(1)                # done without pick: ditto
+    snap = r.snapshot()
+    assert snap["prefill_queue_depth"] == [0, 0]
+    assert snap["decode_queue_depth"] == [0, 0]
+    assert snap["depth_underflows"] == 2
+    # placement is still unbiased: the clamped worker does not win every
+    # least-loaded tie-break with a phantom negative depth
+    d = r.pick_decode()
+    assert d == 0                        # lowest index, not the clamped 1
+    r.note_decode_done(d)
+    assert r.snapshot()["depth_underflows"] == 2
+
+
 def test_disagg_cancel_queued(causal):
     cfg, params = causal
     dis = DisaggEngine(cfg, params, _scfg())

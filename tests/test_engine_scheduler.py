@@ -1,13 +1,17 @@
 """Serving-engine scheduler tests: on-device decode loop parity, continuous
 batching (slot admission/eviction/reuse), ragged prompts, sampling
-determinism, and O(1)-host-syncs-per-sequence accounting."""
+determinism, O(1)-host-syncs-per-sequence accounting, and the SLO
+admission surface (arrival-time TTFT, deadlines, priorities, preemption,
+backpressure)."""
+import time
+
 import jax
 import numpy as np
 import pytest
 
 from repro.configs.base import get_arch
 from repro.models import transformer as T
-from repro.serving.engine import Engine, ServeConfig
+from repro.serving.engine import Engine, EngineSaturated, ServeConfig
 
 
 @pytest.fixture(scope="module")
@@ -375,3 +379,161 @@ def test_requests_stat_counts_callback_submissions(model):
     assert len(res[fired[0]]) == 4
     assert eng.stats["requests"] == 3               # ...and counted
     assert eng.stats["admissions"] == 3
+
+
+# ---------------------------------------------------------------------------
+# arrival-time TTFT accounting + the SLO admission surface
+# ---------------------------------------------------------------------------
+
+def test_ttft_stamped_from_arrival_not_run_entry(model):
+    """THE accounting bugfix: a request submitted mid-cycle (from another
+    request's on_token callback) measures TTFT from ITS OWN submit(), not
+    from run() entry. The old run()-entry stamp charged the follow-up for
+    everything that happened before it arrived -- here an explicit 0.5s
+    sleep -- so its TTFT came out ~ the full cycle wall time."""
+    cfg, _ = model
+    eng = _engine(model, max_new_tokens=8, decode_chunk=2)
+    done, fired = {}, []
+    follow = _prompts(cfg, 1, seed=21)[0]
+
+    def cb(rid, tok):
+        if not fired:
+            time.sleep(0.5)         # run-entry inflation, made visible
+            fired.append(eng.submit(
+                follow, on_done=lambda r: done.setdefault("f", r)))
+    eng.submit(_prompts(cfg, 1, seed=20)[0], on_token=cb)
+    t0 = time.perf_counter()
+    eng.run()
+    wall = time.perf_counter() - t0
+    req = done["f"]
+    assert req.ttft_s is not None and req.queue_wait_s is not None
+    # arrival stamping cannot include the pre-arrival sleep; run-entry
+    # stamping always did (ttft would be > 0.5 ~ wall)
+    assert req.ttft_s < wall - 0.4
+    assert 0.0 <= req.queue_wait_s <= req.ttft_s + 1e-9
+
+
+def test_ttft_percentile_stats(model):
+    """_finalize_stats reports tail TTFT (p50/p99 over the cycle's
+    requests) and mean queue wait alongside the historical mean."""
+    cfg, _ = model
+    eng = _engine(model, max_slots=2)
+    eng.generate(_prompts(cfg, 5))
+    s = eng.stats
+    assert 0 < s["ttft_p50_s"] <= s["ttft_p99_s"]
+    assert s["ttft_s"] > 0 and s["queue_wait_s"] >= 0.0
+    assert s["deadline_misses"] == 0 and s["preemptions"] == 0
+
+
+def test_single_priority_parity_with_slo_features_enabled(model):
+    """Uniform priority / no deadlines drains exactly FIFO: token output
+    is identical to the plain engine even with preemption armed and the
+    queue bounded (the SLO machinery must be invisible until used)."""
+    cfg, _ = model
+    prompts = _prompts(cfg, 5, seed=14)
+    plain = _engine(model).generate(prompts)
+    slo = _engine(model, preempt=True, max_queue=50)
+    ids = [slo.submit(p, priority=0) for p in prompts]
+    res = slo.run()
+    assert [res[i] for i in ids] == plain
+
+
+def test_deadline_ordered_admission_beats_fifo(model):
+    """One slot, two queued requests: FIFO admits in submit order, so the
+    late tight-deadline request waits out the whole first decode. The
+    deadline-ordered drain admits it first."""
+    cfg, _ = model
+    a_p, b_p = _prompts(cfg, 2, seed=15)
+    order_fifo, order_slo = [], []
+
+    def first(order):
+        return lambda rid, tok: (order.append(rid)
+                                 if rid not in order else None)
+    fifo = _engine(model, max_slots=1, max_new_tokens=6)
+    fa = fifo.submit(a_p, on_token=first(order_fifo))
+    fb = fifo.submit(b_p, on_token=first(order_fifo))
+    fifo.run()
+    assert order_fifo == [fa, fb]                   # the baseline miss
+    slo = _engine(model, max_slots=1, max_new_tokens=6)
+    done = {}
+    sa = slo.submit(a_p, on_token=first(order_slo))
+    sb = slo.submit(b_p, on_token=first(order_slo), deadline_s=30.0,
+                    on_done=lambda r: done.setdefault("b", r))
+    slo.run()
+    assert order_slo == [sb, sa]                    # deadline jumps queue
+    assert not done["b"].deadline_missed
+
+
+def test_deadline_miss_accounting(model):
+    """deadline_s=0 can never be met -> deadline_missed + stats counter;
+    a generous deadline is met and does not count."""
+    cfg, _ = model
+    eng = _engine(model)
+    got = {}
+    eng.submit(_prompts(cfg, 1, seed=22)[0], deadline_s=0.0,
+               on_done=lambda r: got.setdefault("miss", r))
+    eng.submit(_prompts(cfg, 1, seed=23)[0], deadline_s=1e9,
+               on_done=lambda r: got.setdefault("ok", r))
+    eng.run()
+    assert got["miss"].deadline_missed and not got["ok"].deadline_missed
+    assert eng.stats["deadline_misses"] == 1
+
+
+def test_backpressure_structured_rejection(model):
+    """With max_queue set, submit() sheds load with a machine-readable
+    EngineSaturated instead of growing the queue without bound -- and
+    accepts again once the queue drains."""
+    cfg, _ = model
+    eng = _engine(model, max_queue=2)
+    p = _prompts(cfg, 3)
+    eng.submit(p[0])
+    eng.submit(p[1])
+    with pytest.raises(EngineSaturated) as ei:
+        eng.submit(p[2])
+    assert ei.value.reason == "queue_full"
+    assert "max_queue=2" in ei.value.detail
+    eng.run()
+    rid = eng.submit(p[2])                          # queue drained: accepted
+    assert len(eng.run()[rid]) == 6
+
+
+def test_backpressure_page_pool_saturation(model):
+    """prefix_bytes=1 floors the page pool at 2 pages: a 3-page prompt is
+    rejected with reason "page_pool_saturated" (admitting it could only
+    thrash the pool), while a 1-page prompt still serves."""
+    cfg, _ = model
+    eng = _engine(model, max_queue=8, max_new_tokens=4, prefix_cache=True,
+                  prefix_page=8, prefix_bytes=1)
+    long_p = _prompts(cfg, 1, lo=20, hi=21)[0]      # ceil(20/8)=3 > cap 2
+    with pytest.raises(EngineSaturated) as ei:
+        eng.submit(long_p)
+    assert ei.value.reason == "page_pool_saturated"
+    short = _prompts(cfg, 1, lo=4, hi=6)[0]         # 1 page: admitted
+    assert len(eng.generate([short])[0]) == 4
+
+
+def test_preemption_keeps_streamed_tokens(model):
+    """ServeConfig.preempt: a strictly-higher-priority arrival evicts the
+    lowest-priority running request at a chunk boundary. The victim keeps
+    every token it streamed (the ordinary cancel contract) and is marked
+    preempted; the winner runs to completion."""
+    cfg, _ = model
+    eng = _engine(model, max_slots=1, max_new_tokens=12, decode_chunk=2,
+                  preempt=True)
+    done, low_toks, hi = {}, [], []
+
+    def low_cb(rid, tok):
+        low_toks.append(tok)
+        if len(low_toks) == 2:
+            hi.append(eng.submit(
+                _prompts(cfg, 1, seed=17)[0], priority=1,
+                on_done=lambda r: done.setdefault("hi", r)))
+    low = eng.submit(_prompts(cfg, 1, seed=16)[0], on_token=low_cb,
+                     on_done=lambda r: done.setdefault("low", r))
+    res = eng.run()
+    assert done["low"].preempted and done["low"].cancelled
+    assert 2 <= len(res[low]) < 12                  # streamed prefix kept
+    assert res[low] == low_toks
+    assert len(res[hi[0]]) == 12                    # winner unharmed
+    assert eng.stats["preemptions"] == 1
+    assert not done["hi"].preempted

@@ -1,0 +1,192 @@
+"""HTTP front-end tests (serving/frontend.py): OpenAI-compatible
+completions over a live engine on an ephemeral port -- plain and SSE
+streaming roundtrips, request timeouts, saturation 429s with the
+machine-readable reason, disconnect-driven cancellation, and the
+side-channel GET endpoints. Everything runs against ONE engine/frontend
+pair (module fixture): the engine thread owns the device, the tests own
+http.client connections, which is exactly the deployment shape."""
+import http.client
+import json
+import socket
+import time
+
+import jax
+import pytest
+
+from repro.configs.base import get_arch
+from repro.models import transformer as T
+from repro.serving.engine import Engine, ServeConfig
+from repro.serving.frontend import Frontend, FrontendConfig
+
+PROMPT = [3, 1, 4, 1, 5, 9]
+
+
+@pytest.fixture(scope="module")
+def fe():
+    cfg = get_arch("tinyllama-1.1b", reduced=True)
+    params = T.init_params(cfg, jax.random.PRNGKey(0))
+    eng = Engine(cfg, params, ServeConfig(
+        max_new_tokens=8, cache_len=128, decode_chunk=1, max_slots=1,
+        prefill_bucket=16, max_queue=1))
+    eng.generate([PROMPT])              # compile before traffic arrives
+    fe = Frontend(eng, FrontendConfig(model_name="tiny-test",
+                                      request_timeout_s=30.0)).start()
+    yield fe
+    fe.close()
+
+
+def _post(fe, payload, timeout=90.0):
+    conn = http.client.HTTPConnection("127.0.0.1", fe.port,
+                                      timeout=timeout)
+    conn.request("POST", "/v1/completions", json.dumps(payload),
+                 {"Content-Type": "application/json"})
+    resp = conn.getresponse()
+    body = json.loads(resp.read())
+    conn.close()
+    return resp.status, body
+
+
+def _get(fe, path):
+    conn = http.client.HTTPConnection("127.0.0.1", fe.port, timeout=30)
+    conn.request("GET", path)
+    resp = conn.getresponse()
+    body = json.loads(resp.read())
+    conn.close()
+    return resp.status, body
+
+
+def test_completion_roundtrip(fe):
+    status, body = _post(fe, dict(prompt=PROMPT, max_tokens=5))
+    assert status == 200
+    choice = body["choices"][0]
+    assert len(choice["token_ids"]) == 5
+    assert choice["finish_reason"] == "length"
+    assert body["model"] == "tiny-test"
+    assert body["usage"] == dict(prompt_tokens=len(PROMPT),
+                                 completion_tokens=5,
+                                 total_tokens=len(PROMPT) + 5)
+    assert body["timing"]["ttft_s"] > 0
+    assert body["timing"]["queue_wait_s"] >= 0
+    # greedy determinism survives the HTTP hop
+    assert _post(fe, dict(prompt=PROMPT, max_tokens=5))[1][
+        "choices"][0]["token_ids"] == choice["token_ids"]
+
+
+def test_streaming_sse(fe):
+    conn = http.client.HTTPConnection("127.0.0.1", fe.port, timeout=90)
+    conn.request("POST", "/v1/completions",
+                 json.dumps(dict(prompt=PROMPT, max_tokens=4,
+                                 stream=True)),
+                 {"Content-Type": "application/json"})
+    resp = conn.getresponse()
+    assert resp.status == 200
+    assert resp.getheader("Content-Type") == "text/event-stream"
+    events = []
+    for raw in resp.read().split(b"\n\n"):
+        if raw.startswith(b"data: ") and raw != b"data: [DONE]":
+            events.append(json.loads(raw[len(b"data: "):]))
+    conn.close()
+    toks = [e["choices"][0]["token_id"] for e in events
+            if "token_id" in e["choices"][0]]
+    final = events[-1]
+    assert len(toks) == 4
+    assert final["choices"][0]["finish_reason"] == "length"
+    assert final["usage"]["completion_tokens"] == 4
+    # stream and plain emit the same greedy tokens
+    assert _post(fe, dict(prompt=PROMPT, max_tokens=4))[1][
+        "choices"][0]["token_ids"] == toks
+
+
+def test_request_timeout_keeps_partial_tokens(fe):
+    """An overdue request is cancelled through the ordinary cancel()
+    machinery: finish_reason "timeout", already-emitted tokens kept."""
+    status, body = _post(fe, dict(prompt=PROMPT, max_tokens=64,
+                                  timeout_s=0.001))
+    assert status == 200
+    assert body["choices"][0]["finish_reason"] == "timeout"
+    assert len(body["choices"][0]["token_ids"]) < 64
+
+
+def test_validation_and_routing_errors(fe):
+    status, body = _post(fe, dict(prompt="text prompt"))
+    assert status == 400 and "token ids" in body["error"]["message"]
+    assert _post(fe, dict())[0] == 400
+    conn = http.client.HTTPConnection("127.0.0.1", fe.port, timeout=30)
+    conn.request("POST", "/v1/completions", b"{not json",
+                 {"Content-Type": "application/json"})
+    resp = conn.getresponse()
+    assert resp.status == 400
+    assert json.loads(resp.read())["error"]["type"] == \
+        "invalid_request_error"
+    conn.close()
+    assert _get(fe, "/nope")[0] == 404
+
+
+def test_get_endpoints(fe):
+    status, body = _get(fe, "/health")
+    assert status == 200 and body["status"] == "ok"
+    assert body["model"] == "tiny-test"
+    status, body = _get(fe, "/v1/models")
+    assert status == 200 and body["data"][0]["id"] == "tiny-test"
+    status, body = _get(fe, "/stats")
+    assert status == 200
+    assert body["frontend"]["completions"] > 0
+    assert "requests" in body["engine"]
+
+
+def test_saturation_returns_structured_429(fe):
+    """max_slots=1 + max_queue=1: with one request in service and one
+    queued, a third submit is shed with HTTP 429 and the machine-
+    readable EngineSaturated reason in the body. A's prompt lands in a
+    length bucket nothing warmed (24 -> bucket 32), so its admission
+    compiles for seconds -- B and C both arrive while the single slot is
+    provably still busy, with B ahead in the queue."""
+    a = http.client.HTTPConnection("127.0.0.1", fe.port, timeout=90)
+    a.request("POST", "/v1/completions",
+              json.dumps(dict(prompt=PROMPT * 4, max_tokens=100,
+                              stream=True)),
+              {"Content-Type": "application/json"})
+    ra = a.getresponse()                 # headers sent => A is running
+    assert ra.status == 200
+    b = http.client.HTTPConnection("127.0.0.1", fe.port, timeout=90)
+    b.request("POST", "/v1/completions",
+              json.dumps(dict(prompt=PROMPT, max_tokens=2)),
+              {"Content-Type": "application/json"})
+    time.sleep(0.15)                     # B reaches the queue before C
+    status, body = _post(fe, dict(prompt=PROMPT, max_tokens=2))
+    assert status == 429
+    assert body["error"]["type"] == "engine_saturated"
+    assert body["error"]["reason"] == "queue_full"
+    rb = b.getresponse()                 # the queued request still serves
+    assert rb.status == 200
+    assert len(json.loads(rb.read())["choices"][0]["token_ids"]) == 2
+    b.close()
+    assert ra.read().endswith(b"data: [DONE]\n\n")
+    a.close()
+
+
+def test_disconnect_cancels_request(fe):
+    """A client that vanishes mid-stream must not leak its slot: the
+    next token write fails, the handler cancels through the inbox, and
+    the engine serves the next request normally."""
+    before = _get(fe, "/stats")[1]["frontend"]["disconnects"]
+    s = socket.create_connection(("127.0.0.1", fe.port), timeout=30)
+    payload = json.dumps(dict(prompt=PROMPT, max_tokens=120,
+                              stream=True)).encode()
+    s.sendall(b"POST /v1/completions HTTP/1.1\r\n"
+              b"Host: x\r\nContent-Type: application/json\r\n"
+              + f"Content-Length: {len(payload)}\r\n\r\n".encode()
+              + payload)
+    assert s.recv(64)                    # stream started
+    s.close()                            # ...and the client vanishes
+    deadline = time.time() + 30
+    while time.time() < deadline:
+        if _get(fe, "/stats")[1]["frontend"]["disconnects"] > before:
+            break
+        time.sleep(0.1)
+    else:
+        pytest.fail("disconnect never cancelled the request")
+    # the slot is free again: a fresh request completes
+    status, body = _post(fe, dict(prompt=PROMPT, max_tokens=3))
+    assert status == 200
+    assert len(body["choices"][0]["token_ids"]) == 3
