@@ -35,6 +35,18 @@ pair rides the same-run ``check_disagg`` structural gate (plus an
 in-bench token-identity assert, so a parity break can never publish a
 row).
 
+Recurrent rows (mamba2 ssm + zamba2 hybrid, fp32, queue depth 8) drive
+ragged distinct-length prompts through the batched fixed-grid chunked
+prefill path and report, next to the usual columns, the throughput of
+the OLD exact-length prefill (``exact_prefill_tok_per_s``: one freshly
+jitted program per prompt length -- the compile-per-length cost that
+path actually paid on every new length). A second row per arch runs the
+shared-system-prompt workload with the checkpoint-mode prefix cache on
+and reports ``prefix_hit_rate``. Both ride the same-run
+``check_recurrent_prefill`` structural gate (batched must beat
+exact-length; see scripts/check_bench_regression.py) and are part of
+the --smoke sweep.
+
 Output: human CSV rows (``emit``) plus one machine-readable JSON blob
 (``--out`` to persist, default benchmarks/results/e2e_serve.json when run
 as a script) so future PRs can track the perf trajectory.  ``--smoke``
@@ -42,13 +54,16 @@ runs the reduced sweep CI uses for regression gating -- including one
 spec-decode run (see scripts/check_bench_regression.py).
 """
 import argparse
+import functools
 import os
+import time
 
 from repro.launch.hostdev import force_host_devices
 
 force_host_devices(os.environ.get("REPRO_FORCE_HOST_DEVICES"))
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import get_arch
@@ -69,6 +84,8 @@ PREFIX_DEPTHS = (8, 32)          # shared-system-prompt sweep
 PREFIX_SMOKE_DEPTHS = (8,)       # CI prefix smoke run
 TP_DEPTH = 8                     # tensor-parallel row (tp=1 vs tp=2)
 DISAGG_DEPTH = 8                 # mono-vs-disagg row pair (1P+1D)
+RECURRENT_ARCHS = ("mamba2-2.7b", "zamba2-1.2b")   # ssm + hybrid rows
+RECURRENT_DEPTH = 8
 SHARED_PREFIX_LEN = 48           # shared system prompt tokens
 UNIQUE_LEN = 6                   # per-request unique suffix tokens
 MAX_SLOTS = 8
@@ -197,6 +214,87 @@ def _bench_disagg(cfg, params, depth: int) -> list:
     return rows
 
 
+def _exact_prefill_tok_per_s(cfg, params, prompts) -> float:
+    """Throughput of the pre-refactor recurrent prefill: one EXACT-length
+    program per prompt, so every new length pays a fresh compile -- the
+    cost the old ``_prefill_impl`` paid on first sight of each length (a
+    fresh jit wrapper per prompt defeats jax's cache the same way a new
+    length did). The batched fixed-grid path amortizes ONE compiled
+    (B, C) chunk program over all lengths; this oracle is what the
+    ``check_recurrent_prefill`` gate compares it against."""
+    total_s, total_tok = 0.0, 0
+    for p in prompts:
+        L = len(p)
+        cache = T.init_cache(cfg, 1, 64)
+        fn = jax.jit(functools.partial(
+            T.prefill_chunk, params, cfg))            # fresh cache entry
+        tok = jnp.asarray([p], jnp.int32)
+        lens = jnp.asarray([L], jnp.int32)
+        t0 = time.perf_counter()
+        out = fn(cache, tokens=tok, start=jnp.int32(0), lengths=lens)
+        jax.block_until_ready(out)
+        total_s += time.perf_counter() - t0
+        total_tok += L
+    return total_tok / total_s
+
+
+def _bench_recurrent(arch: str, depth: int) -> list:
+    """Two rows for a recurrent arch (fp32): ragged distinct-length
+    prompts through the batched fixed-grid chunked prefill (plus the
+    exact-length oracle throughput for the structural gate), and the
+    shared-system-prompt workload with the checkpoint-mode prefix cache
+    on (hit rate must be total: every measured pass is warm)."""
+    cfg = get_arch(arch, reduced=True)
+    params = T.init_params(cfg, jax.random.PRNGKey(0))
+    slots = min(depth, MAX_SLOTS)
+    rng = np.random.default_rng(0)
+    # distinct lengths: the exact-length path compiles per length
+    lens = list(18 + rng.permutation(30)[:depth])
+    shared = list(rng.integers(0, cfg.vocab_size, SHARED_PREFIX_LEN))
+    rows = []
+    for tag, prefix_on in (("batched", None), ("prefix_on", True)):
+        eng = Engine(cfg, params, ServeConfig(
+            max_new_tokens=NEW_TOKENS, max_slots=slots,
+            decode_chunk=NEW_TOKENS, cache_len=64, prefill_bucket=8,
+            prefill_chunk=16, prefill_batch=slots,
+            prefix_cache=bool(prefix_on)))
+        if prefix_on:
+            prompts = [shared + list(rng.integers(0, cfg.vocab_size,
+                                                  UNIQUE_LEN))
+                       for _ in range(depth)]
+        else:
+            prompts = [list(rng.integers(0, cfg.vocab_size, int(L)))
+                       for L in lens]
+        for _ in range(2):                 # compile + warm checkpoint tree
+            eng.generate(prompts)
+        stats = []
+        for _ in range(3):
+            outs = eng.generate(prompts)
+            assert all(len(o) == NEW_TOKENS for o in outs)
+            stats.append(dict(eng.stats))
+        s = sorted(stats, key=lambda d: d["decode_s"])[1]      # median run
+        rec = dict(queue_depth=depth, slots=slots, arch=arch,
+                   family=cfg.family, prefill_mode=tag,
+                   tokens=int(s["tokens"]),
+                   tok_per_s=round(s["tok_per_s"], 1),
+                   prefill_tok_per_s=round(s["prefill_tok_per_s"], 1),
+                   ttft_s=round(s["ttft_s"], 5),
+                   ttft_p50_s=round(s["ttft_p50_s"], 5),
+                   ttft_p99_s=round(s["ttft_p99_s"], 5),
+                   prefill_s=round(s["prefill_s"], 4),
+                   decode_s=round(s["decode_s"], 4),
+                   host_syncs=int(s["host_syncs"]))
+        if prefix_on:
+            rec["shared_prefix_len"] = SHARED_PREFIX_LEN
+            rec["prefix_hit_rate"] = round(s["prefix_hits"] / depth, 4)
+            rec["prefix_tokens_reused"] = int(s["prefix_tokens_reused"])
+        else:
+            rec["exact_prefill_tok_per_s"] = round(
+                _exact_prefill_tok_per_s(cfg, params, prompts), 1)
+        rows.append(rec)
+    return rows
+
+
 def run(out_path: str = None, smoke: bool = False) -> dict:
     cfg = get_arch("tinyllama-1.1b", reduced=True)
     params = T.init_params(cfg, jax.random.PRNGKey(0))
@@ -215,6 +313,8 @@ def run(out_path: str = None, smoke: bool = False) -> dict:
                       shared_prefix_len=SHARED_PREFIX_LEN,
                       unique_len=UNIQUE_LEN, tp_depth=TP_DEPTH,
                       disagg_depth=DISAGG_DEPTH,
+                      recurrent_archs=list(RECURRENT_ARCHS),
+                      recurrent_depth=RECURRENT_DEPTH,
                       draft_k=DRAFT_K, max_slots=MAX_SLOTS,
                       smoke=smoke),
         runs=[],
@@ -278,6 +378,24 @@ def run(out_path: str = None, smoke: bool = False) -> dict:
                  f"ttft_s={rec['ttft_s']} "
                  + (f"prefix_hit_rate={rec['prefix_hit_rate']} "
                     f"reused={rec['prefix_tokens_reused']}" if on else ""))
+    # recurrent rows (ssm + hybrid, fp32): batched fixed-grid chunked
+    # prefill vs the old exact-length oracle, plus a checkpoint-mode
+    # prefix-cache row -- both in the smoke sweep for the same-run
+    # check_recurrent_prefill structural gate
+    for arch in RECURRENT_ARCHS:
+        for rec in _bench_recurrent(arch, RECURRENT_DEPTH):
+            rec["params"] = f"fp32_{rec['family']}_{rec['prefill_mode']}"
+            results["runs"].append(rec)
+            fam = rec["family"]
+            extra = (f"prefix_hit_rate={rec['prefix_hit_rate']} "
+                     f"reused={rec['prefix_tokens_reused']}"
+                     if rec["prefill_mode"] == "prefix_on" else
+                     f"exact_prefill_tok/s={rec['exact_prefill_tok_per_s']}")
+            emit(f"e2e_serve_{fam}_{rec['prefill_mode']}_d{RECURRENT_DEPTH}",
+                 rec["decode_s"] / max(rec["tokens"], 1) * 1e6,
+                 f"tok/s={rec['tok_per_s']} "
+                 f"prefill_tok/s={rec['prefill_tok_per_s']} "
+                 f"ttft_s={rec['ttft_s']} {extra}")
     # monolithic-vs-disaggregated pair at matched depth (1 prefill + 1
     # decode worker; shared-prefix workload so pages migrate) -- included
     # in the smoke sweep for the same-run check_disagg structural gate

@@ -32,7 +32,7 @@ tree matching is deterministic for that workload, so a zero hit rate
 means the prefix cache structurally stopped working (their ttft rides
 the ordinary ttft gate).
 
-Two SAME-RUN structural gates ride along (rows from ONE run cancel
+Three SAME-RUN structural gates ride along (rows from ONE run cancel
 machine drift, so these are tight where the cross-run gates must be
 loose):
 
@@ -49,6 +49,12 @@ loose):
   structurally), (b) have actually migrated KV pages, and (c) show
   decode-side prefix hits (migrated pages being USED). Missing or null
   fields are failures.
+* ``check_recurrent_prefill``: every recurrent (ssm / hybrid) batched
+  row must beat its own same-run ``exact_prefill_tok_per_s`` (the old
+  one-compile-per-prompt-length prefill) on prefill tok/s, and every
+  recurrent prefix row must show a positive checkpoint hit rate --
+  batched fixed-grid chunking and checkpoint-mode prefix caching are
+  the reasons those rows exist. Missing or null fields are failures.
 
 Trace-bench JSONs (``benchmark: "trace_serve"``) dispatch to
 ``check_trace`` instead: rows are matched on (mix, rate_rps, params),
@@ -185,6 +191,56 @@ def check_disagg(new: dict) -> int:
     if fails:
         print(f"REGRESSION: disaggregated serving structurally broken "
               f"({fails} failure(s))")
+    return fails
+
+
+def check_recurrent_prefill(new: dict) -> int:
+    """Same-run structural gate on the recurrent (ssm / hybrid) serving
+    rows. Every ``prefill_mode: "batched"`` recurrent row must beat its
+    own ``exact_prefill_tok_per_s`` (the old one-compile-per-prompt-
+    length prefill, measured in the SAME run) on prefill tok/s -- the
+    reason recurrent families ride the batched fixed-grid chunk path.
+    Every ``prefill_mode: "prefix_on"`` recurrent row must show a
+    positive ``prefix_hit_rate`` (checkpoint matching is deterministic
+    for the shared-system-prompt workload, so zero means checkpoint-mode
+    prefix caching structurally stopped working). Missing or null fields
+    are failures, not crashes. Returns the failure count (0 when the
+    sweep has no recurrent rows)."""
+    rows = [r for r in new.get("runs", [])
+            if r.get("family") in ("ssm", "hybrid")
+            and "prefill_mode" in r]
+    if not rows:
+        return 0
+    fails = 0
+    for r in rows:
+        tag = (f"recurrent {r.get('family')} {r.get('prefill_mode')} "
+               f"d{r.get('queue_depth')}")
+        if r["prefill_mode"] == "batched":
+            rp = r.get("prefill_tok_per_s")
+            ep = r.get("exact_prefill_tok_per_s")
+            if not isinstance(rp, (int, float)) or \
+                    not isinstance(ep, (int, float)):
+                fails += 1
+                print(f"FAIL {tag}: prefill tok/s missing "
+                      f"({'batched' if rp is None else 'exact'} side)")
+                continue
+            ok = rp > ep
+            fails += not ok
+            print(f"{'OK ' if ok else 'FAIL'} {tag} batched prefill "
+                  f"{rp:>8.1f} vs exact-length {ep:>8.1f}")
+        elif r["prefill_mode"] == "prefix_on":
+            hit = r.get("prefix_hit_rate")
+            if not isinstance(hit, (int, float)) or isinstance(hit, bool):
+                fails += 1
+                print(f"FAIL {tag}: prefix_hit_rate missing")
+                continue
+            ok = hit > 0
+            fails += not ok
+            print(f"{'OK ' if ok else 'FAIL'} {tag} prefix_hit_rate "
+                  f"{hit:.2f}")
+    if fails:
+        print(f"REGRESSION: recurrent batched prefill / checkpoint "
+              f"prefix cache structurally broken ({fails} failure(s))")
     return fails
 
 
@@ -372,7 +428,8 @@ def compare(new: dict, baseline: dict, tol: float, tol_prefill: float,
         return 2
     tp_fails = check_tp_sliced(new)
     disagg_fails = check_disagg(new)
-    if failures or tp_fails or disagg_fails:
+    recurrent_fails = check_recurrent_prefill(new)
+    if failures or tp_fails or disagg_fails or recurrent_fails:
         if failures:
             print(f"REGRESSION: {failures} exceeded tolerances "
                   f"(decode {tol:.0%}, prefill {tol_prefill:.0%}, "

@@ -15,10 +15,18 @@ import jax
 import jax.numpy as jnp
 
 
+# the canonical family set. models/state.py keys its per-family
+# capability table (KV ring vs recurrent state, speculation, prefix
+# mode, TP/EP) off these names and statically asserts it covers them
+# all, so adding a family here without a capability row fails at import
+FAMILIES: Tuple[str, ...] = (
+    "dense", "gpt2", "moe", "ssm", "hybrid", "vlm", "audio")
+
+
 @dataclasses.dataclass(frozen=True)
 class ModelConfig:
     name: str
-    family: str                     # dense | moe | ssm | hybrid | vlm | audio | gpt2
+    family: str                     # one of FAMILIES
     n_layers: int
     d_model: int
     n_heads: int
@@ -81,6 +89,9 @@ class ModelConfig:
     subquadratic: bool = False
 
     def __post_init__(self):
+        if self.family not in FAMILIES:
+            raise ValueError(
+                f"unknown model family {self.family!r}; known: {FAMILIES}")
         if self.d_head == 0 and self.n_heads:
             object.__setattr__(self, "d_head", self.d_model // self.n_heads)
 

@@ -400,8 +400,17 @@ def constrain(x, *dims):
 #     mesh -- fused-qkv layouts interleave q/k/v lanes and stay
 #     replicated.
 #   * mlp:  gate/up/fc shard the ffn hidden, down/proj the d_model
-#     output, when d_ff and d_model divide. MoE expert stacks stay
-#     replicated (EP is a training-side concern; see param_specs).
+#     output, when d_ff and d_model divide.
+#   * moe_ep: MoE expert stacks shard their EXPERT axis over the model
+#     mesh axis when n_experts divides it (serving-side expert
+#     parallelism): each shard computes only its experts' gemms and one
+#     tiled all-gather of the (B, E_local, C, d) output buffers assembles
+#     the global buffer -- pure data movement, and per-expert gemms batch
+#     over the expert dim, so the EP forward is bit-identical to the
+#     replicated path (pinned by tests/test_moe_ep.py). Packed QTensor
+#     expert stacks keep a replicated payload (their E*K packing cannot
+#     slice per-expert without super-block alignment); the EP compute
+#     path then slices each shard's experts out of the dequantized stack.
 # Everything else (embeddings, norms, biases past a gather point) is
 # replicated. Every fallback degrades to replication, so any config
 # compiles at any tp degree -- it just stops saving work.
@@ -453,6 +462,10 @@ class ServeTPPlan:
     #     fails (e.g. the reduced bench model's wo at K = 256, tp 2).
     attn_row: str = ""
     mlp_row: str = ""
+    # serving-side expert parallelism: plain MoE expert stacks shard
+    # their expert axis over ``axis`` and each shard computes only its
+    # own experts (see the module comment and models/moe.moe_block)
+    moe_ep: bool = False
 
 
 def _row_mode(leaf, size: int) -> str:
@@ -470,7 +483,7 @@ def _row_mode(leaf, size: int) -> str:
 
 def make_serve_tp_plan(cfg, size: int, axis: str = "model",
                        matmul: str = "padded",
-                       params=None) -> ServeTPPlan:
+                       params=None, ep: bool = True) -> ServeTPPlan:
     """Shard-vs-replicate decisions for serving ``cfg`` at tp degree
     ``size`` (divisibility checks; see module comment).
 
@@ -479,7 +492,11 @@ def make_serve_tp_plan(cfg, size: int, axis: str = "model",
     packed weight's K rows can shard depends on its variant's
     super-block, so the decision is per-leaf and needs the real tensors.
     Without params (or under "padded"/"sliced") the plan keeps the
-    lane-only dataflow."""
+    lane-only dataflow.
+
+    ``ep`` opts MoE expert stacks into expert-axis sharding when the
+    expert count divides the mesh (non-divisible counts fall back to
+    replication like every other rule)."""
     if matmul not in ("padded", "sliced", "sliced_row"):
         raise ValueError(f"tp matmul must be 'padded', 'sliced' or "
                          f"'sliced_row', got {matmul!r}")
@@ -492,6 +509,7 @@ def make_serve_tp_plan(cfg, size: int, axis: str = "model",
     mlp = (cfg.family != "moe"
            and cfg.d_ff % size == 0
            and cfg.d_model % size == 0)
+    moe_ep = (ep and cfg.family == "moe" and cfg.n_experts % size == 0)
     attn_row = mlp_row = ""
     if matmul == "sliced_row" and isinstance(params, dict):
         layers = params.get("layers")
@@ -506,7 +524,8 @@ def make_serve_tp_plan(cfg, size: int, axis: str = "model",
             if down is not None:
                 mlp_row = _row_mode(down, size)
     return ServeTPPlan(size=size, axis=axis, attn=attn, mlp=mlp,
-                       matmul=matmul, attn_row=attn_row, mlp_row=mlp_row)
+                       matmul=matmul, attn_row=attn_row, mlp_row=mlp_row,
+                       moe_ep=moe_ep)
 
 
 _SERVE_TP_STACK: list = [None]
@@ -570,14 +589,24 @@ def serve_param_specs(params, plan: ServeTPPlan) -> Any:
     shard, so no super-block ever straddles devices; plain weights shard
     the same way. Under a row-parallel plan the o-/down-proj instead
     shard packed K rows (mode "packed": whole super-blocks per shard) or
-    replicate their payload (mode "dequant"). Embeddings, norms,
-    biases-after-gather, MoE stacks and every non-divisible block
-    replicate."""
+    replicate their payload (mode "dequant"). Under an EP plan plain MoE
+    expert stacks shard their expert axis (the router and packed QTensor
+    stacks replicate). Embeddings, norms, biases-after-gather and every
+    non-divisible block replicate."""
 
     def walk(node, prefix=""):
         if isinstance(node, dict):
             return {k: walk(v, f"{prefix}{k}/") for k, v in node.items()}
         path = prefix[:-1]
+        parts = path.split("/")
+        if (plan.moe_ep and plan.size > 1 and len(parts) >= 2
+                and parts[-2] == "moe"
+                and parts[-1] in ("w_gate", "w_up", "w_down")
+                and not isinstance(node, QTensor)):
+            # expert parallelism: (Lc, E, K, N) stacks shard E; the
+            # shard_map body then sees only its own experts' weights
+            return P(*([None] * (len(node.shape) - 3)
+                       + [plan.axis, None, None]))
         row = _serve_row_mode(path, plan) if plan.size > 1 else ""
         shard = (not row and plan.size > 1
                  and _serve_lane_sharded(path, plan))

@@ -105,13 +105,16 @@ def main() -> None:
                          "decode, 'batched' scores the whole draft block "
                          "in one masked forward")
     ap.add_argument("--prefix-cache", action="store_true",
-                    help="enable the paged KV prefix cache: admission "
-                         "reuses the longest cached token prefix and "
-                         "prefills only the suffix (greedy output stays "
-                         "token-identical to a cold prefill)")
+                    help="enable the prefix cache: admission reuses the "
+                         "longest cached token prefix and prefills only "
+                         "the suffix (output stays token-identical to a "
+                         "cold prefill). KV families page the ring; "
+                         "recurrent families (ssm/hybrid) checkpoint "
+                         "conv/SSM state at prefill-chunk boundaries")
     ap.add_argument("--prefix-page", type=int, default=16,
                     help="positions per KV page (clamped to a divisor of "
-                         "the ring length)")
+                         "the ring length; recurrent families pin the "
+                         "page to --prefill-chunk instead)")
     ap.add_argument("--prefix-bytes", type=int, default=64 << 20,
                     help="device byte budget for the page pool (LRU "
                          "eviction of zero-ref pages beyond it)")
@@ -144,6 +147,11 @@ def main() -> None:
                          "'sliced_row' adds row-parallel o-/down-"
                          "projections (half the collectives per layer; "
                          "equal to within ~a few activation-dtype ulps)")
+    ap.add_argument("--no-tp-ep", dest="tp_ep", action="store_false",
+                    help="disable expert parallelism under --tp for MoE "
+                         "archs (by default expert stacks shard over the "
+                         "model axis when n_experts divides the mesh; "
+                         "outputs are bit-identical either way)")
     ap.add_argument("--force-host-devices", type=int, default=None,
                     help="split the host platform into this many fake "
                          "devices for CPU TP testing (applied before "
@@ -212,7 +220,7 @@ def main() -> None:
         prefix_cache=args.prefix_cache, prefix_page=args.prefix_page,
         prefix_bytes=args.prefix_bytes,
         max_queue=args.max_queue, preempt=args.preempt,
-        tp=args.tp, tp_matmul=args.tp_matmul)
+        tp=args.tp, tp_matmul=args.tp_matmul, tp_ep=args.tp_ep)
     if args.disagg:
         print(f"disaggregated: {args.prefill_workers} prefill + "
               f"{args.decode_workers} decode worker(s), KV-aware router")

@@ -37,9 +37,13 @@ def _split_proj(zxbcdt, cfg):
     return z, xBC, dt
 
 
-def _causal_conv(xBC, conv_w, conv_b, conv_state=None):
+def _causal_conv(xBC, conv_w, conv_b, conv_state=None, state_take=None):
     """Depthwise causal conv1d. xBC: (B,S,C); conv_w: (W,C).
-    conv_state: (B,W-1,C) previous tail (decode/chunked prefill)."""
+    conv_state: (B,W-1,C) previous tail (decode/chunked prefill).
+    state_take: optional (B,) count of valid leading columns per row; the
+    returned tail then ends at that column, so a row whose prompt ended
+    mid-chunk keeps its true tail and a row with 0 valid columns keeps
+    ``conv_state`` unchanged (masked batched prefill)."""
     W = conv_w.shape[0]
     if conv_state is None:
         pad = jnp.zeros(xBC.shape[:1] + (W - 1,) + xBC.shape[2:], xBC.dtype)
@@ -49,7 +53,11 @@ def _causal_conv(xBC, conv_w, conv_b, conv_state=None):
     out = sum(xp[:, i:i + xBC.shape[1]] * conv_w[i][None, None]
               for i in range(W))
     out = out + conv_b[None, None].astype(out.dtype)
-    new_state = xp[:, -(W - 1):]
+    if state_take is None:
+        new_state = xp[:, -(W - 1):]
+    else:
+        idx = state_take[:, None] + jnp.arange(W - 1)[None]    # (B, W-1)
+        new_state = jnp.take_along_axis(xp, idx[:, :, None], axis=1)
     return jax.nn.silu(out), new_state
 
 
@@ -107,22 +115,33 @@ def _ssd_chunk_scan(x, dt, A, Bm, Cm, state0, chunk: int, unroll=1):
 
 
 def mamba2_forward(h: jnp.ndarray, p: Dict, cfg, *,
-                   conv_state=None, ssm_state=None, impl="auto",
+                   conv_state=None, ssm_state=None, valid=None, impl="auto",
                    interpret=False):
     """Full-sequence forward (train / prefill).
 
-    h: (B, S, d_model). Returns (out (B,S,d), (conv_state, ssm_state))."""
+    h: (B, S, d_model). Returns (out (B,S,d), (conv_state, ssm_state)).
+
+    valid: optional (B, S) bool -- True on real columns, always a
+    contiguous prefix of each row (masked batched prefill). Invalid
+    columns never touch the recurrent state: dt is zeroed post-softplus
+    (decay exp(0)=1 and zero input contribution, the same identity the
+    SSD tail-pad relies on) and the conv tail is gathered at each row's
+    last valid column. Outputs at invalid columns are garbage and must
+    be ignored by the caller."""
     dd = ssm_dims(cfg)
     Bsz, S, _ = h.shape
     H, P, N = dd["n_heads"], dd["head_dim"], dd["state"]
 
     zxbcdt = dense(h, p["in_proj"], impl=impl, interpret=interpret)
     z, xBC, dt = _split_proj(zxbcdt, cfg)
-    xBC, conv_state_new = _causal_conv(xBC, p["conv_w"], p["conv_b"],
-                                       conv_state)
+    xBC, conv_state_new = _causal_conv(
+        xBC, p["conv_w"], p["conv_b"], conv_state,
+        state_take=None if valid is None else jnp.sum(valid, axis=1))
     x, Bm, Cm = jnp.split(xBC, [dd["d_inner"], dd["d_inner"] + N], axis=-1)
     dt = jax.nn.softplus(dt.astype(jnp.float32)
                          + p["dt_bias"].astype(jnp.float32)[None, None])
+    if valid is not None:
+        dt = jnp.where(valid[..., None], dt, 0.0)
     A = -jnp.exp(p["A_log"].astype(jnp.float32))
     x = constrain(x.reshape(Bsz, S, H, P), "dp", None, "model", None)
     if ssm_state is None:

@@ -18,7 +18,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.quantize import QTensor, dequantize
-from repro.distributed.sharding import constrain
+from repro.distributed.sharding import constrain, serve_tp_plan
 
 
 def expert_weights(w, E: int) -> jnp.ndarray:
@@ -76,13 +76,40 @@ def moe_block(x: jnp.ndarray, p: Dict, cfg, *, impl="auto",
     # EP: dispatch buffers resharded expert-major -> the all-to-all
     bufs = constrain(bufs, "dp", "model", None, None)
 
-    hg = jnp.einsum("becd,edf->becf", bufs.astype(jnp.bfloat16),
+    # serving-side expert parallelism (shard_map; ServeTPPlan.moe_ep):
+    # routing/dispatch/combine run replicated on the full E (the router
+    # is replicated), but each shard's expert gemms cover only its own
+    # E/size experts; one tiled all-gather of the output buffers -- pure
+    # data movement -- assembles the global (B,E,C,d). Per-expert gemms
+    # batch over the expert dim, so the EP output is bit-identical to the
+    # replicated path (pinned by tests/test_moe_ep.py).
+    plan = serve_tp_plan()
+    ep = (plan is not None and plan.moe_ep and plan.size > 1
+          and E % plan.size == 0)
+    if ep:
+        sidx = jax.lax.axis_index(plan.axis)
+        Eloc = E // plan.size
+        if wg.shape[0] == E:
+            # replicated stack (packed QTensors dequantize to full E):
+            # slice this shard's experts; plain sharded stacks already
+            # arrive local under serve_param_specs
+            wg = jax.lax.dynamic_slice_in_dim(wg, sidx * Eloc, Eloc, 0)
+            wu = jax.lax.dynamic_slice_in_dim(wu, sidx * Eloc, Eloc, 0)
+            wd = jax.lax.dynamic_slice_in_dim(wd, sidx * Eloc, Eloc, 0)
+        bufs_c = jax.lax.dynamic_slice_in_dim(bufs, sidx * Eloc, Eloc, 1)
+    else:
+        bufs_c = bufs
+
+    hg = jnp.einsum("becd,edf->becf", bufs_c.astype(jnp.bfloat16),
                     wg.astype(jnp.bfloat16))
-    hu = jnp.einsum("becd,edf->becf", bufs.astype(jnp.bfloat16),
+    hu = jnp.einsum("becd,edf->becf", bufs_c.astype(jnp.bfloat16),
                     wu.astype(jnp.bfloat16))
     hidden = jax.nn.silu(hg) * hu
     out_buf = jnp.einsum("becf,efd->becd", hidden,
                          wd.astype(jnp.bfloat16))           # (B,E,C,d)
+    if ep:
+        out_buf = jax.lax.all_gather(out_buf, plan.axis, axis=1,
+                                     tiled=True)
 
     def combine(ob, m):
         e_flat, slot, keep, g_flat = m

@@ -1,0 +1,193 @@
+"""Family adapters: the engine <-> model contract as an explicit object.
+
+The serving engine used to know which model families support which
+features through four scattered ``raise ValueError(... needs a KV-ring
+family ...)`` sites plus ad-hoc ``cfg.family`` branches. This module makes
+that contract explicit:
+
+* ``FamilyCaps`` -- a per-family capability row (KV ring vs recurrent
+  state, speculation, prefix caching mode, TP/EP) consulted by ONE
+  validation pass (``validate_serve_features``) at engine construction.
+* ``DecodeState`` -- the adapter the engine drives the model's decode
+  cache through: init / slot-scatter / ring snapshot-rewind / page and
+  checkpoint export-import. Every method delegates to
+  ``models.transformer`` so the numerical contracts (bit-for-bit page
+  copies, drop-mode padding scatters) stay in one place.
+
+Capability semantics:
+
+* ``kv_ring``: the decode cache is a position-addressed KV ring --
+  pages, speculation rollback, and attention-head TP all key off this.
+* ``recurrent``: the decode cache carries dense conv/SSM state. Such
+  state is positional (token t's state folds in every token before it),
+  so prefix caching stores whole-state CHECKPOINTS at page boundaries
+  instead of per-position pages, and speculation is impossible (no ring
+  rewind can un-write a dense state).
+* ``prefix_mode``: "pages" (per-position ring payload, partial-page
+  copy-on-write reuse) or "checkpoints" (full pages only, page size
+  pinned to the prefill chunk so checkpoints are the inter-chunk state
+  the scheduler already materializes -- warm admission is bit-identical
+  to cold by construction).
+* ``ring_bounded_context``: prompt + budget must fit the ring (the ssm
+  family has no ring and decodes unbounded contexts).
+* ``expert_parallel``: MoE expert stacks may shard over the model axis
+  when the expert count divides the mesh (see distributed/sharding.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax.numpy as jnp
+
+from repro.configs.base import FAMILIES, ModelConfig
+from repro.models import transformer as T
+
+
+@dataclasses.dataclass(frozen=True)
+class FamilyCaps:
+    """One row of the family capability table."""
+    family: str
+    kv_ring: bool                 # position-addressed KV ring cache
+    recurrent: bool               # dense conv/SSM state in the cache
+    chunked_prefill: bool = True  # batched masked (B, C) prefill chunks
+    speculative: bool = False     # draft/verify with ring rewind
+    prefix_cache: bool = False    # shared-prefix reuse supported
+    prefix_mode: str = "none"     # "pages" | "checkpoints" | "none"
+    tensor_parallel: bool = False  # serve-TP over attention heads
+    expert_parallel: bool = False  # experts shardable over the model axis
+    ring_bounded_context: bool = True  # prompt+budget must fit the ring
+
+
+_KV = dict(kv_ring=True, recurrent=False, speculative=True,
+           prefix_cache=True, prefix_mode="pages", tensor_parallel=True)
+_RECURRENT = dict(kv_ring=False, recurrent=True, speculative=False,
+                  prefix_cache=True, prefix_mode="checkpoints",
+                  tensor_parallel=False)
+
+CAPS: Dict[str, FamilyCaps] = {
+    "dense": FamilyCaps(family="dense", **_KV),
+    "gpt2": FamilyCaps(family="gpt2", **_KV),
+    "vlm": FamilyCaps(family="vlm", **_KV),
+    "audio": FamilyCaps(family="audio", **_KV),
+    "moe": FamilyCaps(family="moe", expert_parallel=True, **_KV),
+    # ssm has no attention ring at all: context is unbounded
+    "ssm": FamilyCaps(family="ssm", ring_bounded_context=False,
+                      **_RECURRENT),
+    # hybrid's shared-attention ring bounds its context like a KV family
+    "hybrid": FamilyCaps(family="hybrid", **_RECURRENT),
+}
+
+# every registered family must carry a capability row: a family added to
+# configs/base.FAMILIES without one fails here at import, not at runtime
+assert set(CAPS) == set(FAMILIES), \
+    f"capability table out of sync with FAMILIES: {set(CAPS) ^ set(FAMILIES)}"
+
+KV_FAMILIES: Tuple[str, ...] = tuple(f for f, c in CAPS.items() if c.kv_ring)
+
+
+def family_caps(cfg: ModelConfig) -> FamilyCaps:
+    caps = CAPS.get(cfg.family)
+    if caps is None:
+        raise ValueError(f"unknown model family {cfg.family!r}")
+    return caps
+
+
+# feature -> (FamilyCaps attribute, reason an unsupported family raises).
+# Every reason mentions the recurrent state: the only families outside
+# the KV-ring set are the recurrent ones, and each feature fails for a
+# feature-specific positional/rollback reason worth surfacing.
+FEATURES: Dict[str, Tuple[str, str]] = {
+    "tensor-parallel serving": (
+        "tensor_parallel",
+        "recurrent state sharding is a training-side concern"),
+    "speculative decoding": (
+        "speculative",
+        "a dense recurrent state cannot be rolled back when drafts are "
+        "rejected"),
+    # every current family supports prefix caching (KV families page the
+    # ring, recurrent families checkpoint state at chunk boundaries);
+    # the row keeps the validation pass total over the feature matrix
+    "prefix caching": (
+        "prefix_cache",
+        "the decode cache has no page- or checkpoint-granular export"),
+}
+
+
+def validate_serve_features(cfg: ModelConfig, *, tp: int = 1,
+                            drafter: bool = False,
+                            prefix_cache: bool = False) -> FamilyCaps:
+    """ONE validation pass over the family x feature matrix.
+
+    Raises ValueError with a single consistent shape --
+    ``"<feature> needs a KV-ring family (got <family>): <why>"`` -- for
+    any requested feature the family's capability row does not support.
+    Returns the capability row so callers can branch on it afterwards."""
+    caps = family_caps(cfg)
+    requested = {"tensor-parallel serving": tp > 1,
+                 "speculative decoding": drafter,
+                 "prefix caching": prefix_cache}
+    for feature, (attr, why) in FEATURES.items():
+        if requested.get(feature) and not getattr(caps, attr):
+            raise ValueError(
+                f"{feature} needs a KV-ring family (got {cfg.family!r}); "
+                f"{why}")
+    return caps
+
+
+class DecodeState:
+    """Adapter the engine drives a family's decode cache through.
+
+    Stateless (the cache pytrees live with the engine so they can ride
+    donated jit arguments); this object carries the config, the
+    capability row, and the per-family dispatch. Methods that only make
+    sense for one side of the kv_ring/recurrent split assert on the
+    capability row rather than on ``cfg.family`` strings."""
+
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+        self.caps = family_caps(cfg)
+
+    # -- lifecycle ---------------------------------------------------------
+    def init(self, B: int, seq_len: int,
+             dtype=jnp.bfloat16) -> Dict[str, Any]:
+        return T.init_cache(self.cfg, B, seq_len, dtype=dtype)
+
+    def set_slots(self, cache, group_cache, indices) -> Dict[str, Any]:
+        return T.cache_set_slots(cache, group_cache, indices)
+
+    # -- speculation (KV ring only) ----------------------------------------
+    def ring_snapshot(self, cache, slots) -> Dict[str, Any]:
+        assert self.caps.speculative, self.caps.family
+        return T.cache_ring_snapshot(cache, slots)
+
+    def ring_rewind(self, cache, snapshot, slots, keep) -> Dict[str, Any]:
+        assert self.caps.speculative, self.caps.family
+        return T.cache_ring_rewind(cache, snapshot, slots, keep)
+
+    # -- prefix cache pages / checkpoints ----------------------------------
+    def page_keys(self) -> Tuple[str, ...]:
+        return T.cache_page_keys(self.cfg)
+
+    def page_pool(self, n_pages: int, page: int,
+                  dtype=jnp.bfloat16) -> Dict[str, Any]:
+        assert self.caps.prefix_cache, self.caps.family
+        return T.cache_page_pool(self.cfg, n_pages, page, dtype=dtype)
+
+    def page_bytes(self, page: int) -> int:
+        return T.cache_page_bytes(self.cfg, page)
+
+    def gather_pages(self, cache, rows, cols) -> Dict[str, Any]:
+        return T.cache_gather_pages(cache, rows, cols)
+
+    def scatter_pages(self, cache, pages, rows, cols,
+                      positions) -> Dict[str, Any]:
+        return T.cache_scatter_pages(cache, pages, rows, cols, positions)
+
+    def scatter_checkpoints(self, cache, pool, idx, rows) -> Dict[str, Any]:
+        assert self.caps.prefix_mode == "checkpoints", self.caps.family
+        return T.cache_scatter_checkpoints(cache, pool, idx, rows)
+
+    def insert_checkpoints(self, pool, cache, rows, idx) -> Dict[str, Any]:
+        assert self.caps.prefix_mode == "checkpoints", self.caps.family
+        return T.cache_insert_checkpoints(pool, cache, rows, idx)

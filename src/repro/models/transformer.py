@@ -706,6 +706,15 @@ def prefill_chunk(params, cfg: ModelConfig, cache: Dict[str, Any], *,
     per token, but with MatMul-shaped batches. Requires C <= ring length
     (in-chunk positions must map to distinct slots).
 
+    Recurrent families (ssm / hybrid) run the same masked-chunk contract
+    through ``_recurrent_chunk``: invalid columns are identity on the
+    conv/SSM state (dt zeroed, conv tail gathered at each row's last valid
+    column), so trailing pads never pollute recurrent state and one
+    compiled (B, C) program serves every prompt length. ``cached_lengths``
+    is ignored there: recurrent state is positional, so a warm prefix
+    admission restores a checkpoint and starts the chunk GRID at the
+    cached horizon instead of masking per-row.
+
     Returns (final-norm hidden (B, C, d), new cache). Callers that only
     need logits for some rows/offsets should gather from the hidden states
     and apply ``lm_logits`` there.
@@ -714,6 +723,9 @@ def prefill_chunk(params, cfg: ModelConfig, cache: Dict[str, Any], *,
     positions = jnp.broadcast_to(
         start + jnp.arange(C, dtype=jnp.int32)[None], (B, C))
     valid = positions < lengths[:, None]
+    if cfg.family in ("ssm", "hybrid"):
+        return _recurrent_chunk(params, cfg, cache, tokens, positions,
+                                valid, interpret)
     if cached_lengths is not None:
         valid = valid & (positions >= cached_lengths[:, None])
     attn_fn = L.prefill_attention
@@ -775,8 +787,9 @@ def _masked_chunk(params, cfg: ModelConfig, cache, tokens, positions,
     ``positions % T``."""
     if cfg.family not in ("dense", "vlm", "audio", "moe", "gpt2"):
         raise NotImplementedError(
-            f"chunked prefill/verify is KV-cache-only; family "
-            f"{cfg.family!r} prefills at exact length via forward_seq")
+            f"the ring-masked chunk body is KV-cache-only; family "
+            f"{cfg.family!r} prefills through _recurrent_chunk and cannot "
+            f"verify drafts (a dense recurrent state has no ring rewind)")
     impl = cfg.kernel_impl
     B, C = tokens.shape
     T = cache["k"].shape[2]
@@ -862,6 +875,134 @@ def _masked_chunk(params, cfg: ModelConfig, cache, tokens, positions,
         new_cache["k_scale"], new_cache["v_scale"] = ksnew, vsnew
     h = L.norm(h, params["ln_f"], cfg.norm_type, cfg.norm_eps)
     return h, new_cache
+
+
+def _recurrent_chunk(params, cfg: ModelConfig, cache, tokens, positions,
+                     valid, interpret):
+    """Masked (B, C) prefill chunk for the recurrent families (ssm /
+    hybrid): the batched, length-bucketed counterpart of the KV families'
+    ``_masked_chunk``.
+
+    ``valid`` is a contiguous per-row prefix (positions < lengths).
+    Invalid columns run the math (static shapes) but are IDENTITY on the
+    recurrent state: ``mamba2_forward(valid=...)`` zeroes dt post-softplus
+    (decay exp(0)=1, zero input contribution) and gathers the conv tail at
+    each row's last valid column, so a row whose prompt ended mid-chunk --
+    or a group-padding dummy with length 0 -- carries exactly the state of
+    an exact-length run. Because every per-position op is row-independent
+    and the scheduler keeps the chunk grid at fixed absolute boundaries,
+    batched prefill is token-identical to sequential admission.
+
+    Hybrid additionally runs its shared attention block with the KV-ring
+    chunk semantics of ``_masked_chunk``: queries attend the pre-chunk
+    ring plus the chunk's own (ring-dtype-rounded) keys, then valid
+    columns land in the ring at ``position % T``."""
+    impl = cfg.kernel_impl
+    B, C = tokens.shape
+    h = _embed(params, cfg, tokens=tokens, positions=positions)
+    new_cache = dict(cache)
+
+    if cfg.family == "ssm":
+        lidx = jnp.arange(cfg.n_layers)
+
+        def body(carry, xs):
+            hh, call, sall = carry
+            lp, li = xs
+            cs = jax.lax.dynamic_index_in_dim(call, li, 0, keepdims=False)
+            ss = jax.lax.dynamic_index_in_dim(sall, li, 0, keepdims=False)
+            a_in = L.norm(hh, lp["ln1"], cfg.norm_type, cfg.norm_eps)
+            out, (cs2, ss2) = M2.mamba2_forward(
+                a_in, lp["ssm"], cfg, conv_state=cs, ssm_state=ss,
+                valid=valid, impl=impl, interpret=interpret)
+            call = jax.lax.dynamic_update_index_in_dim(
+                call, cs2.astype(call.dtype), li, 0)
+            sall = jax.lax.dynamic_update_index_in_dim(sall, ss2, li, 0)
+            return (hh + out, call, sall), None
+
+        (h, cnew, snew), _ = jax.lax.scan(
+            body, (h, cache["conv"], cache["state"]),
+            (params["layers"], lidx), unroll=_unroll(cfg))
+        new_cache["conv"], new_cache["state"] = cnew, snew
+
+    else:                                                    # hybrid
+        emb0 = h
+        T = cache["k"].shape[2]
+        assert C <= T, (C, T)
+        bidx = jnp.arange(B)[:, None]
+        slot_w = jnp.where(valid, positions % T, T)  # T = out of range: drop
+        old_pos = cache["pos"]
+        new_cache["pos"] = old_pos.at[bidx, slot_w].set(positions,
+                                                        mode="drop")
+        groups = _hybrid_groups(cfg)
+        conv_parts, state_parts = [], []
+        knew, vnew = cache["k"], cache["v"]
+        i0 = 0
+        app = 0
+        for g in groups:
+            lp = jax.tree.map(lambda a: a[i0:i0 + g], params["layers"])
+            cs = cache["conv"][i0:i0 + g]
+            ss = cache["state"][i0:i0 + g]
+            i0 += g
+
+            def body(hh, xs):
+                lpl, c1, s1 = xs
+                a_in = L.norm(hh, lpl["ln1"], cfg.norm_type, cfg.norm_eps)
+                out, (c2, s2) = M2.mamba2_forward(
+                    a_in, lpl["ssm"], cfg, conv_state=c1, ssm_state=s1,
+                    valid=valid, impl=impl, interpret=interpret)
+                return hh + out, (c2.astype(c1.dtype), s2)
+
+            h, (cn, sn) = jax.lax.scan(body, h, (lp, cs, ss),
+                                       unroll=_unroll(cfg))
+            conv_parts.append(cn)
+            state_parts.append(sn)
+            if g == cfg.hybrid_attn_every:
+                h, kc, vc = _shared_block_chunk(
+                    h, emb0, params["shared"], cfg, knew[app], vnew[app],
+                    old_pos, positions, valid, slot_w, impl, interpret)
+                knew = knew.at[app].set(kc)
+                vnew = vnew.at[app].set(vc)
+                app += 1
+        new_cache["conv"] = jnp.concatenate(conv_parts, 0)
+        new_cache["state"] = jnp.concatenate(state_parts, 0)
+        new_cache["k"], new_cache["v"] = knew, vnew
+
+    h = L.norm(h, params["ln_f"], cfg.norm_type, cfg.norm_eps)
+    return h, new_cache
+
+
+def _shared_block_chunk(h, emb0, sp, cfg, kc, vc, old_pos, positions, valid,
+                        slot_w, impl, interpret):
+    """Chunked-prefill counterpart of ``_shared_block_decode``: the
+    chunk's queries attend the pre-chunk ring plus the chunk's own masked
+    keys, then valid columns' K/V land in the ring at ``position % T``
+    (same dataflow as the KV families' chunk body)."""
+    B, C, d = h.shape
+    u = jnp.concatenate([h, emb0], axis=-1)                 # (B,C,2d)
+    a_in = L.rmsnorm(u, sp["ln1"]["w"], cfg.norm_eps)
+    Dh2 = 2 * d // cfg.n_heads
+    q = L.dense(a_in, sp["attn"]["wq"], impl=impl, interpret=interpret)
+    k = L.dense(a_in, sp["attn"]["wk"], impl=impl, interpret=interpret)
+    v = L.dense(a_in, sp["attn"]["wv"], impl=impl, interpret=interpret)
+    q = q.reshape(B, C, cfg.n_heads, Dh2)
+    k = k.reshape(B, C, cfg.n_kv_heads, Dh2)
+    v = v.reshape(B, C, cfg.n_kv_heads, Dh2)
+    cos, sin = L.rope_cos_sin(positions, Dh2, cfg.rope_theta)
+    q = L.apply_rope(q, cos, sin)
+    k = L.apply_rope(k, cos, sin)
+    k_chunk = k.astype(kc.dtype)        # ring-dtype rounding: results do
+    v_chunk = v.astype(vc.dtype)        # not depend on chunk boundaries
+    o = L.prefill_attention(q, kc, vc, old_pos, k_chunk, v_chunk,
+                            positions, valid, window=cfg.sliding_window)
+    bidx = jnp.arange(B)[:, None]
+    kc = kc.at[bidx, slot_w].set(k_chunk, mode="drop")
+    vc = vc.at[bidx, slot_w].set(v_chunk, mode="drop")
+    o = o.reshape(B, C, cfg.n_heads * Dh2)
+    u = u + L.dense(o, sp["attn"]["wo"], impl=impl, interpret=interpret)
+    m_in = L.rmsnorm(u, sp["ln2"]["w"], cfg.norm_eps)
+    u = u + L.swiglu_mlp(m_in, sp["mlp"], impl=impl, interpret=interpret)
+    out = L.dense(u, sp["proj_out"], impl=impl, interpret=interpret)
+    return h + out, kc, vc
 
 
 def _shared_block_decode(h, emb0, sp, cfg, kc, vc, slot_pos, position, slot,
@@ -1065,6 +1206,21 @@ def cache_ring_snapshot(cache: Dict[str, Any],
 # ring-payload entries a KV page carries (``pos`` is derived from the
 # page's start position at scatter time, never stored)
 _PAGE_KEYS = ("k", "v", "k_scale", "v_scale")
+# recurrent checkpoint payload: one pool row holds the WHOLE conv/SSM
+# state after the page's last token (not per-position data), so a warm
+# admission restores it and recomputes only the suffix
+_STATE_KEYS = ("conv", "state")
+
+
+def cache_page_keys(cfg: ModelConfig) -> Tuple[str, ...]:
+    """Pool entries a prefix-cache page carries for this family: ring
+    payloads for KV families, plus whole-state checkpoints for the
+    recurrent ones (hybrid pages both its shared-block KV ring and its
+    conv/SSM checkpoints)."""
+    keys = _PAGE_KEYS
+    if cfg.family in ("ssm", "hybrid"):
+        keys = keys + _STATE_KEYS
+    return keys
 
 
 def cache_page_pool(cfg: ModelConfig, n_pages: int, page: int,
@@ -1073,9 +1229,13 @@ def cache_page_pool(cfg: ModelConfig, n_pages: int, page: int,
     entry with the batch-slot axis reinterpreted as a page index and the
     ring axis shortened to ``page`` rows -- e.g. ``k``:
     (L, n_pages, page, KH, Dh). Same dtypes as the live ring (int8 + f32
-    scales under kv_cache_quant), so page copies are bit-for-bit."""
+    scales under kv_cache_quant), so page copies are bit-for-bit.
+    Recurrent families add per-page checkpoint entries ``conv``
+    (L, n_pages, W-1, C) / ``state`` (L, n_pages, H, P, N): the state
+    AFTER the page's last token, indexed by page like a one-row batch."""
     tmpl = init_cache(cfg, n_pages, page, dtype=dtype)
-    return {k: v for k, v in tmpl.items() if k in _PAGE_KEYS}
+    keys = cache_page_keys(cfg)
+    return {k: v for k, v in tmpl.items() if k in keys}
 
 
 def cache_page_bytes(cfg: ModelConfig, page: int) -> int:
@@ -1114,6 +1274,39 @@ def cache_scatter_pages(cache: Dict[str, Any], pages: Dict[str, Any],
                                        ring_axis=_ring_axis(k))
     new["pos"] = kops.page_scatter(cache["pos"], positions, rows, cols,
                                    ring_axis=1)
+    return new
+
+
+def cache_scatter_checkpoints(cache: Dict[str, Any], pool: Dict[str, Any],
+                              idx: jnp.ndarray,
+                              rows: jnp.ndarray) -> Dict[str, Any]:
+    """Restore recurrent checkpoints: copy pool page rows ``idx`` (n,)
+    into batch rows ``rows`` (n,) of a decode cache's conv/state entries
+    (whole-state row copies -- checkpoints are not positional pages). A
+    row >= B drops that element (bucketed-job padding); the corresponding
+    pad ``idx`` may be out of range (the gather clamps, the scatter
+    drops)."""
+    new = dict(cache)
+    for k in _STATE_KEYS:
+        if k in cache:
+            new[k] = cache[k].at[:, rows].set(
+                pool[k][:, idx].astype(cache[k].dtype), mode="drop")
+    return new
+
+
+def cache_insert_checkpoints(pool: Dict[str, Any], cache: Dict[str, Any],
+                             rows: jnp.ndarray,
+                             idx: jnp.ndarray) -> Dict[str, Any]:
+    """Record recurrent checkpoints: copy decode-cache batch rows ``rows``
+    (n,) conv/state into pool page rows ``idx`` (n,). The source is the
+    inter-chunk state the scheduler's chunk loop already materializes, so
+    a checkpoint is bit-for-bit the state a cold run carries at that page
+    boundary -- zero extra compute. ``idx`` >= n_pages drops (padding)."""
+    new = dict(pool)
+    for k in _STATE_KEYS:
+        if k in pool:
+            new[k] = pool[k].at[:, idx].set(
+                cache[k][:, rows].astype(pool[k].dtype), mode="drop")
     return new
 
 

@@ -20,8 +20,13 @@ bottleneck is not the MatMul but host round-trips and under-filled batches
   prefill compilations are O(#buckets), not O(#distinct prompt lengths).
   All resulting caches scatter into their slots in a single
   ``transformer.cache_set_slots`` call.  Recurrent families (ssm/hybrid)
-  keep exact-length single-request prefill, since trailing pads would
-  pollute the recurrent state.
+  ride the SAME batched path: padding columns are identity on the
+  conv/SSM state (``transformer._recurrent_chunk`` zeroes their dt and
+  gathers each row's conv tail at its last real column), and the chunk
+  grid is FIXED (``prefill_chunk`` clamped down to divide the ring) so
+  every prompt sees the same absolute chunk boundaries -- which makes
+  batched admission bit-identical to sequential admission and lets ONE
+  compiled (group, chunk) program serve every prompt length.
 * ``continuous batching``: when a sequence finishes (EOS, budget, or
   ``cancel``), its slot is freed and queued requests are admitted between
   chunks -- no recompilation.  Dead slots still run the math (static
@@ -67,6 +72,18 @@ bottleneck is not the MatMul but host round-trips and under-filled batches
   pages are inserted back, with LRU eviction of zero-ref (childless)
   pages under a byte budget. Greedy output is token-identical to running
   with the cache off, and admission still costs ONE host sync per group.
+  Recurrent families cache CHECKPOINTS instead of positional pages: the
+  page size is pinned to the prefill chunk, each pool page stores the
+  whole conv/SSM state after its last token (the inter-chunk carry the
+  chunk loop already materializes -- zero extra compute, bit-identical
+  to cold by construction), and a warm admission restores the checkpoint
+  at the group's shared full-page horizon and prefills only the suffix
+  (hybrid additionally scatters the ring pages below that horizon).
+* ``family adapters`` (models/state.py): which family supports which
+  feature lives in ONE capability table (``FamilyCaps``) checked by ONE
+  validation pass (``validate_serve_features``) at construction, and the
+  engine drives every cache operation through a ``DecodeState`` adapter
+  instead of ad-hoc ``cfg.family`` string checks.
 
 ``generate_reference`` keeps the pre-rewrite host-driven loop (one jitted
 step per token, same math) for parity tests and as readable documentation
@@ -89,6 +106,8 @@ from jax.sharding import Mesh
 from repro.configs.base import ModelConfig
 from repro.distributed import sharding as SH
 from repro.models import transformer as T
+from repro.models.state import (DecodeState, KV_FAMILIES,
+                                validate_serve_features)
 from repro.serving.drafters import make_drafter
 from repro.serving.prefix_cache import PrefixCache
 
@@ -98,9 +117,9 @@ if hasattr(jax, "shard_map"):
 else:
     from jax.experimental.shard_map import shard_map as _shard_map
 
-# families whose decode state is a KV ring -> batched chunked prefill;
-# everything else (recurrent state) prefills at exact length per request
-_KV_FAMILIES = ("dense", "vlm", "audio", "moe", "gpt2")
+# re-export: the KV-ring family set now lives in the capability table
+# (models/state.py); serving/disagg.py and tests import it from here
+_KV_FAMILIES = KV_FAMILIES
 
 
 @dataclasses.dataclass
@@ -123,12 +142,16 @@ class ServeConfig:
     draft_hist: int = 64                # "ngram": history ring length
     draft_verify: str = "scan"          # "scan" (bit-exact vs plain decode)
                                         # | "batched" (one masked forward)
-    # paged KV prefix cache (radix tree over token-ID prefixes; admission
-    # reuses the longest cached prefix and prefills only the suffix --
-    # greedy output stays token-identical to a cold prefill)
+    # prefix cache (radix tree over token-ID prefixes; admission reuses
+    # the longest cached prefix and prefills only the suffix -- greedy
+    # output stays token-identical to a cold prefill). KV families page
+    # the ring; recurrent families checkpoint conv/SSM state at prefill
+    # chunk boundaries (page size == prefill_chunk there).
     prefix_cache: bool = False
     prefix_page: int = 16               # positions per page (clamped to a
-                                        # divisor of the KV ring length)
+                                        # divisor of the KV ring length;
+                                        # recurrent families override it
+                                        # with the prefill chunk)
     prefix_bytes: int = 64 << 20        # device byte budget for the pool
     # tensor parallelism: run every jitted serving program via shard_map
     # over a ("model",) mesh of this many devices. Lane-only sharding
@@ -164,6 +187,13 @@ class ServeConfig:
                                         # ulps -- f32-ulp when the model
                                         # runs f32; the fast path on
                                         # collective-bound meshes)
+    tp_ep: bool = True                  # MoE expert parallelism under tp:
+                                        # shard the expert stacks over the
+                                        # model axis when n_experts
+                                        # divides tp (bit-identical to the
+                                        # replicated path; see
+                                        # distributed/sharding.py). False
+                                        # forces replicated experts.
 
 
 @dataclasses.dataclass
@@ -243,7 +273,24 @@ class Engine:
         # ring length must match init_cache's clamp or slot scatter would
         # write a cache_len-long update into a window-long ring
         self._T = T.attn_cache_len(cfg, serve_cfg.cache_len)
-        self._kv_family = cfg.family in _KV_FAMILIES
+        # ONE validation pass over the family x feature matrix replaces
+        # the old scattered per-feature "needs a KV-ring family" gates
+        self._caps = validate_serve_features(
+            cfg, tp=serve_cfg.tp, drafter=serve_cfg.drafter is not None,
+            prefix_cache=serve_cfg.prefix_cache)
+        self._state = DecodeState(cfg)
+        self._kv_family = self._caps.kv_ring
+        # prefill chunk length. Recurrent families pin a FIXED chunk grid
+        # (clamped down to a divisor of the ring): the SSD scan's numerics
+        # depend on chunk-boundary placement, so a shared absolute grid is
+        # what makes batched prefill bit-identical to sequential admission
+        # and warm (checkpoint) admission bit-identical to cold -- and it
+        # means ONE compiled program serves every prompt length
+        chunk = max(1, min(serve_cfg.prefill_chunk, self._T))
+        if self._caps.recurrent:
+            while self._T % chunk:
+                chunk -= 1
+        self._chunk = chunk
         # -- tensor parallelism: a ("model",) mesh every jitted serving
         # program runs over via shard_map. Weights lane-shard (K whole
         # per shard -- packed super-blocks never straddle devices), the
@@ -254,11 +301,6 @@ class Engine:
         self._plan = SH.make_serve_tp_plan(cfg, 1,
                                            matmul=serve_cfg.tp_matmul)
         if serve_cfg.tp > 1:
-            if not self._kv_family:
-                raise ValueError(
-                    f"tensor-parallel serving needs a KV-ring family "
-                    f"(got {cfg.family!r}); recurrent state sharding is "
-                    "a training-side concern (distributed/sharding.py)")
             devs = jax.devices()
             if len(devs) < serve_cfg.tp:
                 raise ValueError(
@@ -268,7 +310,8 @@ class Engine:
                     f"{serve_cfg.tp} before importing jax")
             self._plan = SH.make_serve_tp_plan(cfg, serve_cfg.tp,
                                                matmul=serve_cfg.tp_matmul,
-                                               params=params)
+                                               params=params,
+                                               ep=serve_cfg.tp_ep)
             self._mesh = Mesh(np.asarray(devs[:serve_cfg.tp]),
                               (self._plan.axis,))
             self._pspecs = SH.serve_param_specs(params, self._plan)
@@ -279,11 +322,6 @@ class Engine:
             self._cspecs = SH.serve_cache_specs(ctmpl, self._plan)
         self._drafter = None
         if serve_cfg.drafter is not None:
-            if not self._kv_family:
-                raise ValueError(
-                    f"speculative decoding needs a KV-ring family (got "
-                    f"{cfg.family!r}): a dense recurrent state cannot be "
-                    "rolled back when drafts are rejected")
             if serve_cfg.draft_k < 1:
                 raise ValueError("draft_k must be >= 1")
             if serve_cfg.draft_k + 1 > serve_cfg.decode_chunk:
@@ -318,36 +356,41 @@ class Engine:
         self._prefix: Optional[PrefixCache] = None
         self._page: Optional[int] = None
         if serve_cfg.prefix_cache:
-            if not self._kv_family:
-                raise ValueError(
-                    f"prefix caching needs a KV-ring family (got "
-                    f"{cfg.family!r}): recurrent state is not positional "
-                    "and cannot be paged")
             if serve_cfg.prefix_page < 1:
                 raise ValueError("prefix_page must be >= 1")
-            # pages must tile the ring exactly so a page never wraps
-            # internally (position p % T stays page-contiguous)
-            page = max(1, min(serve_cfg.prefix_page, self._T))
-            while self._T % page:
-                page -= 1
+            if self._caps.prefix_mode == "checkpoints":
+                # recurrent checkpoint pages: one pool row holds the
+                # WHOLE conv/SSM state after the page's last token.
+                # Pinning the page to the prefill chunk makes every
+                # checkpoint exactly the inter-chunk carry the chunk
+                # loop materializes anyway -- zero extra compute, and
+                # warm restore is bit-identical to cold by construction
+                page = self._chunk
+            else:
+                # pages must tile the ring exactly so a page never wraps
+                # internally (position p % T stays page-contiguous)
+                page = max(1, min(serve_cfg.prefix_page, self._T))
+                while self._T % page:
+                    page -= 1
             self._page = page
             cap = max(2, int(serve_cfg.prefix_bytes)
-                      // T.cache_page_bytes(cfg, page))
+                      // self._state.page_bytes(page))
             self._prefix = PrefixCache(page, cap)
             self._pool = None           # device pool, allocated on 1st use
             self._prefix_scatter = jax.jit(self._prefix_scatter_impl,
                                            donate_argnums=(0,))
             self._prefix_insert = jax.jit(self._prefix_insert_impl,
                                           donate_argnums=(0,))
+            if self._caps.prefix_mode == "checkpoints":
+                self._state_scatter = jax.jit(self._state_scatter_impl,
+                                              donate_argnums=(0,))
+                self._state_insert = jax.jit(self._state_insert_impl,
+                                             donate_argnums=(0,))
             # cross-engine page hand-off (export_kv_pages/import_kv_pages):
             # the same pool-copy programs, pointed at host memory
             self._pool_export = jax.jit(self._pool_export_impl)
             self._pool_import = jax.jit(self._pool_import_impl,
                                         donate_argnums=(0,))
-        self._prefill = jax.jit(self._prefill_impl)
-        # caches are donated so XLA aliases the ring buffers call-to-call
-        self._admit_cache = jax.jit(self._admit_cache_impl,
-                                    donate_argnums=(0,))
         # (the group cache is NOT donated here: its (L,G,T,..) buffers can
         # never alias the (L,B,T,..) output, they'd just warn)
         self._admit_caches = jax.jit(self._admit_caches_impl,
@@ -398,7 +441,7 @@ class Engine:
         """Fresh decode cache for ``B`` slots, placed with the TP cache
         sharding (KV payloads over kv_heads) when a mesh is configured so
         donation aliases shard-to-shard instead of warning."""
-        cache = T.init_cache(self.cfg, B, self._T)
+        cache = self._state.init(B, self._T)
         if self._mesh is not None:
             cache = jax.device_put(cache,
                                    SH.named(self._cspecs, self._mesh))
@@ -412,43 +455,41 @@ class Engine:
                 key, logits / self.scfg.temperature).astype(jnp.int32)
         return jnp.argmax(logits, axis=-1).astype(jnp.int32)
 
-    def _prefill_impl(self, params, tokens, length, key):
-        """Exact-length single-request prefill (recurrent families):
-        tokens (1,P), length (). Returns (first token (), slot cache)."""
-        P = tokens.shape[1]
-        logits, _, caches = T.forward_seq(params, self.cfg, tokens=tokens,
-                                          want_cache=True)
-        last = jax.lax.dynamic_index_in_dim(logits[0], length - 1, 0,
-                                            keepdims=False)
-        first = self._sample(last[None], key)[0]
-        slot_cache = T.cache_from_prefill(self.cfg, caches, P,
-                                          cache_len=self._T)
-        if "pos" in slot_cache:
-            # pad entries must never win decode attention
-            slot_cache["pos"] = jnp.where(slot_cache["pos"] < length,
-                                          slot_cache["pos"], -1)
-        return first, slot_cache
-
-    def _admit_cache_impl(self, cache, slot_cache, index):
-        return T.cache_set_slot(cache, slot_cache, index)
-
     def _admit_caches_impl(self, cache, group_cache, indices):
-        return T.cache_set_slots(cache, group_cache, indices)
+        return self._state.set_slots(cache, group_cache, indices)
 
     def _prefix_scatter_impl(self, gcache, pool, idx, rows, cols,
                              positions):
         """Copy pool pages ``idx`` (n,) into group-cache rows ``rows`` at
         ring slots ``cols`` (n, page), stamping ``positions``. Entries
-        with cols >= T drop (batch padding / partial-page tails)."""
-        pages = {k: v[:, idx] for k, v in pool.items()}
-        return T.cache_scatter_pages(gcache, pages, rows, cols, positions)
+        with cols >= T drop (batch padding / partial-page tails). Only
+        ring-payload pool entries scatter here; a recurrent pool's
+        conv/state checkpoints go through _state_scatter_impl instead
+        (they are whole-state rows, not positional pages)."""
+        keys = set(T._PAGE_KEYS)
+        pages = {k: v[:, idx] for k, v in pool.items() if k in keys}
+        return self._state.scatter_pages(gcache, pages, rows, cols,
+                                         positions)
 
     def _prefix_insert_impl(self, pool, gcache, idx, rows, cols):
         """Copy freshly prefilled pages out of the group cache into pool
-        rows ``idx`` (n,); idx >= capacity drops (batch padding)."""
-        pages = T.cache_gather_pages(gcache, rows, cols)
-        return {k: pool[k].at[:, idx].set(pages[k], mode="drop")
+        rows ``idx`` (n,); idx >= capacity drops (batch padding). Pool
+        entries the ring gather does not produce (a recurrent pool's
+        conv/state checkpoints) pass through untouched."""
+        pages = self._state.gather_pages(gcache, rows, cols)
+        return {k: (pool[k].at[:, idx].set(pages[k], mode="drop")
+                    if k in pages else pool[k])
                 for k in pool}
+
+    def _state_scatter_impl(self, gcache, pool, idx, rows):
+        """Restore recurrent checkpoints: pool page rows ``idx`` (n,)
+        into group-cache batch rows ``rows`` (n,); rows >= G drop."""
+        return self._state.scatter_checkpoints(gcache, pool, idx, rows)
+
+    def _state_insert_impl(self, pool, gcache, rows, idx):
+        """Record recurrent checkpoints: group-cache batch rows ``rows``
+        (n,) into pool page rows ``idx`` (n,); idx >= capacity drops."""
+        return self._state.insert_checkpoints(pool, gcache, rows, idx)
 
     def _pool_export_impl(self, pool, idx):
         """Gather pool pages ``idx`` (n,) for a cross-engine hand-off --
@@ -664,7 +705,7 @@ class Engine:
             positions = pos_[:, None] + cols
             valid = act[:, None] & ((cols == 0) | spec_eff[:, None])
             slots = positions % Tring
-            snap = T.cache_ring_snapshot(cache_, slots)
+            snap = self._state.ring_snapshot(cache_, slots)
             logits, cache_ = self._verify_impl(params, cache_, x,
                                                positions, valid)
             acc, fin = self._accept_impl(logits, drafts, spec_eff,
@@ -684,7 +725,7 @@ class Engine:
             out_ = out_.at[bidx, osel].set(emit, mode="drop")
             # un-write rejected draft entries (t0 + acc accepted ones stay)
             keep = jnp.where(act, 1 + acc, 0)
-            cache_ = T.cache_ring_rewind(cache_, snap, slots, keep)
+            cache_ = self._state.ring_rewind(cache_, snap, slots, keep)
             n_gen_ = n_gen_ + e
             pos_ = pos_ + e
             last = jnp.take_along_axis(
@@ -782,7 +823,7 @@ class Engine:
             speculate = self._drafter is not None
         elif speculate and self._drafter is None:
             raise ValueError("speculate=True needs ServeConfig.drafter")
-        if (self.cfg.family != "ssm" and not self.cfg.sliding_window
+        if (self._caps.ring_bounded_context and not self.cfg.sliding_window
                 and len(prompt) + budget > self._T):
             # full-attention archs must not wrap the KV ring (that would
             # silently truncate context); windowed archs wrap by design
@@ -909,14 +950,20 @@ class Engine:
         P is the group max rounded up to ``prefill_bucket`` (one compiled
         shape per bucket) and, past ``prefill_chunk``, to a multiple of the
         chunk length (ONE compiled shape covers every longer prompt).
-        Group size pads to a power of two capped at ``prefill_batch``."""
+        Group size pads to a power of two capped at ``prefill_batch``.
+
+        Recurrent families never shrink the chunk to the bucket: their
+        chunk grid is FIXED (self._chunk, a divisor of the ring) so every
+        prompt -- batched or sequential, warm or cold -- sees the same
+        absolute chunk boundaries, which the SSD scan's numerics (and the
+        checkpoint page identity) depend on."""
         b = max(self.scfg.prefill_bucket, 1)
         maxb = max(-(-n // b) * b for n in lens)
-        C = max(1, min(self.scfg.prefill_chunk, self._T))
-        if maxb <= C:
-            P = C = maxb
-        else:
+        C = self._chunk
+        if self._caps.recurrent or maxb > C:
             P = -(-maxb // C) * C
+        else:
+            P = C = maxb
         Gp = 1 << max(len(lens) - 1, 0).bit_length()
         return P, C, min(max(Gp, 1), max(self.scfg.prefill_batch, 1))
 
@@ -999,10 +1046,125 @@ class Engine:
                                          jnp.asarray(rows),
                                          jnp.asarray(cols))
 
+    # -- prefix cache, recurrent families: checkpoint pages ------------------
+    def _match_checkpoints(self, reqs: List[Request]):
+        """Checkpoint matching (recurrent families): only FULL pages count
+        (a checkpoint is the state after a whole page of tokens), and the
+        group shares ONE reuse horizon s0 = min over rows' full-page
+        matches -- the chunk grid is group-wide, so a single cold row pins
+        s0 to 0 and the whole group runs cold (shared-prefix traffic
+        tends to arrive in groups, so the common case still reuses).
+        Returns (s0, per-row full-page match lengths, hybrid ring-page
+        scatter jobs covering [0, s0), checkpoint restore jobs
+        (row, pool_idx) for each row's page ending at s0)."""
+        page = self._page
+        raw = [self._prefix.match(r.prompt) for r in reqs]
+        fulls = [(m // page) * page for m, _ in raw]
+        s0 = min(fulls)
+        if s0 == 0:
+            return 0, fulls, [], []
+        pjobs, ckpt_jobs = [], []
+        # of the recurrent families only hybrid carries an attention ring
+        # (the capability that also makes its context ring-bounded)
+        has_ring = self._caps.ring_bounded_context
+        for i, (m, pages) in enumerate(raw):
+            self.stats["prefix_hits"] += 1
+            self.stats["prefix_tokens_reused"] += s0
+            for pidx, p0, take in pages:
+                if take != page or p0 + page > s0:
+                    continue            # partial page, or past the horizon
+                if has_ring:
+                    pjobs.append((i, pidx, p0, take))
+                if p0 + page == s0:
+                    ckpt_jobs.append((i, pidx))
+        return s0, fulls, pjobs, ckpt_jobs
+
+    def _scatter_checkpoints(self, gcache, jobs, Gp: int):
+        """One batched device copy restoring each warm row's conv/SSM
+        state from the checkpoint of the page ending at the group horizon
+        (bucketed shapes; row pads point at Gp = drop)."""
+        self._ensure_pool()
+        n = 1 << max(len(jobs) - 1, 0).bit_length()
+        idx = np.zeros(n, np.int32)
+        rows = np.full(n, Gp, np.int32)
+        for j, (row, pidx) in enumerate(jobs):
+            idx[j], rows[j] = pidx, row
+        return self._state_scatter(gcache, self._pool, jnp.asarray(idx),
+                                   jnp.asarray(rows))
+
+    def _plan_checkpoint_inserts(self, reqs, lens, fulls, s0: int):
+        """Record the group's prompt pages in the radix tree BEFORE the
+        chunk loop runs. A recurrent page's payload is an inter-chunk
+        state snapshot that exists only transiently (the next chunk call
+        donates the group cache), so each new page's checkpoint copy must
+        be dispatched right after the chunk that produces it. Returns
+        ({chunk index -> [(row, pool_idx)]}, hybrid ring-payload gather
+        jobs (row, pool_idx, start_pos) for the same new pages)."""
+        page = self._page
+        ev0 = self._prefix.evictions
+        dr0 = self._prefix.insert_drops
+        protect: set = set()
+        # protect pass: walk every row's matched chain into the shared
+        # protect set first, so an earlier row's insert can never evict a
+        # page a group-mate matched -- a re-inserted pre-horizon page
+        # would have no checkpoint source in this run's chunk grid
+        for i, r in enumerate(reqs):
+            if fulls[i]:
+                self._prefix.insert(r.prompt[:fulls[i]], protect)
+        by_chunk: Dict[int, list] = {}
+        kv_jobs: List = []
+        has_ring = self._caps.ring_bounded_context
+        for i, r in enumerate(reqs):
+            if has_ring and lens[i] > self._T:
+                continue    # hybrid: ring wrap clobbered the early pages
+            for pidx, p0 in self._prefix.insert(r.prompt, protect):
+                j = (p0 - s0) // page   # grid chunk whose output is the
+                by_chunk.setdefault(j, []).append((i, pidx))  # checkpoint
+                if has_ring:
+                    kv_jobs.append((i, pidx, p0))
+        self.stats["prefix_evictions"] += self._prefix.evictions - ev0
+        self.stats["prefix_insert_drops"] += (self._prefix.insert_drops
+                                              - dr0)
+        return by_chunk, kv_jobs
+
+    def _insert_checkpoints(self, gcache, jobs) -> None:
+        """Copy inter-chunk conv/SSM state into pool checkpoint rows.
+        Async dispatch that MUST precede the next chunk call (which
+        donates the group cache the snapshot is read from)."""
+        self._ensure_pool()
+        n = 1 << max(len(jobs) - 1, 0).bit_length()
+        idx = np.full(n, self._prefix.capacity, np.int32)   # cap = drop
+        rows = np.zeros(n, np.int32)
+        for j, (row, pidx) in enumerate(jobs):
+            idx[j], rows[j] = pidx, row
+        self._pool = self._state_insert(self._pool, gcache,
+                                        jnp.asarray(rows),
+                                        jnp.asarray(idx))
+
+    def _insert_ring_pages(self, gcache, jobs) -> None:
+        """Copy the ring payload of freshly recorded hybrid pages out of
+        the prefilled group cache. The radix insert already ran in
+        _plan_checkpoint_inserts -- this is only the KV half of each new
+        page (its checkpoint half landed chunk by chunk)."""
+        self._ensure_pool()
+        page = self._page
+        n = 1 << max(len(jobs) - 1, 0).bit_length()
+        idx = np.full(n, self._prefix.capacity, np.int32)   # cap = drop
+        rows = np.zeros(n, np.int32)
+        cols = np.zeros((n, page), np.int32)
+        ar = np.arange(page)
+        for j, (row, pidx, p0) in enumerate(jobs):
+            idx[j], rows[j] = pidx, row
+            cols[j] = p0 + ar           # full in-ring pages never wrap
+        self._pool = self._prefix_insert(self._pool, gcache,
+                                         jnp.asarray(idx),
+                                         jnp.asarray(rows),
+                                         jnp.asarray(cols))
+
     def _ensure_pool(self) -> None:
         if self._pool is None:
-            self._pool = T.cache_page_pool(self.cfg, self._prefix.capacity,
-                                           self._page)
+            self._pool = self._state.page_pool(self._prefix.capacity,
+                                               self._page)
             if self._mesh is not None:
                 # page payloads co-shard with the ring (kv_heads axis) so
                 # page gather/scatter stays collective-free under GSPMD
@@ -1100,18 +1262,38 @@ class Engine:
         compute (``cached_lengths``), and the suffix length (not the full
         prompt) picks the bucketed chunk shape -- so shared-prefix groups
         skip most of their MatMul work while still emitting bit-identical
-        KV rows and logits."""
+        KV rows and logits.
+
+        Recurrent families run the same batched path on their FIXED chunk
+        grid: warm rows restore the conv/SSM checkpoint at the group's
+        shared full-page horizon s0 (hybrid also scatters the ring pages
+        below it), the chunk loop starts at s0, and freshly recorded
+        pages capture their checkpoints chunk by chunk (the inter-chunk
+        carry, copied before the next chunk donates it)."""
         t0 = time.perf_counter()
         for r in reqs:
             if r.submit_t is not None:
                 r.queue_wait_s = t0 - r.submit_t
         G = len(reqs)
         lens = [len(r.prompt) for r in reqs]
-        if self._prefix is not None:
+        pjobs: List = []
+        ckpt_jobs: List = []
+        ins_by_chunk: Dict[int, List] = {}
+        kv_ins_jobs: List = []
+        if self._prefix is None:
+            matches, s0 = [0] * G, 0
+        elif self._kv_family:
             matches, pjobs = self._match_prefixes(reqs)
             s0 = min(matches)
         else:
-            matches, pjobs, s0 = [0] * G, [], 0
+            # recurrent: whole-state checkpoints, full pages only, one
+            # shared horizon; the per-column cached mask stays 0 (the
+            # restored checkpoint replaces masking -- the chunk GRID
+            # starts at s0 instead)
+            s0, fulls, pjobs, ckpt_jobs = self._match_checkpoints(reqs)
+            matches = [0] * G
+            ins_by_chunk, kv_ins_jobs = self._plan_checkpoint_inserts(
+                reqs, lens, fulls, s0)
         P, C, Gp = self._group_shape([n - s0 for n in lens])
         toks = np.zeros((Gp, s0 + P), np.int32)
         lengths = np.zeros(Gp, np.int32)            # dummy rows: length 0
@@ -1131,6 +1313,8 @@ class Engine:
         if self._cache is None:
             self._cache = self._new_cache(self._B)
         gcache = self._new_cache(Gp)
+        if ckpt_jobs:
+            gcache = self._scatter_checkpoints(gcache, ckpt_jobs, Gp)
         if pjobs:
             gcache = self._scatter_prefix_pages(gcache, pjobs)
         last_logits = jnp.zeros((Gp, self.cfg.vocab_size), jnp.float32)
@@ -1142,6 +1326,11 @@ class Engine:
                 self.params, gcache, jnp.asarray(toks[:, start:start + C]),
                 jnp.asarray(start, jnp.int32), lengths_d, last_logits,
                 cached_d)
+            if j in ins_by_chunk:
+                # checkpoint copies ride the device queue here, BEFORE
+                # the next chunk call donates (and so invalidates) the
+                # group-cache buffers they read from
+                self._insert_checkpoints(gcache, ins_by_chunk[j])
         first_d = self._sample_first(last_logits, jnp.stack(subs))
         budgets = np.zeros(Gp, np.int32)            # dummies: 0 -> unbound
         budgets[:G] = [r.max_new_tokens for r in reqs]
@@ -1154,9 +1343,13 @@ class Engine:
                                  jnp.asarray(free_arr))
         self._cache = self._admit_caches(self._cache, gcache, idx_d)
         if self._prefix is not None:
-            # record this group's prompt pages (async dispatch, rides the
-            # same device queue -- admission stays one host sync)
-            self._insert_prefix_pages(gcache, reqs, lens)
+            if self._kv_family:
+                # record this group's prompt pages (async dispatch, rides
+                # the same device queue -- admission stays one host sync)
+                self._insert_prefix_pages(gcache, reqs, lens)
+            elif kv_ins_jobs:
+                # hybrid: ring payload of the pages recorded pre-loop
+                self._insert_ring_pages(gcache, kv_ins_jobs)
         firsts = np.asarray(jax.device_get(first_d))   # 1 sync / GROUP
         # host-side mirror of _bind_slots_impl for the bookkeeping below
         free_iter = iter(slots)
@@ -1183,28 +1376,6 @@ class Engine:
             else:
                 self._start_slot(bound[i], req, int(firsts[i]), lens[i])
         self._admitting = []
-
-    # -- admission: exact-length single-request prefill (recurrent) ----------
-    def _admit_request(self, slot: int, req: Request) -> None:
-        n = len(req.prompt)
-        toks = np.asarray(req.prompt, np.int32)[None]
-        t0 = time.perf_counter()
-        if req.submit_t is not None:
-            req.queue_wait_s = t0 - req.submit_t
-        self._key, sub = jax.random.split(self._key)
-        first, slot_cache = self._prefill(self.params, jnp.asarray(toks),
-                                          jnp.asarray(n, jnp.int32), sub)
-        if self._cache is None:
-            self._cache = self._new_cache(self._B)
-        self._cache = self._admit_cache(self._cache, slot_cache,
-                                        jnp.asarray(slot, jnp.int32))
-        first_tok = int(first)                    # 1 host sync / admission
-        self.stats["host_syncs"] += 1
-        self.stats["prefill_groups"] += 1
-        self.stats["admissions"] += 1
-        self.stats["prefill_tokens"] += n
-        self.stats["prefill_s"] += time.perf_counter() - t0
-        self._start_slot(slot, req, first_tok, n)
 
     @staticmethod
     def _admit_key(req: Request):
@@ -1257,12 +1428,9 @@ class Engine:
                     return
                 free = [i for i in range(self._B)
                         if self._slots[i] is None]
-            if self._kv_family:
-                n = min(len(free), max(self.scfg.prefill_batch, 1),
-                        len(self._queue))
-                self._admit_group(free[:n], self._pop_pending(n))
-            else:
-                self._admit_request(free[0], self._pop_pending(1)[0])
+            n = min(len(free), max(self.scfg.prefill_batch, 1),
+                    len(self._queue))
+            self._admit_group(free[:n], self._pop_pending(n))
 
     def _run_chunk(self) -> None:
         t0 = time.perf_counter()

@@ -175,10 +175,57 @@ def test_disagg_absent_rows_skip():
     assert gate.check_disagg(dict(runs=[_row()])) == 0
 
 
+# ---------------------------------------------------------------------------
+# check_recurrent_prefill: batched fixed-grid prefill must beat the
+# same-run exact-length oracle; checkpoint prefix rows must hit
+# ---------------------------------------------------------------------------
+
+def _rec(mode="batched", family="ssm", pre=500.0, exact=50.0, hit=1.0):
+    r = _row(f"fp32_{family}_{mode}", 8, family=family, prefill_mode=mode,
+             prefill_tok_per_s=pre)
+    if mode == "batched":
+        r["exact_prefill_tok_per_s"] = exact
+    else:
+        r["prefix_hit_rate"] = hit
+    return r
+
+
+def test_recurrent_batched_beats_exact_passes():
+    assert gate.check_recurrent_prefill(dict(runs=[
+        _rec(), _rec(family="hybrid"), _rec("prefix_on")])) == 0
+
+
+def test_recurrent_batched_slower_than_exact_fails(capsys):
+    assert gate.check_recurrent_prefill(dict(runs=[
+        _rec(pre=40.0, exact=50.0)])) == 1
+    assert "exact-length" in capsys.readouterr().out
+
+
+def test_recurrent_missing_oracle_fails_not_crashes(capsys):
+    assert gate.check_recurrent_prefill(dict(runs=[
+        _rec(exact=None)])) == 1
+    assert "missing" in capsys.readouterr().out
+
+
+def test_recurrent_cold_checkpoint_cache_fails():
+    assert gate.check_recurrent_prefill(dict(runs=[
+        _rec("prefix_on", hit=0.0)])) == 1
+    assert gate.check_recurrent_prefill(dict(runs=[
+        _rec("prefix_on", hit=None)])) == 1
+
+
+def test_recurrent_absent_rows_skip():
+    """KV-family rows (no ``family``/``prefill_mode`` fields) never
+    trigger the recurrent gate."""
+    assert gate.check_recurrent_prefill(dict(runs=[_row(), _mono()])) == 0
+
+
 def test_compare_runs_structural_gates():
-    """compare() folds both same-run structural gates into its exit
+    """compare() folds every same-run structural gate into its exit
     code even when every cross-run pair is within tolerance."""
     rows = [_row(), _mono(), _dis(migrated=0)]
+    assert _compare(rows, [_row()]) == 1
+    rows = [_row(), _rec(pre=40.0, exact=50.0)]
     assert _compare(rows, [_row()]) == 1
 
 

@@ -348,8 +348,10 @@ def test_int8_kv_cache_chunked_prefill():
 
 
 def test_scheduler_recurrent_family():
-    """SSM family: exact-length prefill (no pad pollution of the recurrent
-    state); batched continuous run matches single-request runs."""
+    """SSM family rides the batched masked-chunk prefill path (trailing
+    pads are dt-masked so they never pollute the recurrent state, and the
+    chunk grid is fixed so chunk boundaries land identically for every
+    batch shape); batched continuous run matches single-request runs."""
     cfg = get_arch("mamba2-2.7b", reduced=True)
     params = T.init_params(cfg, jax.random.PRNGKey(0))
     scfg = dict(max_new_tokens=4, cache_len=64, decode_chunk=4, max_slots=2)

@@ -1,0 +1,177 @@
+"""Family-adapter capability table and the one validation pass.
+
+The engine <-> model feature contract used to live in four scattered
+``raise ValueError(... needs a KV-ring family ...)`` sites plus ad-hoc
+``cfg.family`` string checks. ``models/state.py`` makes it ONE table
+(``CAPS``) consulted by ONE pass (``validate_serve_features``) at
+``ServeConfig`` validation time. This suite pins:
+
+* every family x feature cell of the matrix -- supported combos
+  construct, unsupported ones raise the single consistent error shape
+  ``"<feature> needs a KV-ring family (got <family>); <why>"``;
+* the ``DecodeState`` adapter's capability asserts (ring snapshot on an
+  SSM cache must fail loudly, not corrupt state);
+* the recurrent batched-prefill compile-count regression: ONE jitted
+  ``(B, C)`` chunk program serves every prompt length (the old
+  exact-length ``_prefill_impl`` compiled once per length).
+"""
+import jax
+import pytest
+
+from repro.configs.base import get_arch
+from repro.models import transformer as T
+from repro.models.state import (CAPS, KV_FAMILIES, DecodeState,
+                                family_caps, validate_serve_features)
+from repro.serving.engine import Engine, ServeConfig
+
+# one representative arch per family, so matrix cells run on real configs
+ARCH_FOR = {
+    "dense": "llama3.2-1b",
+    "gpt2": "gpt2-paper",
+    "vlm": "qwen2-vl-72b",
+    "audio": "musicgen-large",
+    "moe": "granite-moe-3b-a800m",
+    "ssm": "mamba2-2.7b",
+    "hybrid": "zamba2-1.2b",
+}
+
+FEATURE_KW = {
+    "tensor-parallel serving": dict(tp=2),
+    "speculative decoding": dict(drafter=True),
+    "prefix caching": dict(prefix_cache=True),
+}
+
+
+# ---------------------------------------------------------------------------
+# the capability table itself
+# ---------------------------------------------------------------------------
+
+def test_caps_table_covers_every_registered_family():
+    registered = {get_arch(a, reduced=True).family for a in ARCH_FOR.values()}
+    assert registered == set(CAPS)
+    assert set(ARCH_FOR) == set(CAPS)
+
+
+def test_kv_families_derived_from_table():
+    assert set(KV_FAMILIES) == {f for f, c in CAPS.items() if c.kv_ring}
+    assert "ssm" not in KV_FAMILIES and "hybrid" not in KV_FAMILIES
+
+
+def test_caps_rows_are_internally_consistent():
+    for f, c in CAPS.items():
+        assert c.family == f
+        assert c.kv_ring != c.recurrent          # exactly one cache kind
+        if c.speculative:
+            assert c.kv_ring                     # rewind needs a ring
+        if c.prefix_cache:
+            assert c.prefix_mode in ("pages", "checkpoints")
+            assert (c.prefix_mode == "pages") == c.kv_ring
+        else:
+            assert c.prefix_mode == "none"
+        if c.expert_parallel:
+            assert f == "moe"
+    # ssm is the only unbounded-context family (no attention ring at all)
+    assert not CAPS["ssm"].ring_bounded_context
+    assert CAPS["hybrid"].ring_bounded_context
+
+
+def test_unknown_family_rejected_at_config_time():
+    """A bogus family dies in ModelConfig.__post_init__ (config layer),
+    and family_caps guards independently for duck-typed configs."""
+    with pytest.raises(ValueError, match="unknown model family"):
+        get_arch("mamba2-2.7b", reduced=True).replace(family="rwkv")
+    import types
+    with pytest.raises(ValueError, match="unknown model family"):
+        family_caps(types.SimpleNamespace(family="rwkv"))
+
+
+# ---------------------------------------------------------------------------
+# the full family x feature matrix, one consistent error shape
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("family", sorted(CAPS))
+@pytest.mark.parametrize("feature", sorted(FEATURE_KW))
+def test_matrix_cell(family, feature):
+    """Every cell: supported -> caps row returned; unsupported -> the one
+    canonical error shape, naming both the feature and the family."""
+    cfg = get_arch(ARCH_FOR[family], reduced=True)
+    caps = CAPS[family]
+    attr = {"tensor-parallel serving": "tensor_parallel",
+            "speculative decoding": "speculative",
+            "prefix caching": "prefix_cache"}[feature]
+    if getattr(caps, attr):
+        assert validate_serve_features(cfg, **FEATURE_KW[feature]) is caps
+    else:
+        with pytest.raises(ValueError) as e:
+            validate_serve_features(cfg, **FEATURE_KW[feature])
+        msg = str(e.value)
+        assert f"{feature} needs a KV-ring family (got {family!r})" in msg
+
+
+def test_no_features_requested_always_passes():
+    for family, arch in ARCH_FOR.items():
+        cfg = get_arch(arch, reduced=True)
+        assert validate_serve_features(cfg) is CAPS[family]
+
+
+def test_engine_validates_at_construction_time():
+    """The gates fire from the Engine constructor -- before any memory is
+    allocated or jit traced -- with the same canonical message."""
+    cfg = get_arch("mamba2-2.7b", reduced=True)
+    params = T.init_params(cfg, jax.random.PRNGKey(0))
+    with pytest.raises(ValueError,
+                       match="speculative decoding needs a KV-ring family"):
+        Engine(cfg, params, ServeConfig(drafter="ngram"))
+
+
+# ---------------------------------------------------------------------------
+# DecodeState adapter guards
+# ---------------------------------------------------------------------------
+
+def test_decode_state_asserts_on_missing_capability():
+    ssm = DecodeState(get_arch("mamba2-2.7b", reduced=True))
+    with pytest.raises(AssertionError):
+        ssm.ring_snapshot({}, None)              # no ring to snapshot
+    with pytest.raises(AssertionError):
+        ssm.ring_rewind({}, {}, None, None)
+    dense = DecodeState(get_arch("tinyllama-1.1b", reduced=True))
+    with pytest.raises(AssertionError):
+        dense.scatter_checkpoints({}, {}, None, None)  # pages, not ckpts
+    with pytest.raises(AssertionError):
+        dense.insert_checkpoints({}, {}, None, None)
+
+
+def test_decode_state_page_keys_split_by_family():
+    """Pool-key vocabulary: KV families page ring payloads only; the
+    recurrent families additionally carry conv/SSM state checkpoints."""
+    dense = DecodeState(get_arch("tinyllama-1.1b", reduced=True))
+    ssm = DecodeState(get_arch("mamba2-2.7b", reduced=True))
+    hyb = DecodeState(get_arch("zamba2-1.2b", reduced=True))
+    ring = {"k", "v", "k_scale", "v_scale"}
+    assert set(dense.page_keys()) == ring
+    assert set(ssm.page_keys()) == ring | {"conv", "state"}
+    assert set(hyb.page_keys()) == ring | {"conv", "state"}
+
+
+# ---------------------------------------------------------------------------
+# recurrent batched prefill: ONE compiled chunk program for all lengths
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("arch", ["mamba2-2.7b", "zamba2-1.2b"])
+def test_recurrent_prefill_compiles_once_across_lengths(arch):
+    """Regression: the recurrent exact-length ``_prefill_impl`` jitted a
+    fresh program for EVERY distinct prompt length. Recurrent families
+    now ride the same bucketed masked-chunk path as KV families: prompt
+    lengths 3..21 against prefill_chunk=8 must all hit one compiled
+    ``_prefill_chunk`` entry."""
+    cfg = get_arch(arch, reduced=True)
+    params = T.init_params(cfg, jax.random.PRNGKey(0))
+    eng = Engine(cfg, params, ServeConfig(
+        max_new_tokens=2, cache_len=64, decode_chunk=2, max_slots=1,
+        prefill_bucket=4, prefill_chunk=8))
+    rng = jax.random.PRNGKey(1)
+    for n in range(3, 22):
+        rng, k = jax.random.split(rng)
+        prompt = jax.random.randint(k, (n,), 0, cfg.vocab_size).tolist()
+        eng.generate([prompt])
+    assert eng._prefill_chunk._cache_size() == 1

@@ -1,0 +1,115 @@
+"""Expert-parallel MoE serving: sharded experts == replicated, bitwise.
+
+THE oracle: greedy serving output with experts sharded over the model
+axis (``ServeTPPlan.moe_ep``) is TOKEN-IDENTICAL to the single-device
+engine AND to the tp>1 engine with EP disabled (``tp_ep=False``). The
+guarantee is by construction: routing/dispatch/combine run replicated on
+the full expert set (the router is replicated), each shard computes only
+its own E/size experts' gemms on the SAME per-expert problem shapes the
+replicated path batches over the expert dim, and one tiled all-gather --
+pure data movement -- reassembles the global (B, E, C, d) output buffer.
+No gemm changes shape, so CPU shape-dependent rounding cannot bite.
+
+Multi-device tests need forced host devices BEFORE jax initializes:
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=4 \
+        PYTHONPATH=src python -m pytest -x -q tests/test_moe_ep.py
+
+Under the plain tier-1 run (1 device) the parity tests skip; the plan
+unit tests still run.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs.base import get_arch
+from repro.distributed import sharding as SH
+from repro.models import transformer as T
+from repro.serving.engine import Engine, ServeConfig
+
+NDEV = len(jax.devices())
+needs2 = pytest.mark.skipif(
+    NDEV < 2, reason="needs >= 2 devices (force host devices via "
+                     "XLA_FLAGS before jax initializes)")
+needs4 = pytest.mark.skipif(
+    NDEV < 4, reason="needs XLA_FLAGS=--xla_force_host_platform_"
+                     "device_count=4 (set before jax initializes)")
+
+BASE = dict(max_new_tokens=6, cache_len=64, decode_chunk=4, max_slots=2,
+            prefill_bucket=4, prefill_chunk=8)
+
+
+@pytest.fixture(scope="module")
+def olmoe():
+    # 4 experts so EP divides mesh sizes 2 and 4
+    cfg = get_arch("olmoe-1b-7b", reduced=True).replace(
+        n_experts=4, n_experts_active=2, capacity_factor=4.0)
+    return cfg, T.init_params(cfg, jax.random.PRNGKey(0))
+
+
+def _prompts(cfg, n, seed=0):
+    rng = np.random.default_rng(seed)
+    return [list(rng.integers(0, cfg.vocab_size, int(rng.integers(2, 24))))
+            for _ in range(n)]
+
+
+# ---------------------------------------------------------------------------
+# plan unit tests (no extra devices needed)
+# ---------------------------------------------------------------------------
+
+def test_plan_moe_ep_requires_divisible_experts(olmoe):
+    cfg, _ = olmoe                                  # E=4
+    assert SH.make_serve_tp_plan(cfg, 1).moe_ep is False
+    if NDEV >= 2:
+        assert SH.make_serve_tp_plan(cfg, 2).moe_ep is True
+        assert SH.make_serve_tp_plan(cfg, 2, ep=False).moe_ep is False
+        e3 = cfg.replace(n_experts=3, n_experts_active=2)
+        assert SH.make_serve_tp_plan(e3, 2).moe_ep is False
+
+
+def test_plan_moe_ep_only_for_moe_family():
+    cfg = get_arch("tinyllama-1.1b", reduced=True)
+    if NDEV >= 2:
+        assert SH.make_serve_tp_plan(cfg, 2).moe_ep is False
+
+
+def test_param_specs_shard_expert_stacks(olmoe):
+    cfg, params = olmoe
+    if NDEV < 2:
+        pytest.skip("plan needs 2 devices")
+    plan = SH.make_serve_tp_plan(cfg, 2)
+    assert plan.moe_ep
+    specs = SH.serve_param_specs(params, plan)
+    for key in ("w_gate", "w_up", "w_down"):
+        spec = specs["layers"]["moe"][key]         # (Lc, E, d, f) stacks
+        assert spec[-3] == plan.axis               # expert dim sharded
+    assert specs["layers"]["moe"]["router"] == SH.P()  # replicated
+
+
+# ---------------------------------------------------------------------------
+# serving parity: EP on == EP off == single device, token for token
+# ---------------------------------------------------------------------------
+
+def _gen(model, tp, tp_ep=True, seed=3):
+    cfg, params = model
+    eng = Engine(cfg, params, ServeConfig(tp=tp, tp_ep=tp_ep, **BASE))
+    if tp > 1:
+        assert eng._plan.moe_ep == (tp_ep and cfg.n_experts % tp == 0)
+    return eng.generate(_prompts(cfg, 4, seed=seed))
+
+
+@needs2
+def test_moe_ep_tp2_matches_single_device(olmoe):
+    assert _gen(olmoe, tp=2) == _gen(olmoe, tp=1)
+
+
+@needs2
+def test_moe_ep_matches_replicated_experts(olmoe):
+    """EP sliced expert gemms vs the same mesh running every expert
+    replicated: bit-identical outputs (per-expert problems unchanged)."""
+    assert _gen(olmoe, tp=2, tp_ep=True) == _gen(olmoe, tp=2, tp_ep=False)
+
+
+@needs4
+def test_moe_ep_tp4_matches_single_device(olmoe):
+    assert _gen(olmoe, tp=4) == _gen(olmoe, tp=1)

@@ -174,11 +174,105 @@ def test_temperature_parity_on_vs_off(causal):
     assert on.stats["prefix_hits"] == 4
 
 
-def test_prefix_cache_rejects_recurrent_family():
+# ---------------------------------------------------------------------------
+# recurrent families: checkpoint-mode prefix cache (warm == cold == off)
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def mamba2():
     cfg = get_arch("mamba2-2.7b", reduced=True)
-    params = T.init_params(cfg, jax.random.PRNGKey(0))
-    with pytest.raises(ValueError, match="KV-ring"):
-        Engine(cfg, params, ServeConfig(prefix_cache=True))
+    return cfg, T.init_params(cfg, jax.random.PRNGKey(0))
+
+
+@pytest.fixture(scope="module")
+def zamba2():
+    cfg = get_arch("zamba2-1.2b", reduced=True)
+    return cfg, T.init_params(cfg, jax.random.PRNGKey(0))
+
+
+def _mk_rec(model, prefix=False, **kw):
+    cfg, params = model
+    base = dict(max_new_tokens=4, cache_len=64, decode_chunk=4,
+                max_slots=2, prefill_bucket=4, prefill_chunk=16,
+                prefix_cache=prefix)
+    base.update(kw)
+    return Engine(cfg, params, ServeConfig(**base))
+
+
+def test_recurrent_page_pins_to_prefill_chunk(mamba2):
+    """Recurrent families now SUPPORT prefix caching (checkpoint mode);
+    the page size is pinned to the prefill chunk so checkpoints are
+    exactly the inter-chunk state carries the scheduler materializes
+    anyway (regression: this combination used to raise "KV-ring")."""
+    eng = _mk_rec(mamba2, prefix=True, prefix_page=8)   # 8 ignored
+    assert eng._page == eng._chunk == 16
+    assert eng._caps.prefix_mode == "checkpoints"
+
+
+@pytest.mark.parametrize("fixture", ["mamba2", "zamba2"])
+def test_recurrent_greedy_parity_on_vs_off(fixture, request):
+    """Shared-prefix queue generated twice on an SSM / hybrid engine:
+    cycle 1 checkpoints state at page boundaries (cold + mixed groups),
+    cycle 2 restores them. Both must match the cache-off engine token
+    for token, and the warm cycle must actually reuse state."""
+    model = request.getfixturevalue(fixture)
+    cfg, _ = model
+    prompts = _shared_prompts(cfg, 3, shared_len=24, uniq=(4, 8), seed=11)
+    off, on = _mk_rec(model), _mk_rec(model, prefix=True)
+    assert off.generate(prompts) == on.generate(prompts)     # cold+mixed
+    assert off.generate(prompts) == on.generate(prompts)     # fully warm
+    # every row of the warm cycle restores the 16-token boundary <= 24
+    assert on.stats["prefix_hits"] >= 3
+    assert on.stats["prefix_tokens_reused"] >= 3 * 16
+
+
+@pytest.mark.parametrize("fixture", ["mamba2", "zamba2"])
+def test_recurrent_temperature_parity_on_vs_off(fixture, request):
+    """Sampling-mode parity for checkpoint restores: the warm path must
+    consume the identical per-request key stream, so temperature outputs
+    match the cache-off engine too."""
+    model = request.getfixturevalue(fixture)
+    cfg, _ = model
+    prompts = _shared_prompts(cfg, 3, shared_len=24, uniq=(4, 8), seed=12)
+    off = _mk_rec(model, temperature=0.8, seed=7)
+    on = _mk_rec(model, prefix=True, temperature=0.8, seed=7)
+    for _ in range(2):
+        assert off.generate(prompts) == on.generate(prompts)
+    assert on.stats["prefix_hits"] >= 3
+
+
+def test_recurrent_eviction_then_rehit_parity(mamba2):
+    """Checkpoint pool of 3 pages thrashes under 4 distinct prompts;
+    outputs stay identical to cache-off and eviction counters move."""
+    cfg, _ = mamba2
+    page_bytes = T.cache_page_bytes(cfg, 16)
+    off = _mk_rec(mamba2)
+    on = _mk_rec(mamba2, prefix=True, prefix_bytes=3 * page_bytes)
+    assert on._prefix.capacity == 3
+    rng = np.random.default_rng(13)
+    prompts = [list(rng.integers(0, cfg.vocab_size, 20)) for _ in range(4)]
+    for _ in range(3):
+        assert off.generate(prompts) == on.generate(prompts)
+    assert on._prefix.evictions > 0
+    assert on._prefix.pages_in_use <= 3
+
+
+def test_recurrent_mixed_cold_and_warm_group_parity(zamba2):
+    """A checkpoint-hit request fused into the SAME prefill group as a
+    brand-new one: checkpoint matching takes the group MINIMUM boundary
+    (any cold row forces s0 = 0, a shorter warm row lowers s0 for all),
+    so the mixed group must stay token-identical while reusing what the
+    group allows."""
+    cfg, _ = zamba2
+    rng = np.random.default_rng(14)
+    A = list(rng.integers(0, cfg.vocab_size, 22))
+    B = list(rng.integers(0, cfg.vocab_size, 9))      # cold group-mate
+    off, on = _mk_rec(zamba2), _mk_rec(zamba2, prefix=True)
+    assert off.generate([A]) == on.generate([A])      # checkpoint A
+    assert off.generate([A, B]) == on.generate([A, B])  # cold drags s0 to 0
+    assert off.generate([A]) == on.generate([A])      # A still re-hits
+    assert on.stats["prefix_hits"] >= 1
+    assert on.stats["prefix_tokens_reused"] >= 16
 
 
 def test_page_clamps_to_ring_divisor(causal):
