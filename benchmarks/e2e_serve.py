@@ -47,6 +47,18 @@ and reports ``prefix_hit_rate``. Both ride the same-run
 exact-length; see scripts/check_bench_regression.py) and are part of
 the --smoke sweep.
 
+Auto-policy rows (queue depth 4, reduced configs tinyllama / gpt2 /
+mobilellama; tinyllama only in --smoke) run the calibrated policy
+search (``launch/policy_search.py``) and serve the searched assignment
+next to ``default_serve_mix``, reporting quality (teacher-logit ``kl``)
+and ``model_bytes`` alongside the usual perf columns, with metric-only
+``pure_q2_k`` / ``pure_q6_k`` anchor rows (emitted only for anchor
+variants in the sweep's candidate set -- the smoke sweep searches
+without q6_k, so it carries just ``pure_q2_k``); they ride the same-run
+``check_policy_auto`` structural gate (auto must dominate-or-match the
+default on both axes and beat the anchors on quality / size when
+present).
+
 Output: human CSV rows (``emit``) plus one machine-readable JSON blob
 (``--out`` to persist, default benchmarks/results/e2e_serve.json when run
 as a script) so future PRs can track the perf trajectory.  ``--smoke``
@@ -86,6 +98,11 @@ TP_DEPTH = 8                     # tensor-parallel row (tp=1 vs tp=2)
 DISAGG_DEPTH = 8                 # mono-vs-disagg row pair (1P+1D)
 RECURRENT_ARCHS = ("mamba2-2.7b", "zamba2-1.2b")   # ssm + hybrid rows
 RECURRENT_DEPTH = 8
+# auto-policy quality-at-size rows (--policy auto): searched assignment
+# vs default_serve_mix, with pure_q2_k / pure_q6_k anchors, per arch
+AUTO_ARCHS = ("tinyllama-1.1b", "gpt2-paper", "mobilellama-1.4b")
+AUTO_SMOKE_ARCHS = ("tinyllama-1.1b",)
+AUTO_DEPTH = 4
 SHARED_PREFIX_LEN = 48           # shared system prompt tokens
 UNIQUE_LEN = 6                   # per-request unique suffix tokens
 MAX_SLOTS = 8
@@ -295,6 +312,56 @@ def _bench_recurrent(arch: str, depth: int) -> list:
     return rows
 
 
+def _bench_policy_auto(smoke: bool) -> list:
+    """Auto-policy rows: per arch, run the calibrated policy search and
+    serve both the searched assignment and default_serve_mix at matched
+    depth; quality (teacher-logit KL) and model bytes ride along from
+    the search's own verified evals, with the pure_q2_k / pure_q6_k
+    anchors as metric-only rows (anchors exist only for variants the
+    sweep searched; smoke drops q6_k). The searched policy dominates-or-
+    matches the seed by construction -- check_policy_auto pins that."""
+    from repro.core import calibrate as CAL
+    from repro.launch.policy_search import search_policy
+    archs = AUTO_SMOKE_ARCHS if smoke else AUTO_ARCHS
+    candidates = (("q2_k", "q3_k", "none") if smoke else
+                  ("q2_k", "q3_k", "q3_k_o", "q4_k", "q6_k", "none"))
+    rows = []
+    for arch in archs:
+        cfg = get_arch(arch, reduced=True)
+        params = T.init_params(cfg, jax.random.PRNGKey(0))
+        stats = CAL.run_calibration(params, cfg,
+                                    n_batches=1 if smoke else 2,
+                                    seq=32 if smoke else 64)
+        policy, info = search_policy(
+            cfg, params, arch=arch, candidates=candidates,
+            rounds=1 if smoke else 2, stats=stats,
+            eval_seq=32 if smoke else 64, verbose=False)
+        meta = info["meta"]
+        calib = stats.for_paths([p for p, _ in policy.rules])
+        qp_auto, _ = quantize_params(params, policy, calib=calib)
+        qp_def, _ = quantize_params(params,
+                                    get_policy("default_serve_mix"))
+        served = (("auto", qp_auto, meta["final"]),
+                  ("default_serve_mix", qp_def, meta["seed"]))
+        for tag, qp, m in served:
+            rec = _bench_one(cfg, qp, AUTO_DEPTH)
+            rec["params"] = f"policy_{tag}_{arch}"
+            rec["policy"] = tag
+            rec["policy_arch"] = arch
+            rec["kl"] = round(m["kl"], 6)
+            rec["model_bytes"] = int(m["bytes"])
+            if "pseudo_ppl" in m:
+                rec["pseudo_ppl"] = round(m["pseudo_ppl"], 3)
+            rows.append(rec)
+        for v, m in meta["anchors"].items():
+            rows.append(dict(
+                params=f"policy_{v}_{arch}", queue_depth=AUTO_DEPTH,
+                policy=v, policy_arch=arch, kl=round(m["kl"], 6),
+                model_bytes=int(m["bytes"]),
+                pseudo_ppl=round(m["pseudo_ppl"], 3)))
+    return rows
+
+
 def run(out_path: str = None, smoke: bool = False) -> dict:
     cfg = get_arch("tinyllama-1.1b", reduced=True)
     params = T.init_params(cfg, jax.random.PRNGKey(0))
@@ -315,6 +382,9 @@ def run(out_path: str = None, smoke: bool = False) -> dict:
                       disagg_depth=DISAGG_DEPTH,
                       recurrent_archs=list(RECURRENT_ARCHS),
                       recurrent_depth=RECURRENT_DEPTH,
+                      auto_archs=list(AUTO_SMOKE_ARCHS if smoke
+                                      else AUTO_ARCHS),
+                      auto_depth=AUTO_DEPTH,
                       draft_k=DRAFT_K, max_slots=MAX_SLOTS,
                       smoke=smoke),
         runs=[],
@@ -411,6 +481,16 @@ def run(out_path: str = None, smoke: bool = False) -> dict:
              f"tok/s={rec['tok_per_s']} "
              f"prefill_tok/s={rec['prefill_tok_per_s']} "
              f"ttft_s={rec['ttft_s']} {extra}")
+    # auto-policy quality-at-size rows (searched vs default_serve_mix +
+    # anchors) -- in the smoke sweep too for the same-run
+    # check_policy_auto structural gate
+    for rec in _bench_policy_auto(smoke):
+        results["runs"].append(rec)
+        perf = (f"tok/s={rec['tok_per_s']} ttft_s={rec['ttft_s']} "
+                if "tok_per_s" in rec else "")
+        emit(f"e2e_serve_{rec['params']}_d{rec['queue_depth']}",
+             rec["kl"] * 1e3,
+             f"kl={rec['kl']} bytes={rec['model_bytes']} {perf}")
     emit_json(results, out_path)
     return results
 

@@ -32,7 +32,7 @@ tree matching is deterministic for that workload, so a zero hit rate
 means the prefix cache structurally stopped working (their ttft rides
 the ordinary ttft gate).
 
-Three SAME-RUN structural gates ride along (rows from ONE run cancel
+Four SAME-RUN structural gates ride along (rows from ONE run cancel
 machine drift, so these are tight where the cross-run gates must be
 loose):
 
@@ -55,6 +55,12 @@ loose):
   recurrent prefix row must show a positive checkpoint hit rate --
   batched fixed-grid chunking and checkpoint-mode prefix caching are
   the reasons those rows exist. Missing or null fields are failures.
+* ``check_policy_auto``: whenever a sweep produced the auto-policy
+  quality-at-size rows, the searched assignment must dominate-or-match
+  default_serve_mix on both teacher-logit KL and model bytes for every
+  benched arch (the search's documented return contract), and beat the
+  pure_q2_k anchor on quality / pure_q6_k anchor on size when present.
+  Missing or null fields are failures.
 
 Trace-bench JSONs (``benchmark: "trace_serve"``) dispatch to
 ``check_trace`` instead: rows are matched on (mix, rate_rps, params),
@@ -244,6 +250,73 @@ def check_recurrent_prefill(new: dict) -> int:
     return fails
 
 
+def _num(v):
+    return isinstance(v, (int, float)) and not isinstance(v, bool)
+
+
+def check_policy_auto(new: dict) -> int:
+    """Same-run structural gate on the auto-policy quality-at-size rows.
+    For every arch where the sweep emitted both a ``policy: "auto"`` row
+    and a ``policy: "default_serve_mix"`` row, the searched assignment
+    must dominate-or-match the default on BOTH axes: teacher-logit
+    ``kl`` no worse and ``model_bytes`` no larger (the search returns
+    the best verified state weakly dominating its seed, so a violation
+    means the search or its serialization structurally broke). When the
+    pure anchors are present, auto must also beat pure_q2_k on quality
+    and pure_q6_k on size -- the quality-at-size headline. Missing or
+    null fields are failures, not crashes. Returns the failure count
+    (0 when the sweep has no auto-policy rows)."""
+    rows = [r for r in new.get("runs", []) if "policy" in r]
+    by = {}
+    for r in rows:
+        by.setdefault(r.get("policy_arch"), {})[r.get("policy")] = r
+    autos = [(a, d) for a, d in sorted(by.items()) if "auto" in d]
+    if not autos:
+        return 0
+    fails = 0
+    for arch, d in autos:
+        r = d["auto"]
+        tag = f"policy auto {arch}"
+        base = d.get("default_serve_mix")
+        if base is None:
+            fails += 1
+            print(f"FAIL {tag}: no default_serve_mix row for this arch")
+            continue
+        bad = []
+        rkl, bkl = r.get("kl"), base.get("kl")
+        rby, bby = r.get("model_bytes"), base.get("model_bytes")
+        if not _num(rkl) or not _num(bkl):
+            bad.append("kl-missing")
+        elif rkl > bkl * (1 + 1e-6):
+            bad.append(f"kl {rkl} > default {bkl}")
+        if not _num(rby) or not _num(bby):
+            bad.append("model_bytes-missing")
+        elif rby > bby:
+            bad.append(f"bytes {rby} > default {bby}")
+        q2, q6 = d.get("pure_q2_k"), d.get("pure_q6_k")
+        if q2 is not None and _num(rkl):
+            if not _num(q2.get("kl")):
+                bad.append("q2_k-anchor-kl-missing")
+            elif rkl >= q2["kl"]:
+                bad.append(f"kl {rkl} >= pure_q2_k {q2['kl']}")
+        if q6 is not None and _num(rby):
+            if not _num(q6.get("model_bytes")):
+                bad.append("q6_k-anchor-bytes-missing")
+            elif rby >= q6["model_bytes"]:
+                bad.append(f"bytes {rby} >= pure_q6_k "
+                           f"{q6['model_bytes']}")
+        fails += len(bad)
+        print(f"{'OK ' if not bad else 'FAIL'} {tag} kl "
+              f"{_fmt(rkl, '.4f')} vs default {_fmt(bkl, '.4f')}, bytes "
+              f"{_fmt(rby, 'd') if _num(rby) else '--'} vs default "
+              f"{_fmt(bby, 'd') if _num(bby) else '--'}"
+              + (f" [{'; '.join(bad)}]" if bad else ""))
+    if fails:
+        print(f"REGRESSION: auto policy stopped dominating "
+              f"default_serve_mix ({fails} structural failure(s))")
+    return fails
+
+
 _TRACE_REQUIRED = ("ttft_p50_s", "ttft_p99_s", "itl_p50_s", "itl_p99_s",
                    "goodput_frac")
 
@@ -429,7 +502,9 @@ def compare(new: dict, baseline: dict, tol: float, tol_prefill: float,
     tp_fails = check_tp_sliced(new)
     disagg_fails = check_disagg(new)
     recurrent_fails = check_recurrent_prefill(new)
-    if failures or tp_fails or disagg_fails or recurrent_fails:
+    policy_fails = check_policy_auto(new)
+    if failures or tp_fails or disagg_fails or recurrent_fails \
+            or policy_fails:
         if failures:
             print(f"REGRESSION: {failures} exceeded tolerances "
                   f"(decode {tol:.0%}, prefill {tol_prefill:.0%}, "

@@ -1,0 +1,228 @@
+"""Activation calibration for quantization policy search (ROADMAP item 5).
+
+Runs a small token budget through the fp32 model and records, per matmul
+input, the statistics that drive format selection (Agile-Quant-style
+activation-guided sensitivity; see PAPERS.md):
+
+  * per-K-column activation abs-max   -> outlier columns for q3_k_o
+  * per-K-column mean square          -> activation-weighted quant error
+  * outlier-column fraction           -> which layers want the sidecar
+
+Mechanics: the model's matmul call sites invoke :func:`tap` with a stable
+projection *suffix* name (e.g. ``"attn/wq"``, ``"mlp/w_down"``) and the
+matmul input. When no collector is active (normal serving/training) the
+tap is a trace-time no-op -- zero graph overhead. Inside
+:func:`collecting`, the tap emits in-graph reductions through
+``jax.debug.callback``, which fires once per ``lax.scan`` iteration at
+*runtime* -- so stacked scan layers accumulate into one per-suffix
+aggregate, exactly matching the per-projection granularity of
+``QuantPolicy`` paths (stacked layers share one path).
+
+Calibration drives the model's full-sequence forward -- the same
+``_qkv``/``_attn_out``/mlp code path the serving engine's chunked prefill
+executes -- so it works unchanged on every family in ``configs/``.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+from typing import Any, Dict, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import quantize as Q
+
+# active collector; checked at TRACE time so ordinary jitted serving code
+# contains no callbacks at all
+_COLLECTOR: Optional["_Collector"] = None
+
+
+class _Collector:
+    def __init__(self):
+        self.absmax: Dict[str, np.ndarray] = {}
+        self.sumsq: Dict[str, np.ndarray] = {}
+        self.rows: Dict[str, float] = {}
+
+    def record(self, name: str, absmax, sumsq, rows):
+        a = np.asarray(absmax, np.float32)
+        s = np.asarray(sumsq, np.float32)
+        r = float(rows)
+        if name in self.absmax:
+            self.absmax[name] = np.maximum(self.absmax[name], a)
+            self.sumsq[name] = self.sumsq[name] + s
+            self.rows[name] += r
+        else:
+            self.absmax[name] = a
+            self.sumsq[name] = s
+            self.rows[name] = r
+
+
+def tap(name, x) -> None:
+    """Record activation stats for matmul input ``x`` (..., K) feeding the
+    weight(s) whose parameter path ends with ``name`` (a str or a tuple of
+    suffixes sharing this input, e.g. wq/wk/wv). No-op unless inside
+    :func:`collecting`."""
+    col = _COLLECTOR
+    if col is None:
+        return
+    names = (name,) if isinstance(name, str) else tuple(name)
+    K = x.shape[-1]
+    xf = x.astype(jnp.float32).reshape(-1, K)
+    absmax = jnp.max(jnp.abs(xf), axis=0)
+    sumsq = jnp.sum(xf * xf, axis=0)
+    rows = jnp.asarray(xf.shape[0], jnp.float32)
+
+    def _cb(a, s, r, _names=names, _col=col):
+        for n in _names:
+            _col.record(n, a, s, r)
+
+    jax.debug.callback(_cb, absmax, sumsq, rows)
+
+
+@contextlib.contextmanager
+def collecting():
+    """Activate a stats collector for taps traced within the block."""
+    global _COLLECTOR
+    prev = _COLLECTOR
+    col = _Collector()
+    _COLLECTOR = col
+    try:
+        yield col
+    finally:
+        _COLLECTOR = prev
+
+
+# ---------------------------------------------------------------------------
+# calibration results
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class CalibStats:
+    """Aggregated activation statistics, keyed by tap suffix name."""
+    absmax: Dict[str, np.ndarray]     # name -> (K,) column abs-max
+    mean_sq: Dict[str, np.ndarray]    # name -> (K,) column mean square
+    tokens: int                       # total calibration rows observed
+
+    def names(self):
+        return sorted(self.absmax)
+
+    def outlier_fraction(self, name: str, z: float = 6.0) -> float:
+        """Fraction of K columns whose abs-max exceeds z * median abs-max
+        (the d-Matrix outlier-block criterion, column granularity)."""
+        a = self.absmax[name]
+        med = float(np.median(a))
+        if med <= 0:
+            return 0.0
+        return float(np.mean(a > z * med))
+
+    def for_paths(self, paths: Sequence[str]) -> Dict[str, np.ndarray]:
+        """Map tap suffixes onto full parameter paths by suffix match --
+        the shape ``quantize_params(calib=...)`` expects."""
+        out = {}
+        for path in paths:
+            for name, a in self.absmax.items():
+                if path == name or path.endswith("/" + name):
+                    out[path] = a
+                    break
+        return out
+
+
+def _stats_from(col: _Collector) -> CalibStats:
+    mean_sq = {n: col.sumsq[n] / max(col.rows[n], 1.0) for n in col.sumsq}
+    tokens = int(max(col.rows.values())) if col.rows else 0
+    return CalibStats(dict(col.absmax), mean_sq, tokens)
+
+
+def run_calibration(params, cfg, *, tokens=None, batch: int = 2,
+                    seq: int = 64, n_batches: int = 2, seed: int = 0,
+                    interpret: bool = False) -> CalibStats:
+    """Run the fp32 model over a small token budget and collect stats.
+
+    ``tokens``: optional (B, S) int array per batch list; otherwise
+    ``n_batches`` random batches are drawn (fine for policy search: the
+    stats feeding the search only need the activation *distribution
+    shape*, and the quality eval uses the same distribution).
+    Families with ``embed_input=False`` get random embedding inputs.
+    """
+    from repro.models import transformer as T
+
+    if tokens is not None:
+        batches = [jnp.asarray(t) for t in
+                   (tokens if isinstance(tokens, (list, tuple)) else [tokens])]
+    else:
+        keys = jax.random.split(jax.random.PRNGKey(seed), n_batches)
+        if cfg.embed_input:
+            batches = [jax.random.randint(k, (batch, seq), 0,
+                                          cfg.vocab_size) for k in keys]
+        else:
+            batches = [jax.random.normal(k, (batch, seq, cfg.d_model))
+                       for k in keys]
+    with collecting() as col:
+        for b in batches:
+            kwargs = (dict(tokens=b) if cfg.embed_input
+                      else dict(embeds=b))
+            lg, _, _ = T.forward_seq(params, cfg, interpret=interpret,
+                                     **kwargs)
+            jax.block_until_ready(lg)   # flush debug callbacks
+    return _stats_from(col)
+
+
+# ---------------------------------------------------------------------------
+# offline per-format quantization error (no model run needed)
+# ---------------------------------------------------------------------------
+
+def format_mse(params, stats: Optional[CalibStats],
+               candidates: Sequence[str],
+               paths: Optional[Sequence[str]] = None) -> Dict[str, Dict[str, float]]:
+    """Activation-weighted quantization MSE per (path, candidate format).
+
+    For each quantizable weight W (K, N) and candidate variant v:
+        mse = mean_k,n [ (W - deq(quant_v(W)))^2 * E[x_k^2] / mean E[x^2] ]
+    i.e. reconstruction error weighted by how hard each K row is actually
+    driven by the calibration activations. The absolute numbers only rank
+    candidates per path; the policy search uses the real end-to-end
+    quality eval for accept decisions.
+    """
+    from repro.core.qlinear import _flatten_paths, _is_quantizable_path
+
+    flat = _flatten_paths(params)
+    want = set(paths) if paths is not None else None
+    out: Dict[str, Dict[str, float]] = {}
+    for path, arr in flat:
+        if want is not None and path not in want:
+            continue
+        if arr.ndim < 2 or not _is_quantizable_path(path):
+            continue
+        K, N = arr.shape[-2], arr.shape[-1]
+        if K % 256 != 0:
+            continue
+        w = jnp.asarray(arr, jnp.float32).reshape(-1, K, N)
+        wk = None
+        if stats is not None:
+            m = stats.for_paths([path]).get(path)
+            # for_paths returns absmax; weight by mean-square instead
+            for name in stats.mean_sq:
+                if path == name or path.endswith("/" + name):
+                    m = stats.mean_sq[name]
+                    break
+            if m is not None and K % m.size == 0:
+                wk = np.tile(np.asarray(m, np.float32), K // m.size)
+                mean = float(wk.mean())
+                wk = wk / mean if mean > 0 else None
+        per = {}
+        for v in candidates:
+            qfn = Q._QUANTIZE[v]
+            if v == "q3_k_o" and wk is not None:
+                a = jnp.asarray(np.sqrt(wk))
+                qd = jax.vmap(lambda x, _a=a:
+                              Q.dequantize(Q.quantize_q3_k_o(x, act_absmax=_a)))(w)
+            else:
+                qd = jax.vmap(lambda x, _f=qfn: Q.dequantize(_f(x)))(w)
+            err = (w - qd) ** 2
+            if wk is not None:
+                err = err * jnp.asarray(wk)[None, :, None]
+            per[v] = float(jnp.mean(err))
+        out[path] = per
+    return out

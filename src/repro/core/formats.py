@@ -81,6 +81,7 @@ class QuantFormat:
 #   Q3_K : 2 + 1 + 8/16 + 16/256                = 3.5625  (gguf: 3.4375; we
 #           store the 6-bit block scales byte-aligned for lane-conflict-free
 #           access -- +0.125 b/w)
+#   Q3_K_O: q3_k + 8*(8+16)/256 outlier sidecar = 4.3125  (gguf: 4.1875)
 #   Q4_0 : 4 + 16/32                            = 4.5     (gguf: 4.5, exact)
 #   Q4_K : 4 + 2*8/32 + 2*16/256                = 4.625   (gguf: 4.5)
 #   Q5_K : 5 + 2*8/32 + 2*16/256                = 5.625   (gguf: 5.5)
@@ -107,6 +108,24 @@ Q3_K = QuantFormat(
         ArraySpec("hmask", 8, "uint8"),    # high bit
         ArraySpec("scales", 16, "uint8"),  # 6-bit scale, stored 0..63
         ArraySpec("d", 256, "float16"),
+    ))
+
+Q3_K_O = QuantFormat(
+    # beyond-paper outlier-aware variant (d-Matrix-style outlier blocks,
+    # PAPERS.md): q3_k base plus an fp16 sidecar holding, per 256-row
+    # super-block and per output column, the 8 most activation-sensitive
+    # weight rows at full fp16 (local row index + value). The base q3_k
+    # payload stores 0 at those positions; dequant scatters the sidecar
+    # back. 8*(8+16)/256 = 0.75 extra bits/weight over q3_k.
+    name="q3_k_o", bits_per_weight=4.3125, bits_per_weight_gguf=4.1875,
+    block=BLOCK16, super_block=SUPER_BLOCK,
+    arrays=(
+        ArraySpec("qs", 4, "uint8"),       # low 2 bits (as q3_k)
+        ArraySpec("hmask", 8, "uint8"),    # high bit (as q3_k)
+        ArraySpec("scales", 16, "uint8"),  # 6-bit scale, stored 0..63
+        ArraySpec("d", 256, "float16"),
+        ArraySpec("oidx", 32, "uint8"),    # 8 outlier row idx per SB (local)
+        ArraySpec("ovals", 32, "float16"), # their fp16 values
     ))
 
 Q4_K = QuantFormat(
@@ -173,13 +192,15 @@ Q8_K = QuantFormat(
     is_weight_format=False)
 
 FORMATS: Dict[str, QuantFormat] = {
-    f.name: f for f in (Q2_K, Q3_K, Q4_0, Q4_K, Q5_K, Q6_K, Q8_0, Q8_K)
+    f.name: f for f in (Q2_K, Q3_K, Q3_K_O, Q4_0, Q4_K, Q5_K, Q6_K, Q8_0,
+                        Q8_K)
 }
 
 # variants the paper's accelerator supports natively
 PAPER_VARIANTS = ("q2_k", "q3_k")
-# variants listed as the paper's future work, implemented here
-EXTENDED_VARIANTS = ("q4_0", "q4_k", "q5_k", "q6_k", "q8_0")
+# variants listed as the paper's future work, implemented here (q3_k_o is
+# our beyond-paper outlier-sidecar variant used by `--policy auto`)
+EXTENDED_VARIANTS = ("q3_k_o", "q4_0", "q4_k", "q5_k", "q6_k", "q8_0")
 WEIGHT_VARIANTS = PAPER_VARIANTS + EXTENDED_VARIANTS
 
 

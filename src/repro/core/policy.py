@@ -35,7 +35,11 @@ class QuantPolicy:
     def variant_for(self, path: str, K: int, N: int) -> Optional[str]:
         """Variant for parameter at `path` with logical shape (K, N); None
         means keep unquantized."""
-        if K < MIN_QUANT_K and K % 32 != 0:
+        # Small-K tensors stay f32 (module rule above), and no packed
+        # variant exists unless K divides into 32-wide blocks. Either
+        # failure means "keep unquantized" -- never raise: one odd-shaped
+        # tensor must not abort quantize_params for the whole model.
+        if K < MIN_QUANT_K or K % 32 != 0:
             return None
         if N < MIN_QUANT_N:
             return None
@@ -120,6 +124,45 @@ POLICIES = {
 
 def get_policy(name: str) -> QuantPolicy:
     return POLICIES[name]
+
+
+# --------------------------------------------------------------------------
+# searched-policy serialization (launch/policy_search.py writes these;
+# ``serve --policy auto`` loads them back)
+# --------------------------------------------------------------------------
+
+def policy_to_dict(policy: QuantPolicy) -> dict:
+    """JSON-ready form: {"name", "rules": [[pattern, variant], ...],
+    "default"}.  Searched policies use exact paths as patterns (fnmatch
+    treats a glob with no metacharacters as an exact match), so the same
+    schema covers hand-written and searched policies."""
+    return {"name": policy.name,
+            "rules": [list(r) for r in policy.rules],
+            "default": policy.default}
+
+
+def policy_from_dict(d: dict) -> QuantPolicy:
+    rules = tuple((str(p), str(v)) for p, v in d.get("rules", ()))
+    for _, v in rules:
+        if v != "none" and v not in F.FORMATS:
+            raise ValueError(f"unknown variant {v!r} in policy rules")
+    default = str(d.get("default", "q3_k"))
+    if default != "none" and default not in F.FORMATS:
+        raise ValueError(f"unknown default variant {default!r}")
+    return QuantPolicy(str(d.get("name", "searched")), rules, default)
+
+
+def save_policy(policy: QuantPolicy, path) -> None:
+    import json
+    with open(path, "w") as f:
+        json.dump(policy_to_dict(policy), f, indent=2, sort_keys=True)
+        f.write("\n")
+
+
+def load_policy(path) -> QuantPolicy:
+    import json
+    with open(path) as f:
+        return policy_from_dict(json.load(f))
 
 
 # --------------------------------------------------------------------------

@@ -48,8 +48,14 @@ def _flatten_paths(tree, prefix=""):
 
 
 def quantize_params(params: Dict[str, Any], policy: QuantPolicy,
-                    expert_stack_paths: Tuple[str, ...] = ("moe/w_",)):
-    """Returns (qparams, report). report: path -> variant|None."""
+                    expert_stack_paths: Tuple[str, ...] = ("moe/w_",),
+                    calib: Optional[Dict[str, Any]] = None):
+    """Returns (qparams, report). report: path -> variant|None.
+
+    ``calib`` optionally maps parameter path -> per-K-column activation
+    abs-max (from core/calibrate.py); outlier-aware variants (q3_k_o) use
+    it to pick which rows go to the fp16 sidecar. Stats for a stacked
+    expert tensor (packed along E*K) are tiled across experts."""
     report: Dict[str, Optional[str]] = {}
 
     def walk(node, prefix=""):
@@ -68,6 +74,15 @@ def quantize_params(params: Dict[str, Any], policy: QuantPolicy,
             return arr
         report[path] = variant
         qfn = Q._QUANTIZE[variant]
+        if variant == "q3_k_o" and calib is not None:
+            stats = calib.get(path)
+            Keff = arr.shape[-3] * K if (is_expert and arr.ndim >= 3) else K
+            if stats is not None:
+                a = jnp.asarray(stats, jnp.float32).reshape(-1)
+                if Keff % a.size == 0:
+                    aa = jnp.tile(a, Keff // a.size)
+                    qfn = (lambda w, _a=aa:
+                           Q.quantize_q3_k_o(w, act_absmax=_a))
         if arr.ndim == 2:
             return qfn(arr)
         if is_expert and arr.ndim >= 3:

@@ -1,0 +1,81 @@
+"""Quantization quality metrics: teacher-logit KL + pseudo-perplexity.
+
+The repo's first quality metric (ROADMAP item 5). A quantized ("student")
+model is scored against its own fp32 weights ("teacher") on a fixed eval
+batch: no dataset needed, works for every family in ``configs/`` via
+``forward_seq``, and deterministic for a given seed -- which is what the
+policy search and the e2e_serve bench gate need (relative quality across
+policies, not an absolute language-modeling number).
+
+Metrics (all averaged over batch x sequence):
+  * ``kl``         -- KL(teacher || student) over the vocab softmax; the
+                      primary search objective (0 = logit-identical).
+  * ``pseudo_ppl`` -- exp(mean student NLL of the teacher's argmax token):
+                      perplexity against teacher-greedy pseudo-labels.
+  * ``top1``       -- fraction of positions where the argmaxes agree
+                      (greedy-decode fidelity).
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def eval_tokens(cfg, *, batch: int = 2, seq: int = 64, seed: int = 1234):
+    """Deterministic eval inputs for ``cfg`` (tokens, or embeds for
+    families with ``embed_input=False``)."""
+    key = jax.random.PRNGKey(seed)
+    if cfg.embed_input:
+        return jax.random.randint(key, (batch, seq), 0, cfg.vocab_size)
+    return jax.random.normal(key, (batch, seq, cfg.d_model))
+
+
+def _forward_logits(params, cfg, inputs, interpret=False):
+    from repro.models import transformer as T
+    kwargs = dict(tokens=inputs) if cfg.embed_input else dict(embeds=inputs)
+    lg, _, _ = T.forward_seq(params, cfg, interpret=interpret, **kwargs)
+    return lg.astype(jnp.float32)
+
+
+def logit_metrics(teacher_logits, student_logits) -> Dict[str, float]:
+    """Metrics from two (B, S, V) logit tensors (teacher = reference)."""
+    tl = jax.nn.log_softmax(teacher_logits.astype(jnp.float32), axis=-1)
+    sl = jax.nn.log_softmax(student_logits.astype(jnp.float32), axis=-1)
+    tp = jnp.exp(tl)
+    kl = jnp.sum(tp * (tl - sl), axis=-1)                   # (B, S)
+    labels = jnp.argmax(teacher_logits, axis=-1)            # (B, S)
+    nll = -jnp.take_along_axis(sl, labels[..., None], axis=-1)[..., 0]
+    top1 = (jnp.argmax(student_logits, axis=-1) == labels)
+    return dict(kl=float(jnp.mean(kl)),
+                pseudo_ppl=float(jnp.exp(jnp.mean(nll))),
+                top1=float(jnp.mean(top1)))
+
+
+def quality_eval(teacher_params, student_params, cfg, *,
+                 inputs=None, batch: int = 2, seq: int = 64,
+                 seed: int = 1234, teacher_logits=None,
+                 interpret: bool = False) -> Dict[str, float]:
+    """Score ``student_params`` (typically quantized) against
+    ``teacher_params`` (fp32) on a fixed eval batch.
+
+    Pass ``teacher_logits`` to amortize the teacher forward across many
+    student evaluations (the policy search's inner loop)."""
+    if inputs is None:
+        inputs = eval_tokens(cfg, batch=batch, seq=seq, seed=seed)
+    if teacher_logits is None:
+        teacher_logits = _forward_logits(teacher_params, cfg, inputs,
+                                         interpret=interpret)
+    student_logits = _forward_logits(student_params, cfg, inputs,
+                                     interpret=interpret)
+    return logit_metrics(teacher_logits, student_logits)
+
+
+def teacher_logits_for(params, cfg, *, inputs=None, batch: int = 2,
+                       seq: int = 64, seed: int = 1234,
+                       interpret: bool = False):
+    """(inputs, teacher_logits) pair for repeated student scoring."""
+    if inputs is None:
+        inputs = eval_tokens(cfg, batch=batch, seq=seq, seed=seed)
+    return inputs, _forward_logits(params, cfg, inputs, interpret=interpret)

@@ -154,6 +154,66 @@ def dequantize_q3_k(t: QTensor, dtype=jnp.float32) -> jnp.ndarray:
 
 
 # ---------------------------------------------------------------------------
+# Q3_K_O (beyond-paper): q3_k base + fp16 outlier sidecar.
+#
+# Per 256-row super-block and per output column, the OUTLIERS_PER_SB rows
+# with the largest (activation-weighted) magnitude are stored exactly in an
+# fp16 sidecar (local row index + value) and zeroed before the q3_k fit, so
+# the narrow 3-bit grid is spent on the well-behaved bulk. ``act_absmax``
+# comes from core/calibrate.py (per-K-column activation abs-max); without it
+# the selection falls back to weight magnitude alone.
+# ---------------------------------------------------------------------------
+
+OUTLIERS_PER_SB = 8
+
+
+def quantize_q3_k_o(w: jnp.ndarray, act_absmax=None) -> QTensor:
+    K, N = w.shape
+    assert K % 256 == 0, K
+    nsb = K // 256
+    no = OUTLIERS_PER_SB
+    x = w.astype(jnp.float32).reshape(nsb, 256, N)
+    score = jnp.abs(x)
+    if act_absmax is not None:
+        a = jnp.asarray(act_absmax, jnp.float32).reshape(nsb, 256)
+        score = score * a[:, :, None]
+    # top-`no` rows per (super-block, column); top_k works on the last axis
+    _, idx = jax.lax.top_k(jnp.swapaxes(score, 1, 2), no)   # (nsb, N, no)
+    idx = jnp.swapaxes(idx, 1, 2)                           # (nsb, no, N)
+    ovals = jnp.take_along_axis(x, idx, axis=1)             # (nsb, no, N)
+    rows = jax.lax.broadcasted_iota(jnp.int32, (nsb, 256, N), 1)
+    mask = jnp.zeros((nsb, 256, N), bool)
+    for j in range(no):
+        mask = mask | (rows == idx[:, j][:, None, :])
+    base = jnp.where(mask, 0.0, x).reshape(K, N)
+    qt = quantize_q3_k(base)
+    return QTensor("q3_k_o", (K, N), dict(
+        qt.data,
+        oidx=idx.astype(jnp.uint8).reshape(K // 32, N),
+        ovals=ovals.astype(jnp.float16).reshape(K // 32, N)))
+
+
+def dequantize_q3_k_o(t: QTensor, dtype=jnp.float32) -> jnp.ndarray:
+    K, N = t.shape
+    nsb = K // 256
+    no = OUTLIERS_PER_SB
+    base = dequantize_q3_k(
+        QTensor("q3_k", (K, N),
+                {k: t.data[k] for k in ("qs", "hmask", "scales", "d")}),
+        dtype=jnp.float32)
+    idx = t.data["oidx"].astype(jnp.int32).reshape(nsb, no, N)
+    vals = t.data["ovals"].astype(jnp.float32).reshape(nsb, no, N)
+    w = base.reshape(nsb, 256, N)
+    rows = jax.lax.broadcasted_iota(jnp.int32, (nsb, 256, N), 1)
+    # scatter-by-comparison: VPU-friendly inside the Pallas kernel (no
+    # gathers); top_k indices are distinct so `where` never double-writes
+    for j in range(no):
+        sel = rows == idx[:, j][:, None, :]
+        w = jnp.where(sel, vals[:, j][:, None, :], w)
+    return w.reshape(K, N).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
 # Q4_K / Q5_K (affine, 32-blocks, 6-bit scales+mins)
 # ---------------------------------------------------------------------------
 
@@ -336,12 +396,14 @@ def dequantize_q8_k(qx: Dict[str, jnp.ndarray], dtype=jnp.float32) -> jnp.ndarra
 # ---------------------------------------------------------------------------
 
 _QUANTIZE = {
-    "q2_k": quantize_q2_k, "q3_k": quantize_q3_k, "q4_0": quantize_q4_0,
+    "q2_k": quantize_q2_k, "q3_k": quantize_q3_k,
+    "q3_k_o": quantize_q3_k_o, "q4_0": quantize_q4_0,
     "q4_k": quantize_q4_k, "q5_k": quantize_q5_k, "q6_k": quantize_q6_k,
     "q8_0": quantize_q8_0,
 }
 _DEQUANTIZE = {
     "q2_k": dequantize_q2_k, "q3_k": dequantize_q3_k,
+    "q3_k_o": dequantize_q3_k_o,
     "q4_0": dequantize_q4_0, "q4_k": dequantize_q4_k,
     "q5_k": dequantize_q5_k, "q6_k": dequantize_q6_k,
     "q8_0": dequantize_q8_0,

@@ -5,6 +5,10 @@ os.environ.setdefault(
 # §Perf hillclimb driver: run named variants of the three chosen cells and
 # record before/after roofline terms (EXPERIMENTS.md §Perf).
 #
+# This drives PERF search over dryrun roofline cells. Quantization-POLICY
+# search (per-layer format assignment against the measured quality-vs-
+# bytes Pareto) lives in ``launch/policy_search.py``.
+#
 #   REPRO_DRYRUN_DEVICES=256 PYTHONPATH=src python -m repro.launch.hillclimb \
 #       --cell h1 --out results/hillclimb
 

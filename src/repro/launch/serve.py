@@ -63,7 +63,17 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
     ap.add_argument("--reduced", action="store_true")
-    ap.add_argument("--policy", default="default_serve_mix")
+    ap.add_argument("--policy", default="default_serve_mix",
+                    help="named policy from core.policy.POLICIES, or "
+                         "'auto' to load/search a calibrated per-layer "
+                         "assignment (see --policy-json)")
+    ap.add_argument("--policy-json", default=None,
+                    help="searched-policy JSON for --policy auto; if the "
+                         "file exists it is loaded, otherwise the search "
+                         "runs and writes it (default: "
+                         "results/auto_<arch>.json)")
+    ap.add_argument("--search-rounds", type=int, default=2,
+                    help="refinement rounds for the --policy auto search")
     ap.add_argument("--no-quant", action="store_true")
     ap.add_argument("--requests", type=int, default=4,
                     help="queue depth (may exceed --slots)")
@@ -192,7 +202,37 @@ def main() -> None:
         print("serving UNQUANTIZED (baseline)")
     else:
         t0 = time.time()
-        qp, report = quantize_params(params, get_policy(args.policy))
+        calib = None
+        if args.policy == "auto":
+            from repro.core import calibrate as CAL
+            from repro.core.policy import load_policy
+            from repro.launch.policy_search import (search_policy,
+                                                    save_searched_policy)
+            path = args.policy_json or f"results/auto_{args.arch}.json"
+            if os.path.exists(path):
+                policy = load_policy(path)
+                print(f"loaded searched policy from {path}")
+                if any(v == "q3_k_o" for _, v in policy.rules):
+                    # q3_k_o weighs outliers by activation absmax; redo
+                    # the (cheap, deterministic) calibration pass
+                    stats = CAL.run_calibration(params, cfg)
+                    calib = stats.for_paths(
+                        [p for p, _ in policy.rules])
+            else:
+                policy, info = search_policy(
+                    cfg, params, arch=args.arch,
+                    rounds=args.search_rounds)
+                save_searched_policy(path, policy, info)
+                print(f"searched policy written to {path}")
+                # pack with the same activation stats the search's
+                # verified evals used -- q3_k_o outlier selection must
+                # match the assignment the search validated, not fall
+                # back to weight-magnitude-only selection
+                calib = info["stats"].for_paths(
+                    [p for p, _ in policy.rules])
+        else:
+            policy = get_policy(args.policy)
+        qp, report = quantize_params(params, policy, calib=calib)
         counts = {}
         for v in report.values():
             if v:

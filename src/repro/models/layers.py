@@ -22,6 +22,7 @@ from typing import Dict, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.core import calibrate as CAL
 from repro.core.quantize import QTensor, dequantize
 from repro.distributed.sharding import constrain, serve_tp_plan
 from repro.kernels import ops as kops
@@ -472,6 +473,7 @@ def swiglu_mlp(x, p: Dict, *, impl="auto", interpret=False):
         h = kops.tp_gather_lanes(h)
         return tp_lane_dense(h, p["w_down"], "full", impl=impl,
                              interpret=interpret)
+    CAL.tap(("mlp/w_gate", "mlp/w_up"), x)
     g = dense(x, p["w_gate"], impl=impl, interpret=interpret)
     u = dense(x, p["w_up"], impl=impl, interpret=interpret)
     # Megatron-style TP: ffn hidden sharded over model on the ff dim;
@@ -479,6 +481,7 @@ def swiglu_mlp(x, p: Dict, *, impl="auto", interpret=False):
     # the TP all-reduce happens HERE, in bf16, not inside the next norm's
     # f32 upcast (GSPMD would otherwise sink it there at 2x width)
     h = constrain(jax.nn.silu(g) * u, "dp", None, "model")
+    CAL.tap("mlp/w_down", h)
     return constrain(dense(h, p["w_down"], impl=impl, interpret=interpret),
                      "dp", None, None)
 
@@ -506,10 +509,12 @@ def gelu_mlp(x, p: Dict, *, impl="auto", interpret=False):
         if "b_proj" in p:
             o = o + p["b_proj"].astype(o.dtype)
         return o
+    CAL.tap("mlp/c_fc", x)
     h = dense(x, p["c_fc"], impl=impl, interpret=interpret)
     if "b_fc" in p:
         h = h + p["b_fc"].astype(h.dtype)
     h = constrain(jax.nn.gelu(h, approximate=True), "dp", None, "model")
+    CAL.tap("mlp/c_proj", h)
     o = constrain(dense(h, p["c_proj"], impl=impl, interpret=interpret),
                   "dp", None, None)
     if "b_proj" in p:

@@ -15,6 +15,7 @@ from typing import Dict, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.core import calibrate as CAL
 from repro.distributed.sharding import constrain
 from repro.models.layers import dense, rmsnorm
 
@@ -132,6 +133,7 @@ def mamba2_forward(h: jnp.ndarray, p: Dict, cfg, *,
     Bsz, S, _ = h.shape
     H, P, N = dd["n_heads"], dd["head_dim"], dd["state"]
 
+    CAL.tap("ssm/in_proj", h)
     zxbcdt = dense(h, p["in_proj"], impl=impl, interpret=interpret)
     z, xBC, dt = _split_proj(zxbcdt, cfg)
     xBC, conv_state_new = _causal_conv(
@@ -153,6 +155,7 @@ def mamba2_forward(h: jnp.ndarray, p: Dict, cfg, *,
         * x.astype(jnp.float32)
     y = y.reshape(Bsz, S, dd["d_inner"]).astype(h.dtype)
     y = rmsnorm(y * jax.nn.silu(z), p["norm_w"], cfg.norm_eps)
+    CAL.tap("ssm/out_proj", y)
     out = dense(y, p["out_proj"], impl=impl, interpret=interpret)
     return out, (conv_state_new, ssm_state_new)
 

@@ -17,6 +17,7 @@ from typing import Dict, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.core import calibrate as CAL
 from repro.core.quantize import QTensor, dequantize
 from repro.distributed.sharding import constrain, serve_tp_plan
 
@@ -100,11 +101,13 @@ def moe_block(x: jnp.ndarray, p: Dict, cfg, *, impl="auto",
     else:
         bufs_c = bufs
 
+    CAL.tap(("moe/w_gate", "moe/w_up"), bufs_c)
     hg = jnp.einsum("becd,edf->becf", bufs_c.astype(jnp.bfloat16),
                     wg.astype(jnp.bfloat16))
     hu = jnp.einsum("becd,edf->becf", bufs_c.astype(jnp.bfloat16),
                     wu.astype(jnp.bfloat16))
     hidden = jax.nn.silu(hg) * hu
+    CAL.tap("moe/w_down", hidden)
     out_buf = jnp.einsum("becf,efd->becd", hidden,
                          wd.astype(jnp.bfloat16))           # (B,E,C,d)
     if ep:

@@ -22,6 +22,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
+from repro.core import calibrate as CAL
 from repro.core.quantize import QTensor, dequantize
 from repro.distributed import sharding as SH
 from repro.kernels import ops as kops
@@ -174,6 +175,7 @@ def _logits(params, cfg: ModelConfig, h, impl="auto", interpret=False):
         wte = _maybe_dequant(params["wte"])
         return jnp.einsum("...d,vd->...v", h.astype(jnp.float32),
                           wte.astype(jnp.float32))
+    CAL.tap("lm_head", h)
     out = L.dense(h, params["lm_head"], impl=impl, interpret=interpret)
     return out.astype(jnp.float32)
 
@@ -197,6 +199,7 @@ def _qkv(a_in, lp, cfg: ModelConfig, impl, interpret):
     H, KH = H // s, KH // s
     attn = lp["attn"]
     if cfg.fused_qkv:
+        CAL.tap("attn/c_attn", a_in)
         qkv = L.dense(a_in, attn["c_attn"], impl=impl, interpret=interpret)
         qkv = qkv + attn["b_attn"].astype(qkv.dtype)
         q, k, v = jnp.split(qkv, 3, axis=-1)
@@ -208,6 +211,7 @@ def _qkv(a_in, lp, cfg: ModelConfig, impl, interpret):
         v = L.tp_lane_dense(a_in, attn["wv"], "local", impl=impl,
                             interpret=interpret)
     else:
+        CAL.tap(("attn/wq", "attn/wk", "attn/wv"), a_in)
         q = L.dense(a_in, attn["wq"], impl=impl, interpret=interpret)
         k = L.dense(a_in, attn["wk"], impl=impl, interpret=interpret)
         v = L.dense(a_in, attn["wv"], impl=impl, interpret=interpret)
@@ -225,6 +229,7 @@ def _attn_out(o, lp, cfg, impl, interpret):
     o = SH.constrain(o, "dp", None, "model", None)
     o = o.reshape(B, S, o.shape[2] * o.shape[3])    # local heads * Dh
     attn = lp["attn"]
+    CAL.tap("attn/c_proj" if cfg.fused_qkv else "attn/wo", o)
     if _tp_attn_shards(cfg) > 1:
         plan = SH.serve_tp_plan()
         if plan is not None and plan.attn_row:

@@ -220,12 +220,82 @@ def test_recurrent_absent_rows_skip():
     assert gate.check_recurrent_prefill(dict(runs=[_row(), _mono()])) == 0
 
 
+# ---------------------------------------------------------------------------
+# check_policy_auto: auto policy must dominate-or-match default_serve_mix
+# on quality AND size, and beat the pure anchors when present
+# ---------------------------------------------------------------------------
+
+def _pol(policy, arch="tinyllama-1.1b", kl=0.2, by=1000, **kw):
+    r = dict(params=f"policy_{policy}_{arch}", queue_depth=4,
+             policy=policy, policy_arch=arch, kl=kl, model_bytes=by)
+    r.update(kw)
+    return r
+
+
+def test_policy_auto_dominates_passes():
+    rows = [_pol("auto", kl=0.2, by=1000),
+            _pol("default_serve_mix", kl=0.3, by=1000)]
+    assert gate.check_policy_auto(dict(runs=rows)) == 0
+
+
+def test_policy_auto_worse_quality_fails(capsys):
+    rows = [_pol("auto", kl=0.4, by=900),
+            _pol("default_serve_mix", kl=0.3, by=1000)]
+    assert gate.check_policy_auto(dict(runs=rows)) == 1
+    assert "kl" in capsys.readouterr().out
+
+
+def test_policy_auto_larger_fails():
+    rows = [_pol("auto", kl=0.2, by=1100),
+            _pol("default_serve_mix", kl=0.3, by=1000)]
+    assert gate.check_policy_auto(dict(runs=rows)) == 1
+
+
+def test_policy_auto_missing_fields_fail_not_crash(capsys):
+    rows = [_pol("auto", kl=None, by=None),
+            _pol("default_serve_mix", kl=0.3, by=1000)]
+    assert gate.check_policy_auto(dict(runs=rows)) == 2
+    assert "missing" in capsys.readouterr().out
+
+
+def test_policy_auto_no_default_row_fails():
+    assert gate.check_policy_auto(dict(runs=[_pol("auto")])) == 1
+
+
+def test_policy_auto_anchors_gated():
+    rows = [_pol("auto", kl=0.2, by=1000),
+            _pol("default_serve_mix", kl=0.3, by=1000),
+            _pol("pure_q2_k", kl=0.45, by=900),
+            _pol("pure_q6_k", kl=0.01, by=1600)]
+    assert gate.check_policy_auto(dict(runs=rows)) == 0
+    rows[2]["kl"] = 0.1                      # auto no longer beats q2_k
+    assert gate.check_policy_auto(dict(runs=rows)) == 1
+    rows[2]["kl"] = 0.45
+    rows[3]["model_bytes"] = 900             # nor smaller than q6_k
+    assert gate.check_policy_auto(dict(runs=rows)) == 1
+
+
+def test_policy_auto_per_arch_pairing():
+    """Rows pair within an arch; an arch with only anchors is ignored."""
+    rows = [_pol("auto", arch="a", kl=0.2, by=1000),
+            _pol("default_serve_mix", arch="a", kl=0.3, by=1000),
+            _pol("pure_q2_k", arch="b", kl=0.5, by=900)]
+    assert gate.check_policy_auto(dict(runs=rows)) == 0
+
+
+def test_policy_auto_absent_rows_skip():
+    assert gate.check_policy_auto(dict(runs=[_row(), _mono()])) == 0
+
+
 def test_compare_runs_structural_gates():
     """compare() folds every same-run structural gate into its exit
     code even when every cross-run pair is within tolerance."""
     rows = [_row(), _mono(), _dis(migrated=0)]
     assert _compare(rows, [_row()]) == 1
     rows = [_row(), _rec(pre=40.0, exact=50.0)]
+    assert _compare(rows, [_row()]) == 1
+    rows = [_row(), _pol("auto", kl=0.4, by=900),
+            _pol("default_serve_mix", kl=0.3, by=1000)]
     assert _compare(rows, [_row()]) == 1
 
 

@@ -128,6 +128,48 @@ def test_golden_q6_k_superblock_beyond_paper():
     np.testing.assert_array_equal(np.asarray(Q.dequantize(t)), w)
 
 
+def test_golden_q3_k_o_superblock_with_outlier_sidecar():
+    # q3_k golden pattern (block b: scale code 2b+1, q in [-4,3]) plus 8
+    # injected outlier rows per super-block with distinct huge magnitudes
+    # at in-block offset 5 -- never the -4 row that pins the block scale,
+    # so zeroing them for the base fit leaves every base value on its
+    # exact grid. Descending magnitudes make the top_k order (and hence
+    # the sidecar payload bytes) fully deterministic.
+    d = 0.25
+    sc_q = 2 * np.arange(16) + 1
+    qpat = np.tile(np.arange(-4, 4), 2)
+    base1 = ((d * sc_q)[:, None] * qpat[None, :]).reshape(256)
+    orows = 16 * np.arange(8) + 5
+    ovals1 = 100.0 * (8 - np.arange(8))         # 800..100, all fp16-exact
+    wfull1 = base1.copy()
+    wfull1[orows] = ovals1
+    base1[orows] = 0.0
+    w = _col_dup(wfull1)
+    t = Q.quantize("q3_k_o", jnp.asarray(w, jnp.float32))
+    assert t.variant == "q3_k_o" and t.shape == (256, 2)
+    # sidecar: top-8 |w| rows per (SB, column), descending-score order
+    np.testing.assert_array_equal(
+        np.asarray(t.data["oidx"]),
+        np.repeat(orows.astype(np.uint8)[:, None], 2, axis=1))
+    np.testing.assert_array_equal(np.asarray(t.data["ovals"], np.float32),
+                                  _col_dup(ovals1))
+    # base payloads: the q3_k fit of the outlier-zeroed weights, every
+    # byte predicted by hand (outlier rows store code 0+4 = 4)
+    np.testing.assert_array_equal(
+        np.asarray(t.data["scales"]),
+        np.repeat((sc_q + 32).astype(np.uint8)[:, None], 2, axis=1))
+    np.testing.assert_array_equal(np.asarray(t.data["d"], np.float32),
+                                  [[d, 2 * d]])
+    stored1 = (np.tile(qpat, 16) + 4).astype(np.uint8)
+    stored1[orows] = 4
+    stored = np.repeat(stored1[:, None], 2, axis=1)
+    np.testing.assert_array_equal(np.asarray(t.data["qs"]),
+                                  _slab_pack_ref(stored & 3, 2, 256))
+    np.testing.assert_array_equal(np.asarray(t.data["hmask"]),
+                                  _slab_pack_ref(stored >> 2, 1, 256))
+    np.testing.assert_array_equal(np.asarray(Q.dequantize(t)), w)  # exact
+
+
 def test_golden_q4_0_blocks():
     # block b: d pinned by the signed abs-max element mapping to code 0
     # (llama.cpp convention d = mval / -8): block 0 has a negative

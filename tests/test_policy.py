@@ -114,3 +114,121 @@ def test_policy_none_and_small():
     pol = POL.make_policy("t", [("*norm*", "none")])
     assert pol.variant_for("layers/norm/w", 512, 512) is None
     assert pol.variant_for("x", 512, 8) is None     # N too small
+
+
+# --------------------------------------------------------------------------
+# variant_for guard regressions
+# --------------------------------------------------------------------------
+
+def test_small_k_multiple_of_32_stays_fp():
+    """Regression: the guard used to read ``K < MIN_QUANT_K and
+    K % 32 != 0``, which let K=64 (a multiple of 32 below the floor)
+    quantize, contradicting the module docs ('tensors smaller than this
+    along K stay unquantized')."""
+    pol = POL.pure("q3_k")
+    for K in (32, 64, 128, 224):
+        assert pol.variant_for("layers/attn/wq", K, 512) is None, K
+    assert pol.variant_for("layers/attn/wq", 256, 512) == "q3_k"
+
+
+def test_ragged_k_returns_none_not_raise():
+    """Regression: K >= 256 with K % 32 != 0 used to reach
+    ``pick_fallback`` and raise ValueError, aborting quantize_params for
+    the whole model over one odd-shaped tensor."""
+    pol = POL.pure("q3_k")
+    for K in (257, 300, 1000):
+        assert pol.variant_for("layers/attn/wq", K, 512) is None, K
+
+
+def test_quantize_params_survives_ragged_k_tree():
+    import jax
+    import jax.numpy as jnp
+    from repro.core.qlinear import quantize_params
+    from repro.core.quantize import QTensor
+    key = jax.random.PRNGKey(0)
+    params = {"layers": {"attn": {
+        "wq": jax.random.normal(key, (512, 64)),
+        "wx": jax.random.normal(key, (300, 64)),    # ragged K
+        "wy": jax.random.normal(key, (64, 64)),     # K below floor
+    }}}
+    qp, report = quantize_params(params, POL.pure("q3_k"))
+    assert report["layers/attn/wq"] == "q3_k"
+    assert report["layers/attn/wx"] is None
+    assert report["layers/attn/wy"] is None
+    assert isinstance(qp["layers"]["attn"]["wq"], QTensor)
+    assert isinstance(qp["layers"]["attn"]["wx"], jnp.ndarray)
+
+
+def test_variant_for_grid_always_packs():
+    """Property sweep over the K grid: whenever variant_for returns a
+    variant, qtensor_spec must succeed for it as-is (the fallback was
+    already applied -- no second fallback, no raise); whenever it returns
+    None, one of the documented reasons must hold."""
+    from repro.core import quantize as Q
+    pols = [POL.get_policy("default_serve_mix"), POL.pure("q2_k"),
+            POL.pure("q6_k"), POL.pure("q8_0")]
+    Ks = [1, 8, 31, 32, 64, 96, 224, 255, 256, 257, 288, 300, 320,
+          512, 768, 992, 1000, 1024]
+    Ns = [1, 8, 31, 32, 64, 257]
+    for pol in pols:
+        for K in Ks:
+            for N in Ns:
+                v = pol.variant_for("layers/attn/wq", K, N)
+                if v is None:
+                    assert K < POL.MIN_QUANT_K or K % 32 != 0 \
+                        or N < POL.MIN_QUANT_N, (pol.name, K, N)
+                    continue
+                spec = Q.qtensor_spec(v, K, N)
+                assert spec.variant == v, (pol.name, K, N, v)
+
+
+def test_preset_rules_not_shadowed():
+    """Every rule in every preset is reachable: a representative path
+    built from the pattern must hit that rule first."""
+    for pol in POL.POLICIES.values():
+        for i, (pat, _) in enumerate(pol.rules):
+            path = pat.replace("*", "x")
+            hits = [j for j, (p, _) in enumerate(pol.rules)
+                    if POL.fnmatch.fnmatch(path, p)]
+            assert hits and hits[0] == i, (pol.name, pat, hits)
+
+
+def test_summarize_matches_brute_force():
+    from repro.core import formats as F
+    cfg = get_arch("tinyllama-1.1b")
+    mms = _llama_matmuls(cfg)
+    pol = POL.get_policy("paper_llama_mix")
+    summ = POL.summarize(pol, mms)
+    counts, size = {}, 0.0
+    for path, K, N in mms:
+        v = pol.variant_for(path, K, N)
+        counts[v or "f16"] = counts.get(v or "f16", 0) + 1
+        size += K * N * (2 if v is None
+                         else F.get_format(v).bits_per_weight / 8.0)
+    assert summ["counts"] == counts
+    assert summ["size_bytes"] == int(size)
+
+
+# --------------------------------------------------------------------------
+# searched-policy serialization (--policy auto)
+# --------------------------------------------------------------------------
+
+def test_policy_serialization_roundtrip(tmp_path):
+    pol = POL.make_policy("auto_test", [("layers/attn/wq", "q4_k"),
+                                        ("lm_head", "q3_k_o")],
+                          default="none")
+    path = tmp_path / "pol.json"
+    POL.save_policy(pol, path)
+    back = POL.load_policy(path)
+    assert back == pol
+    # exact paths act as exact-match rules; default "none" keeps the rest fp
+    assert back.variant_for("layers/attn/wq", 512, 512) == "q4_k"
+    assert back.variant_for("lm_head", 512, 512) == "q3_k_o"
+    assert back.variant_for("layers/attn/wk", 512, 512) is None
+
+
+def test_policy_from_dict_rejects_unknown_variant():
+    with pytest.raises(ValueError):
+        POL.policy_from_dict({"rules": [["x", "q9_z"]]})
+    with pytest.raises(ValueError):
+        POL.policy_from_dict({"rules": [], "default": "q9_z"})

